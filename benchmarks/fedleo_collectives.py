@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# FedLEO on the pod fabric: collective-traffic comparison (DESIGN.md §3).
+#
+# Lowers, on the SAME (orbit, data, model) mesh:
+#   (a) the fully synchronous train_step — params replicated across the
+#       orbit axis, so every step all-reduces gradients over ALL axes;
+#   (b) the FedLEO local step — per-orbit parameter replicas (vmap over a
+#       leading R axis sharded on "orbit"), gradient sync confined to
+#       in-orbit axes;
+#   (c) the FedLEO aggregation — the single scheduled weighted all-reduce
+#       over "orbit" that runs once per tau local steps (eqs. 9 -> 4).
+#
+# Reports per-step collective bytes for each and the amortized FedLEO
+# total at a given tau: the paper's claim, restated for TPU pods, is
+#   bytes(b) + bytes(c)/tau  <<  bytes(a).
+#
+# Usage: python -m benchmarks.fedleo_collectives --arch kimi-k2-1t-a32b
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, build_model, get_config
+from repro.launch import sharding as shardlib
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import make_fedleo_mesh
+from repro.launch.specs import sds
+from repro.optim import get_optimizer
+from repro.train.fedleo_step import make_fedleo_aggregate, \
+    make_fedleo_local_step
+from repro.train.steps import TrainState, make_train_step
+
+
+def _state_specs(model, cfg, mesh, replica_axis=None):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if replica_axis:
+        r = mesh.shape[replica_axis]
+        shapes = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((r,) + s.shape, s.dtype), shapes
+        )
+    shardings = shardlib.tree_shardings(
+        shapes, mesh, fsdp_axes=("data",),
+        leading_replica_axis=replica_axis,
+    )
+    p_sds = shardlib.with_shardings(shapes, shardings)
+    opt = get_optimizer(cfg.optimizer, cfg.learning_rate)
+    if replica_axis:
+        opt_shapes = jax.eval_shape(jax.vmap(opt.init), p_sds)
+    else:
+        opt_shapes = jax.eval_shape(opt.init, p_sds)
+    opt_shardings = shardlib.tree_shardings(
+        opt_shapes, mesh, fsdp_axes=("data",),
+        leading_replica_axis=replica_axis,
+    )
+    opt_sds = shardlib.with_shardings(opt_shapes, opt_shardings)
+    step_shape = (mesh.shape[replica_axis],) if replica_axis else ()
+    return TrainState(
+        params=p_sds, opt_state=opt_sds,
+        step=sds(step_shape, jnp.int32, mesh,
+                 P(replica_axis) if replica_axis else P()),
+    ), opt
+
+
+def run(arch: str, seq: int = 4096, global_batch: int = 256,
+        tau: int = 8, num_orbits: int = 4):
+    cfg = get_config(arch)
+    model = build_model(cfg, attn_impl="chunked")
+    mesh = make_fedleo_mesh(num_orbits=num_orbits)
+    out = {"arch": arch, "tau": tau, "orbits": num_orbits,
+           "mesh": "x".join(str(s) for s in mesh.devices.shape)}
+
+    # (a) sync: one global batch, params replicated over orbit
+    state_sds, opt = _state_specs(model, cfg, mesh, replica_axis=None)
+    batch_sds = {
+        "tokens": sds((global_batch, seq), jnp.int32, mesh,
+                      P(("orbit", "data"), None)),
+    }
+    step = make_train_step(model, opt)
+    sync = jax.jit(step).lower(state_sds, batch_sds).compile()
+    out["sync_collective_bytes"] = collective_bytes(sync.as_text())
+
+    # (b) FedLEO local step: per-orbit replicas
+    state_r_sds, opt = _state_specs(model, cfg, mesh,
+                                    replica_axis="orbit")
+    rb = global_batch // num_orbits
+    rbatch_sds = {
+        "tokens": sds((num_orbits, 1, rb, seq), jnp.int32, mesh,
+                      P("orbit", None, "data", None)),
+    }
+    local = make_fedleo_local_step(model, opt)
+    loc = jax.jit(local).lower(state_r_sds, rbatch_sds).compile()
+    out["local_collective_bytes"] = collective_bytes(loc.as_text())
+
+    # (c) the scheduled aggregation (once per tau steps)
+    agg = make_fedleo_aggregate()
+    w_sds = sds((num_orbits,), jnp.float32, mesh, P())
+    agg_c = jax.jit(agg).lower(state_r_sds, w_sds).compile()
+    out["aggregate_collective_bytes"] = collective_bytes(agg_c.as_text())
+
+    s_sync = sum(out["sync_collective_bytes"].values())
+    s_loc = sum(out["local_collective_bytes"].values())
+    s_agg = sum(out["aggregate_collective_bytes"].values())
+    out["sync_total"] = s_sync
+    out["fedleo_amortized_total"] = s_loc + s_agg / tau
+    out["reduction_x"] = s_sync / out["fedleo_amortized_total"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="kimi-k2-1t-a32b")
+    ap.add_argument("--tau", type=int, default=8)
+    ap.add_argument("--orbits", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=4096)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run(args.arch, seq=args.seq, global_batch=args.batch,
+              tau=args.tau, num_orbits=args.orbits)
+    print(json.dumps(res, indent=2))
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(res) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Pallas kernel micro-benchmarks.
+
+On this CPU container the pallas kernels execute in interpret mode, so
+wall-clock numbers characterize the *oracle/XLA paths* that the models
+actually run here; the kernels' TPU performance is assessed structurally
+via the dry-run roofline (benchmarks/roofline.py).  What this bench
+contributes: per-call timing of the aggregation hot-spot at FL-server
+scale and of the XLA chunked-attention vs dense-attention paths.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, *args, iters=5) -> float:
+    jax.block_until_ready(fn(*args))   # warm-up / compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> List[Dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # aggregation at FL-server scale: 5 orbit partials x 4M params
+    from repro.kernels.aggregate_ref import aggregate_flat_ref
+
+    k, n = 5, 4_000_000
+    x = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    w = jnp.asarray([0.3, 0.25, 0.2, 0.15, 0.1], jnp.float32)
+    agg = jax.jit(aggregate_flat_ref)
+    us = _bench(agg, x, w)
+    gbps = (k * n * 4) / (us / 1e6) / 1e9
+    rows.append({"name": "aggregate_4M_x5", "us_per_call": us,
+                 "derived": f"stream={gbps:.1f}GB/s"})
+
+    # chunked (flash-style XLA) vs dense attention, 2k sequence
+    from repro.models.layers import (
+        _attn_mask, attention_scores, chunked_attention,
+    )
+
+    b, s, h, g, d = 1, 2048, 8, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)) * 0.5, jnp.bfloat16)
+    kk = jnp.asarray(rng.standard_normal((b, s, g, d)) * 0.5, jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((b, s, g, d)) * 0.5, jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    dense = jax.jit(lambda q, k, v: attention_scores(
+        q, k, v, _attn_mask(pos, pos, True, None), h // g))
+    us_dense = _bench(dense, q, kk, v)
+    chunked = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, h // g, causal=True, q_chunk=256, k_chunk=256))
+    us_chunked = _bench(chunked, q, kk, v)
+    rows.append({"name": "attn_dense_2k", "us_per_call": us_dense,
+                 "derived": f"s={s}"})
+    rows.append({"name": "attn_chunked_2k", "us_per_call": us_chunked,
+                 "derived": f"ratio={us_chunked / us_dense:.2f}x"})
+
+    # SSD chunked scan vs naive recurrence, 1k sequence
+    from repro.kernels.ssd_ref import ssd_naive
+    from repro.models.mamba2 import ssd_chunked
+
+    b, s, hh, p, gg, nn = 1, 1024, 8, 64, 1, 64
+    xs = jnp.asarray(rng.standard_normal((b, s, hh, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, hh)) * 0.5 + 0.1, jnp.float32)
+    A = -jnp.asarray(rng.random(hh) * 0.5 + 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((b, s, gg, nn)) * 0.5, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((b, s, gg, nn)) * 0.5, jnp.float32)
+    naive = jax.jit(lambda *a: ssd_naive(*a))
+    us_naive = _bench(naive, xs, dt, A, Bm, Cm)
+    chk = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    us_chunk = _bench(chk, xs, dt, A, Bm, Cm)
+    rows.append({"name": "ssd_naive_1k", "us_per_call": us_naive,
+                 "derived": f"s={s}"})
+    rows.append({"name": "ssd_chunked_1k", "us_per_call": us_chunk,
+                 "derived": f"speedup={us_naive / us_chunk:.1f}x"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

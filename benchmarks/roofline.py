@@ -1,0 +1,119 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Per (arch x shape x mesh) derives the three roofline terms:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+(cost_analysis reports the per-device partitioned module, so no further
+division by chip count is applied; collective bytes are parsed from the
+compiled HLO, which is likewise per-device.)
+
+Also reports MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline dryrun_single_pod.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Optional
+
+from repro.configs import INPUT_SHAPES, get_config
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s/link (ICI)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D with N = active params; D = tokens processed per step."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count_estimate()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens          # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if not rec.get("ok"):
+        return None
+    chips = 1
+    for d in rec["mesh"].split("x"):
+        chips *= int(d)
+    flops = rec["flops"] or 0.0
+    byts = rec["bytes_accessed"] or 0.0
+    coll = sum((rec.get("collective_bytes") or {}).values())
+    if not rec.get("corrected"):
+        # raw dry-run numbers under-count scanned layer bodies (XLA
+        # counts a while body once) — prefer dryrun_corrected.jsonl
+        pass
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / (flops * chips) if flops else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_per_chip": flops,
+        "useful_ratio": useful,
+        "corrected": bool(rec.get("corrected")),
+        "collective_breakdown": rec.get("collective_bytes", {}),
+    }
+
+
+def load(path: str) -> List[Dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    # de-dup: keep the LAST record per (arch, shape, mesh)
+    seen = {}
+    for r in out:
+        seen[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return list(seen.values())
+
+
+def table(path: str) -> List[Dict]:
+    rows = []
+    for rec in load(path):
+        a = analyze(rec)
+        if a:
+            rows.append(a)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_single_pod.jsonl"
+    rows = table(path)
+    hdr = ("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+           "dominant,useful_ratio")
+    print(hdr)
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute_s']:.4e},{r['t_memory_s']:.4e},"
+              f"{r['t_collective_s']:.4e},{r['dominant']},"
+              f"{r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

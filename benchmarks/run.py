@@ -1,0 +1,91 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus detail blocks as
+``#`` comments).  Set BENCH_FAST=1 for a reduced pass.
+
+  fig3   — visiting-pattern irregularity (paper Fig. 3)
+  table2 — FedLEO vs SOTA accuracy + convergence time (paper Table II)
+  fig5   — accuracy vs convergence time on all datasets (paper Fig. 5)
+  eq12   — round-latency decomposition, star (eq. 10) vs FedLEO (eq. 12)
+  kernels— Pallas kernel micro-benchmarks (interpret-mode; TPU
+           wall-clock is out of scope on CPU — see benchmarks/roofline.py)
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6
+
+
+def main() -> None:
+    rows = []
+
+    from benchmarks import fig3_visiting_pattern
+    out, us = _timed(fig3_visiting_pattern.run)
+    rows.append(("fig3_visiting_pattern", us,
+                 f"gap_cv={out['gap_cv']:.2f}|"
+                 f"visits={out['visits_min']}-{out['visits_max']}"))
+    print(f"# fig3: {out['num_windows']} windows, "
+          f"duration {out['duration_mean_min']:.1f}"
+          f"+-{out['duration_std_min']:.1f} min, gap CV {out['gap_cv']:.2f}")
+
+    from benchmarks import roundtime_decomposition
+    out, us = _timed(roundtime_decomposition.run)
+    rows.append(("eq12_roundtime", us, f"speedup={out['speedup']:.2f}x"))
+    print(f"# eq10 vs eq12: star {out['star_round_h_mean']:.2f} h/round, "
+          f"fedleo {out['fedleo_round_h_mean']:.2f} h/round "
+          f"-> {out['speedup']:.2f}x")
+
+    from benchmarks import table2_sota
+    out, us = _timed(table2_sota.run)
+    print("# table2 (non-IID): method, accuracy, conv_time_h")
+    best = max(r["accuracy"] for r in out)
+    for r in out:
+        print(f"#   {r['method']:14s} acc={r['accuracy']:.4f} "
+              f"t={r['conv_time_h']:6.2f} h")
+    leo = next(r for r in out if r["method"] == "FedLEO")
+    rows.append(("table2_sota", us,
+                 f"fedleo_acc={leo['accuracy']:.3f}|"
+                 f"fedleo_h={leo['conv_time_h']:.1f}|best_acc={best:.3f}"))
+
+    from benchmarks import fig5_accuracy_vs_time
+    out, us = _timed(fig5_accuracy_vs_time.run)
+    finals = {}
+    for r in out:
+        finals[r["dataset"]] = r
+    print("# fig5 finals: " + ", ".join(
+        f"{k}: acc={v['accuracy']:.3f}@{v['t_hours']:.1f}h"
+        for k, v in finals.items()
+    ))
+    rows.append(("fig5_accuracy_vs_time", us,
+                 "|".join(f"{k}={v['accuracy']:.3f}"
+                          for k, v in finals.items())))
+
+    from benchmarks import ablation_sink
+    out, us = _timed(ablation_sink.run)
+    print("# sink-scheduling ablation (payload, policy, sim_h, wait_h):")
+    for r in out:
+        print(f"#   {r['payload']:12s} {r['policy']:14s} "
+              f"t={r['sim_hours']:6.2f}h wait={r['mean_sink_wait_h']:.2f}h")
+    sched = [r for r in out if r["policy"] == "scheduled"][-1]
+    naive = [r for r in out if r["policy"] == "first_visitor"][-1]
+    rows.append(("ablation_sink", us,
+                 f"sched_h={sched['sim_hours']:.1f}|"
+                 f"naive_h={naive['sim_hours']:.1f}"))
+
+    from benchmarks import kernel_bench
+    out, us = _timed(kernel_bench.run)
+    for r in out:
+        rows.append((f"kernel_{r['name']}", r["us_per_call"], r["derived"]))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

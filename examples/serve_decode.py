@@ -1,0 +1,70 @@
+"""Serving example: batched autoregressive decoding with a KV cache.
+
+Loads a reduced gemma-family model, prefils a prompt batch, then decodes
+greedily with the single-token serve_step (the path the decode_32k /
+long_500k dry-run shapes lower).  Also demonstrates the sliding-window
+cache (long-context mode).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import build_model, get_smoke_config
+from repro.train.steps import make_serve_step
+
+
+def main():
+    cfg = get_smoke_config("gemma-7b")
+    batch, prompt_len, gen_len = 4, 16, 32
+
+    for window in (None, 8):
+        model = build_model(cfg, sliding_window=window)
+        params = model.init(jax.random.PRNGKey(0))
+        serve = jax.jit(make_serve_step(model))
+
+        rng = np.random.default_rng(0)
+        prompt = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32
+        )
+        max_len = prompt_len + gen_len
+        cache = model.init_cache(batch, max_len)
+        cache_bytes = sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree_util.tree_leaves(cache)
+        )
+
+        # teacher-forced prefill through the decode path
+        tok = prompt[:, :1]
+        for t in range(prompt_len):
+            logits, cache = serve(params, prompt[:, t: t + 1], cache,
+                                  jnp.asarray(t, jnp.int32))
+        # greedy generation
+        t0 = time.time()
+        out = []
+        tok = jnp.argmax(logits, axis=-1, keepdims=True).astype(jnp.int32)
+        for t in range(prompt_len, max_len):
+            out.append(tok)
+            logits, cache = serve(params, tok, cache,
+                                  jnp.asarray(t, jnp.int32))
+            tok = jnp.argmax(logits, axis=-1, keepdims=True).astype(
+                jnp.int32
+            )
+        dt = time.time() - t0
+        gen = jnp.concatenate(out, axis=1)
+        mode = f"sliding-window({window})" if window else "full-cache"
+        print(f"[{mode}] cache={cache_bytes / 1e6:.2f} MB  "
+              f"generated {gen.shape} tokens  "
+              f"{batch * gen_len / dt:.1f} tok/s")
+        print("  sample:", np.asarray(gen[0, :12]).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Sharding-aware npz checkpointing (offline container: no orbax).
+
+Pytrees are flattened with jax.tree_util key paths as archive keys, so
+restore round-trips arbitrary nested dict/list/namedtuple structures
+against a matching template.  Large arrays are gathered to host per
+leaf (fine at the scales exercised on CPU; on a real pod this layer
+would be swapped for per-shard array serialization, which the API shape
+already permits).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.\-]")
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return _SAFE.sub("_", "/".join(parts))
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for i, (path, leaf) in enumerate(leaves):
+        arrays[f"{i:05d}__{_key_str(path)}"] = np.asarray(leaf)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.match(r"ckpt_(\d+)\.npz$", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, template: PyTree) -> PyTree:
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        keys = sorted(data.files, key=lambda k: int(k.split("__")[0]))
+        arrays = [data[k] for k in keys]
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(arrays) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(arrays)} leaves, template {len(leaves)}"
+        )
+    out = [
+        np.asarray(a, dtype=l.dtype) if hasattr(l, "dtype") else a
+        for a, l in zip(arrays, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)

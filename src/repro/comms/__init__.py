@@ -1,0 +1,30 @@
+"""Link-budget and latency models (FedLEO §III-B, §IV-B)."""
+from repro.comms.link import (
+    LinkConfig,
+    free_space_path_loss,
+    snr_linear,
+    snr_db,
+    shannon_rate,
+    transmission_time,
+    propagation_time,
+    model_exchange_time,
+    uplink_time,
+    downlink_time,
+)
+from repro.comms.isl import ISLConfig, isl_hop_time, relay_time
+
+__all__ = [
+    "LinkConfig",
+    "free_space_path_loss",
+    "snr_linear",
+    "snr_db",
+    "shannon_rate",
+    "transmission_time",
+    "propagation_time",
+    "model_exchange_time",
+    "uplink_time",
+    "downlink_time",
+    "ISLConfig",
+    "isl_hop_time",
+    "relay_time",
+]

@@ -1,0 +1,40 @@
+"""Intra-plane inter-satellite-link (ISL) timing (paper eqs. 20-21).
+
+Each ISL hop h between adjacent satellites is allocated one resource
+block of bandwidth B_h, with spectral efficiency beta_h:
+
+  t_h(k, k+1) = z|N| / (B_h beta_h)                                  (20)
+
+and the relay time for a model to reach a sink over h hops is
+h * z|N| / (B_h beta_h); the per-orbit relay cost is the max over the
+relaying satellites (eq. 21).
+
+Note (paper §IV-A): ISLs are physically FSO (Gbps-Tbps), but the paper
+deliberately provisions them at RF-comparable rates so that FedLEO's
+gains come from the architecture/schedule, not the PHY — we keep that
+choice as the default.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ISLConfig:
+    hop_bandwidth_hz: float = 125.0e3   # B_h: one RB of B=1 MHz / N=8
+    spectral_efficiency: float = 4.0    # beta_h [bit/s/Hz]
+    hop_propagation_s: float = 0.0      # chord/c, ~2ms at 1500 km; optional
+
+    @property
+    def hop_rate_bps(self) -> float:
+        return self.hop_bandwidth_hz * self.spectral_efficiency
+
+
+def isl_hop_time(cfg: ISLConfig, payload_bits: float) -> float:
+    """Eq. (20): single-hop model exchange time between adjacent satellites."""
+    return payload_bits / cfg.hop_rate_bps + cfg.hop_propagation_s
+
+
+def relay_time(cfg: ISLConfig, payload_bits: float, num_hops: int) -> float:
+    """Eq. (21) inner term: h-hop store-and-forward relay to the sink."""
+    return num_hops * isl_hop_time(cfg, payload_bits)

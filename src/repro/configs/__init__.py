@@ -1,0 +1,30 @@
+"""Assigned-architecture configs + registry."""
+from repro.configs.base import (
+    ArchConfig,
+    EncoderConfig,
+    InputShape,
+    INPUT_SHAPES,
+    MoEConfig,
+    SSMConfig,
+    VisionStub,
+)
+from repro.configs.registry import (
+    ARCH_IDS,
+    build_model,
+    get_config,
+    get_smoke_config,
+)
+
+__all__ = [
+    "ArchConfig",
+    "EncoderConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "MoEConfig",
+    "SSMConfig",
+    "VisionStub",
+    "ARCH_IDS",
+    "build_model",
+    "get_config",
+    "get_smoke_config",
+]

@@ -1,0 +1,72 @@
+"""Architecture registry: --arch <id> -> config + model factory."""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Optional
+
+from repro.configs.base import ArchConfig
+
+_MODULES = {
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "minitron-8b": "repro.configs.minitron_8b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise ValueError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise ValueError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).smoke_config()
+
+
+def build_model(
+    cfg: ArchConfig,
+    *,
+    attn_impl: str = "xla",
+    ssd_impl: str = "xla",
+    dtype: Any = None,
+    sliding_window: Optional[int] = None,
+):
+    """Instantiate the model class for a config.
+
+    sliding_window: pass cfg.sliding_window to build the sub-quadratic
+    long-context variant (used for the long_500k input shape).
+    """
+    import jax.numpy as jnp
+
+    dtype = dtype or jnp.bfloat16
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.transformer import Transformer
+
+        return Transformer(cfg, attn_impl=attn_impl, dtype=dtype,
+                           sliding_window=sliding_window)
+    if cfg.family == "audio":
+        from repro.models.transformer import EncoderDecoder
+
+        return EncoderDecoder(cfg, attn_impl=attn_impl, dtype=dtype,
+                              sliding_window=sliding_window)
+    if cfg.family == "ssm":
+        from repro.models.mamba2 import Mamba2Model
+
+        return Mamba2Model(cfg, dtype=dtype, ssd_impl=ssd_impl)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import Zamba2Model
+
+        return Zamba2Model(cfg, dtype=dtype, attn_impl=attn_impl,
+                           ssd_impl=ssd_impl, sliding_window=sliding_window)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,28 @@
+"""FedLEO core: model propagation, sink scheduling, aggregation, engines."""
+from repro.core.aggregation import (
+    global_aggregate,
+    noniid_weights,
+    partial_aggregate,
+    weighted_average,
+)
+from repro.core.engine import FLStrategy, RunResult, SimConfig
+from repro.core.fedleo import FedLEO
+from repro.core.fltask import FederatedTask, TrainHyperparams
+from repro.core.propagation import broadcast_schedule, relay_schedule
+from repro.core.scheduling import select_sink
+
+__all__ = [
+    "global_aggregate",
+    "noniid_weights",
+    "partial_aggregate",
+    "weighted_average",
+    "FLStrategy",
+    "RunResult",
+    "SimConfig",
+    "FedLEO",
+    "FederatedTask",
+    "TrainHyperparams",
+    "broadcast_schedule",
+    "relay_schedule",
+    "select_sink",
+]

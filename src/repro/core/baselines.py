@@ -1,0 +1,528 @@
+"""Baseline FL-Satcom strategies the paper benchmarks against (§II, §V).
+
+Implemented on the same engine/simulator as FedLEO so the comparison is
+apples-to-apples (identical constellation, link budget, datasets,
+training):
+
+  * FedAvgStar       — vanilla synchronous FedAvg [6]/[8]: star topology,
+                       every satellite individually downloads/uploads.
+  * FedSatSched      — [10]: star sync + visibility-aware scheduling
+                       (train during invisible gaps, same-window upload).
+  * FedISL           — [3]: ISL ring + naive sink (first visitor, ignores
+                       window duration). ``ideal=True`` puts the GS at the
+                       North Pole (regular visits), the paper's ideal setup.
+  * FedHAP           — [2]: sync star against two always-high-visibility
+                       HAP servers (extra hardware).
+  * FedAsync         — [13]: asynchronous star with staleness-decayed
+                       server mixing.
+  * FedSat           — [9]: async with NP ground station (ideal setup),
+                       periodic buffer aggregation.
+  * FedSpace         — [7]: async buffered aggregation triggered at a
+                       predicted buffer fill fraction, stale down-weights.
+  * AsyncFLEO        — [4]: intra-plane propagation + naive sink (ignores
+                       the sink's visible-period constraint) + async
+                       staleness-weighted orbit-partial mixing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import aggregation
+from repro.core.engine import FLStrategy, SimConfig
+from repro.core.fltask import FederatedTask
+from repro.core.propagation import broadcast_schedule, ring_hops
+from repro.core.scheduling import _distance_at, first_visible_download
+from repro.comms.isl import isl_hop_time
+from repro.comms.link import downlink_time, uplink_time
+from repro.orbits.constellation import GroundStation, Satellite
+from repro.orbits.prediction import VisibilityPredictor
+
+
+# --- shared helpers -------------------------------------------------------------
+class _StarMixin:
+    """Window-search helpers shared by star-topology strategies."""
+
+    def _first_tx(
+        self, sat: Satellite, t: float, payload_bits: float, downlink: bool,
+        predictor: Optional[VisibilityPredictor] = None,
+        gs: Optional[GroundStation] = None,
+        same_window: bool = True,
+    ) -> Optional[float]:
+        """Completion time of the first feasible transfer after t.
+
+        Scans the satellite's windows; a window is feasible if its
+        remaining duration after max(t, start) covers the transfer time
+        computed with the true slant range. ``same_window=False`` forces
+        the transfer to start at a window *after* t (the naive FedAvg
+        behaviour of eq. (10) case 2: wait for the next visit).
+        """
+        predictor = predictor or self.predictor
+        gs = gs or self.gs
+        for w in predictor.windows_of(sat):
+            if w.t_end <= t:
+                continue
+            if not same_window and w.contains(t) and w.t_start < t:
+                continue  # skip the in-progress window
+            t0 = max(w.t_start, t)
+            d = _distance_at(self.walker, gs, sat, t0)
+            tc = (
+                downlink_time(self.sim.link, payload_bits, d)
+                if downlink
+                else uplink_time(self.sim.link, payload_bits, d)
+            )
+            if w.t_end - t0 >= tc:
+                return t0 + tc
+        return None
+
+
+# --- synchronous star baselines ----------------------------------------------------
+class FedAvgStar(FLStrategy, _StarMixin):
+    """Vanilla sync FedAvg over the star topology (eq. 10 timing)."""
+
+    name = "FedAvg"
+    same_window_upload = False  # naive: upload waits for the *next* visit
+
+    def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        task, sim = self.task, self.sim
+        done_times = []
+        for cid, client in enumerate(task.clients):
+            sat = Satellite(client.plane, client.slot)
+            t_dl = self._first_tx(sat, t, self.payload_bits, downlink=False)
+            if t_dl is None:
+                return None, {"failed_client": cid}
+            t_tr = t_dl + task.train_time_s(cid)
+            t_ul = self._first_tx(
+                sat, t_tr, self.payload_bits, downlink=True,
+                same_window=self.same_window_upload,
+            )
+            if t_ul is None:
+                return None, {"failed_client": cid}
+            done_times.append(t_ul)
+
+        stacked = task.local_train(
+            self.global_params, range(len(task.clients)), self._next_rng()
+        )
+        counts = [task.num_samples(c) for c in range(len(task.clients))]
+        self.global_params = aggregation.global_aggregate(
+            stacked, counts, use_kernel=sim.use_kernel
+        )
+        t_end = max(done_times)
+        return t_end, {"slowest_client_h": (t_end - t) / 3600.0}
+
+
+class FedSatSched(FedAvgStar):
+    """[10]: visibility-aware scheduling — a satellite may finish its
+    upload inside the window it downloaded in (if long enough), and
+    trains during the invisible interval otherwise."""
+
+    name = "FedSatSched"
+    same_window_upload = True
+
+
+class FedHAP(FLStrategy, _StarMixin):
+    """[2]: replaces the GS with two HAPs (20 km altitude, near-zero
+    minimum elevation -> wide frequent windows). Extra hardware, better
+    visibility; synchronous aggregation."""
+
+    name = "FedHAP"
+
+    def __init__(self, task: FederatedTask, sim: SimConfig):
+        super().__init__(task, sim)
+        hap_a = dataclasses.replace(
+            sim.ground_station, alt_m=20_000.0, min_elevation_deg=2.0,
+            name="HAP-A",
+        )
+        hap_b = dataclasses.replace(
+            sim.ground_station, lon_deg=sim.ground_station.lon_deg + 180.0,
+            alt_m=20_000.0, min_elevation_deg=2.0, name="HAP-B",
+        )
+        horizon = sim.horizon_hours * 3600.0 * 1.5
+        self.servers = [
+            (hap_a, VisibilityPredictor(self.walker, hap_a, horizon,
+                                        coarse_step_s=sim.coarse_step_s)),
+            (hap_b, VisibilityPredictor(self.walker, hap_b, horizon,
+                                        coarse_step_s=sim.coarse_step_s)),
+        ]
+
+    def _best_tx(self, sat, t, payload_bits, downlink):
+        outs = [
+            self._first_tx(sat, t, payload_bits, downlink,
+                           predictor=pred, gs=gs)
+            for gs, pred in self.servers
+        ]
+        outs = [o for o in outs if o is not None]
+        return min(outs) if outs else None
+
+    def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        task, sim = self.task, self.sim
+        done_times = []
+        for cid, client in enumerate(task.clients):
+            sat = Satellite(client.plane, client.slot)
+            t_dl = self._best_tx(sat, t, self.payload_bits, downlink=False)
+            if t_dl is None:
+                return None, {"failed_client": cid}
+            t_tr = t_dl + task.train_time_s(cid)
+            t_ul = self._best_tx(sat, t_tr, self.payload_bits, downlink=True)
+            if t_ul is None:
+                return None, {"failed_client": cid}
+            done_times.append(t_ul)
+        stacked = task.local_train(
+            self.global_params, range(len(task.clients)), self._next_rng()
+        )
+        counts = [task.num_samples(c) for c in range(len(task.clients))]
+        self.global_params = aggregation.global_aggregate(
+            stacked, counts, use_kernel=sim.use_kernel
+        )
+        return max(done_times), {}
+
+
+# --- ISL ring baselines --------------------------------------------------------------
+class FedISL(FLStrategy, _StarMixin):
+    """[3]: intra-plane ISL relay with a *naive* sink (the next satellite
+    to visit the server, ignoring window duration — uploads that do not
+    fit retry at the sink's next window).  ``ideal=True`` moves the GS to
+    the North Pole, the paper's ideal setup with regular visits."""
+
+    name = "FedISL"
+    ideal = False
+
+    def __init__(self, task: FederatedTask, sim: SimConfig):
+        if self.ideal:
+            sim = dataclasses.replace(
+                sim,
+                ground_station=GroundStation(
+                    lat_deg=89.5, lon_deg=0.0, alt_m=0.0,
+                    min_elevation_deg=5.0, name="North-Pole",
+                ),
+            )
+        super().__init__(task, sim)
+
+    def _upload_with_retries(self, sat: Satellite, t_ready: float,
+                             payload_bits: float) -> Optional[float]:
+        for w in self.predictor.windows_of(sat):
+            if w.t_end <= t_ready:
+                continue
+            t0 = max(w.t_start, t_ready)
+            d = _distance_at(self.walker, self.gs, sat, t0)
+            tc = downlink_time(self.sim.link, payload_bits, d)
+            if w.t_end - t0 >= tc:
+                return t0 + tc
+            # window too short: the naive sink retries at its next window
+        return None
+
+    def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        task, sim = self.task, self.sim
+        L, K = sim.constellation.num_planes, sim.constellation.sats_per_plane
+        t_hop = isl_hop_time(sim.isl, self.payload_bits)
+        completions, partials, counts = [], [], []
+
+        for plane in range(L):
+            clients = self.plane_clients(plane)
+            dl = first_visible_download(
+                walker=self.walker, gs=self.gs, predictor=self.predictor,
+                link=sim.link, plane=plane, t=t,
+                payload_bits=self.payload_bits,
+            )
+            if dl is None:
+                return None, {"failed_plane": plane}
+            src_slot, t_recv = dl
+            events = broadcast_schedule(
+                K, [src_slot], [t_recv], self.payload_bits, sim.isl
+            )
+            t_done = [
+                events[s].t_receive + task.train_time_s(clients[s])
+                for s in range(K)
+            ]
+            # naive sink: earliest next visitor after mean completion
+            t_ready0 = max(t_done)
+            sink, best_start = None, None
+            for s in range(K):
+                w = self.predictor.next_window(Satellite(plane, s), t_ready0)
+                if w is not None and (best_start is None or
+                                      max(w.t_start, t_ready0) < best_start):
+                    sink, best_start = s, max(w.t_start, t_ready0)
+            if sink is None:
+                return None, {"failed_plane": plane}
+            t_ready = max(
+                t_done[s] + ring_hops(K, s, sink) * t_hop for s in range(K)
+            )
+            t_ul = self._upload_with_retries(
+                Satellite(plane, sink), t_ready, self.payload_bits
+            )
+            if t_ul is None:
+                return None, {"failed_plane": plane}
+            completions.append(t_ul)
+
+            stacked = task.local_train(
+                self.global_params, clients, self._next_rng()
+            )
+            c = [task.num_samples(cid) for cid in clients]
+            partials.append(
+                aggregation.partial_aggregate(stacked, c,
+                                              use_kernel=sim.use_kernel)
+            )
+            counts.append(int(np.sum(c)))
+
+        self.global_params = aggregation.global_aggregate(
+            aggregation.stack_pytrees(partials), counts,
+            use_kernel=sim.use_kernel,
+        )
+        return max(completions), {}
+
+
+class FedISLIdeal(FedISL):
+    name = "FedISL-ideal"
+    ideal = True
+
+
+# --- asynchronous baselines ------------------------------------------------------------
+class _AsyncStar(FLStrategy, _StarMixin):
+    """Shared machinery: every satellite loops download->train->upload
+    independently; the server consumes an arrival stream."""
+
+    name = "_async"
+    mix_rate = 0.6            # alpha: server mixing rate
+    staleness_power = 0.5     # weight = alpha / (1 + staleness_h)^power
+
+    def __init__(self, task: FederatedTask, sim: SimConfig):
+        super().__init__(task, sim)
+        # (t_upload_done, client_id, t_model_version) priority queue
+        self._queue: List[Tuple[float, int, float]] = []
+        for cid, client in enumerate(task.clients):
+            self._push_next(cid, 0.0)
+
+    def _push_next(self, cid: int, t: float) -> None:
+        client = self.task.clients[cid]
+        sat = Satellite(client.plane, client.slot)
+        t_dl = self._first_tx(sat, t, self.payload_bits, downlink=False)
+        if t_dl is None:
+            return
+        t_tr = t_dl + self.task.train_time_s(cid)
+        t_ul = self._first_tx(sat, t_tr, self.payload_bits, downlink=True)
+        if t_ul is None:
+            return
+        heapq.heappush(self._queue, (t_ul, cid, t_dl))
+
+    def _staleness_weight(self, t_now: float, t_version: float) -> float:
+        stale_h = max(0.0, (t_now - t_version)) / 3600.0
+        return self.mix_rate / (1.0 + stale_h) ** self.staleness_power
+
+    def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        if not self._queue:
+            return None, {"drained": True}
+        t_ul, cid, t_version = heapq.heappop(self._queue)
+        stacked = self.task.local_train(
+            self.global_params, [cid], self._next_rng()
+        )
+        local = aggregation.index_pytree(stacked, 0)
+        alpha = self._staleness_weight(t_ul, t_version)
+        self.global_params = aggregation.weighted_average(
+            aggregation.stack_pytrees([self.global_params, local]),
+            np.asarray([1.0 - alpha, alpha]),
+            use_kernel=self.sim.use_kernel,
+        )
+        self._push_next(cid, t_ul)
+        return t_ul, {"client": cid, "alpha": alpha}
+
+
+class FedAsync(_AsyncStar):
+    """[13]: asynchronous federated optimization with staleness decay."""
+
+    name = "FedAsync"
+
+
+class FedSat(_AsyncStar):
+    """[9]: ideal NP ground station; arrivals buffered and folded in at a
+    fixed cadence (one orbital period) with uniform weights."""
+
+    name = "FedSat-ideal"
+
+    def __init__(self, task: FederatedTask, sim: SimConfig):
+        sim = dataclasses.replace(
+            sim,
+            ground_station=GroundStation(
+                lat_deg=89.5, lon_deg=0.0, alt_m=0.0,
+                min_elevation_deg=5.0, name="North-Pole",
+            ),
+        )
+        super().__init__(task, sim)
+        self._buffer: List[Tuple[int, float]] = []
+        self._next_agg = sim.constellation.period_s
+
+    def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        if not self._queue:
+            return None, {"drained": True}
+        t_ul, cid, t_version = heapq.heappop(self._queue)
+        self._buffer.append((cid, t_version))
+        self._push_next(cid, t_ul)
+        if t_ul < self._next_agg and self._queue:
+            return t_ul, {"buffered": len(self._buffer)}
+        # aggregation tick
+        self._next_agg = t_ul + self.sim.constellation.period_s
+        if not self._buffer:
+            return t_ul, {"buffered": 0}
+        cids = [c for c, _ in self._buffer]
+        stacked = self.task.local_train(
+            self.global_params, cids, self._next_rng()
+        )
+        counts = [self.task.num_samples(c) for c in cids]
+        update = aggregation.global_aggregate(
+            stacked, counts, use_kernel=self.sim.use_kernel
+        )
+        self.global_params = aggregation.weighted_average(
+            aggregation.stack_pytrees([self.global_params, update]),
+            np.asarray([1.0 - self.mix_rate, self.mix_rate]),
+            use_kernel=self.sim.use_kernel,
+        )
+        self._buffer = []
+        return t_ul, {"aggregated": len(cids)}
+
+
+class FedSpace(_AsyncStar):
+    """[7]: buffer-fill-triggered aggregation with stale down-weighting.
+
+    (The raw-data-upload scheduling component of FedSpace violates FL
+    privacy and is not reproduced; the buffer aggregation logic is.)
+    """
+
+    name = "FedSpace"
+    buffer_fraction = 0.25
+
+    def __init__(self, task: FederatedTask, sim: SimConfig):
+        super().__init__(task, sim)
+        self._buffer: List[Tuple[int, float]] = []
+
+    def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        if not self._queue:
+            return None, {"drained": True}
+        t_ul, cid, t_version = heapq.heappop(self._queue)
+        self._buffer.append((cid, t_version))
+        self._push_next(cid, t_ul)
+        target = max(1, int(self.buffer_fraction * len(self.task.clients)))
+        if len(self._buffer) < target and self._queue:
+            return t_ul, {"buffered": len(self._buffer)}
+        cids = [c for c, _ in self._buffer]
+        versions = [v for _, v in self._buffer]
+        stacked = self.task.local_train(
+            self.global_params, cids, self._next_rng()
+        )
+        w = np.asarray(
+            [
+                self.task.num_samples(c)
+                * self._staleness_weight(t_ul, v) / self.mix_rate
+                for c, v in zip(cids, versions)
+            ]
+        )
+        update = aggregation.weighted_average(
+            stacked, w, use_kernel=self.sim.use_kernel
+        )
+        self.global_params = aggregation.weighted_average(
+            aggregation.stack_pytrees([self.global_params, update]),
+            np.asarray([1.0 - self.mix_rate, self.mix_rate]),
+            use_kernel=self.sim.use_kernel,
+        )
+        self._buffer = []
+        return t_ul, {"aggregated": len(cids)}
+
+
+class AsyncFLEO(FLStrategy, _StarMixin):
+    """[4]: intra-plane propagation + per-orbit partials like FedLEO, but
+    the sink is the next visitor (its visible-period sufficiency is NOT
+    checked -> upload retries), and the server mixes partials in
+    asynchronously with staleness decay."""
+
+    name = "AsyncFLEO"
+    mix_rate = 0.6
+    staleness_power = 0.5
+
+    def __init__(self, task: FederatedTask, sim: SimConfig):
+        super().__init__(task, sim)
+        self._queue: List[Tuple[float, int, float]] = []
+        for plane in range(sim.constellation.num_planes):
+            self._schedule_plane(plane, 0.0)
+
+    def _schedule_plane(self, plane: int, t: float) -> None:
+        sim, task = self.sim, self.task
+        K = sim.constellation.sats_per_plane
+        clients = self.plane_clients(plane)
+        dl = first_visible_download(
+            walker=self.walker, gs=self.gs, predictor=self.predictor,
+            link=sim.link, plane=plane, t=t, payload_bits=self.payload_bits,
+        )
+        if dl is None:
+            return
+        src_slot, t_recv = dl
+        events = broadcast_schedule(
+            K, [src_slot], [t_recv], self.payload_bits, sim.isl
+        )
+        t_done = [
+            events[s].t_receive + task.train_time_s(clients[s])
+            for s in range(K)
+        ]
+        t_hop = isl_hop_time(sim.isl, self.payload_bits)
+        t_ready0 = max(t_done)
+        sink, best_start = None, None
+        for s in range(K):
+            w = self.predictor.next_window(Satellite(plane, s), t_ready0)
+            if w is not None and (
+                best_start is None or max(w.t_start, t_ready0) < best_start
+            ):
+                sink, best_start = s, max(w.t_start, t_ready0)
+        if sink is None:
+            return
+        t_ready = max(
+            t_done[s] + ring_hops(K, s, sink) * t_hop for s in range(K)
+        )
+        # naive upload with retries (ignores window-duration feasibility)
+        t_ul = None
+        for w in self.predictor.windows_of(Satellite(plane, sink)):
+            if w.t_end <= t_ready:
+                continue
+            t0 = max(w.t_start, t_ready)
+            d = _distance_at(self.walker, self.gs, Satellite(plane, sink), t0)
+            tc = downlink_time(sim.link, self.payload_bits, d)
+            if w.t_end - t0 >= tc:
+                t_ul = t0 + tc
+                break
+        if t_ul is None:
+            return
+        heapq.heappush(self._queue, (t_ul, plane, t_recv))
+
+    def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        if not self._queue:
+            return None, {"drained": True}
+        t_ul, plane, t_version = heapq.heappop(self._queue)
+        clients = self.plane_clients(plane)
+        stacked = self.task.local_train(
+            self.global_params, clients, self._next_rng()
+        )
+        counts = [self.task.num_samples(c) for c in clients]
+        partial = aggregation.partial_aggregate(
+            stacked, counts, use_kernel=self.sim.use_kernel
+        )
+        stale_h = max(0.0, t_ul - t_version) / 3600.0
+        alpha = self.mix_rate / (1.0 + stale_h) ** self.staleness_power
+        self.global_params = aggregation.weighted_average(
+            aggregation.stack_pytrees([self.global_params, partial]),
+            np.asarray([1.0 - alpha, alpha]),
+            use_kernel=self.sim.use_kernel,
+        )
+        self._schedule_plane(plane, t_ul)
+        return t_ul, {"plane": plane, "alpha": alpha}
+
+
+ALL_BASELINES = {
+    "FedAvg": FedAvgStar,
+    "FedSatSched": FedSatSched,
+    "FedHAP": FedHAP,
+    "FedISL": FedISL,
+    "FedISL-ideal": FedISLIdeal,
+    "FedAsync": FedAsync,
+    "FedSat-ideal": FedSat,
+    "FedSpace": FedSpace,
+    "AsyncFLEO": AsyncFLEO,
+}

@@ -1,0 +1,195 @@
+"""FedLEO: the paper's framework (§IV), as a strategy on the engine.
+
+One synchronous round starting at simulated time t:
+
+  1. Per orbit, the GS broadcasts w^t to the first satellite of the
+     plane that can complete the download inside a visibility window
+     (full uplink bandwidth B, eq. 15).
+  2. The model floods the plane's bidirectional ISL ring
+     (``broadcast_schedule``, duplicates dropped); each satellite starts
+     local training as soon as it receives the model, so training
+     processes run concurrently (§IV-A).
+  3. After training, every satellite runs the *distributed scheduler*
+     (``select_sink``, §IV-B) over shared deterministic state; all agree
+     on the per-orbit sink — the first satellite whose upcoming access
+     window is long enough for the partial-model exchange, minimizing
+     eq. (22).
+  4. Trained models relay hop-by-hop to the sink (eq. 21); the sink
+     computes the partial global model w_{K_l} (eq. 9) and uploads it —
+     with the piggybacked label histograms — during its window (one
+     downlink RB, eq. 16).
+  5. When the GS holds all L partials it aggregates them (eq. 4, with
+     optional non-IID class-coverage weighting) into w^{t+1}.
+
+The learning (local SGD, partial & global aggregation) is real JAX
+compute; the clock is the Satcom simulation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import aggregation
+from repro.core.engine import FLStrategy
+from repro.core.propagation import broadcast_schedule
+from repro.core.scheduling import first_visible_download, select_sink
+
+
+class FedLEO(FLStrategy):
+    name = "FedLEO"
+
+    def __init__(self, *args, require_next_download: bool = False,
+                 sink_policy: str = "scheduled", **kwargs):
+        """sink_policy:
+          * "scheduled"     — the paper's distributed scheduler (§IV-B):
+            first satellite whose window fits the exchange, minimizing
+            eq. (22);
+          * "first_visitor" — ablation: next satellite to see the GS,
+            window duration ignored (upload retries if it doesn't fit) —
+            isolates the contribution of the scheduling component.
+        """
+        super().__init__(*args, **kwargs)
+        self.require_next_download = require_next_download
+        assert sink_policy in ("scheduled", "first_visitor")
+        self.sink_policy = sink_policy
+        if sink_policy != "scheduled":
+            self.name = f"FedLEO({sink_policy})"
+
+    def _naive_sink(self, plane: int, t_train_done):
+        """Ablation sink: first visitor after training, AW duration NOT
+        checked — uploads that do not fit a window retry at the next one
+        (the failure mode the paper's scheduler avoids)."""
+        from repro.comms.isl import isl_hop_time
+        from repro.comms.link import downlink_time
+        from repro.core.propagation import ring_hops
+        from repro.core.scheduling import SinkDecision, _distance_at
+        from repro.orbits.constellation import Satellite
+
+        sim = self.sim
+        K = sim.constellation.sats_per_plane
+        t_hop = isl_hop_time(sim.isl, self.payload_bits)
+        t_ready0 = max(t_train_done)
+        sink, best_start, best_w = None, None, None
+        for s in range(K):
+            w = self.predictor.next_window(Satellite(plane, s), t_ready0)
+            if w is not None and (
+                best_start is None or max(w.t_start, t_ready0) < best_start
+            ):
+                sink, best_start, best_w = s, max(w.t_start, t_ready0), w
+        if sink is None:
+            return None
+        t_ready = max(
+            t_train_done[s] + ring_hops(K, s, sink) * t_hop
+            for s in range(K)
+        )
+        # upload with retries across this sink's windows
+        for w in self.predictor.windows_of(Satellite(plane, sink)):
+            if w.t_end <= t_ready:
+                continue
+            t0 = max(w.t_start, t_ready)
+            d = _distance_at(self.walker, self.gs, Satellite(plane, sink),
+                             t0)
+            tc = downlink_time(sim.link, self.payload_bits, d)
+            if w.t_end - t0 >= tc:
+                return SinkDecision(
+                    plane=plane, sink_slot=sink, window=w,
+                    t_models_at_sink=t_ready, t_upload_start=t0,
+                    t_upload_done=t0 + tc,
+                    t_wait=max(0.0, w.t_start - t_ready),
+                    candidates_considered=1,
+                )
+        return None
+
+    def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        sim, task = self.sim, self.task
+        L = sim.constellation.num_planes
+        K = sim.constellation.sats_per_plane
+
+        plane_upload_done: List[float] = []
+        plane_stats: List[Dict[str, Any]] = []
+        trained_stacks = []
+        plane_counts: List[int] = []
+        plane_hists: List[np.ndarray] = []
+
+        for plane in range(L):
+            clients = self.plane_clients(plane)
+            # 1. GS -> first reachable satellite of the plane
+            dl = first_visible_download(
+                walker=self.walker,
+                gs=self.gs,
+                predictor=self.predictor,
+                link=sim.link,
+                plane=plane,
+                t=t,
+                payload_bits=self.payload_bits,
+            )
+            if dl is None:
+                return None, {"failed_plane": plane}
+            src_slot, t_recv = dl
+
+            # 2. flood the ring; train upon receipt (concurrent)
+            events = broadcast_schedule(
+                K, [src_slot], [t_recv], self.payload_bits, sim.isl
+            )
+            t_train_done = [
+                events[s].t_receive + task.train_time_s(clients[s])
+                for s in range(K)
+            ]
+
+            # 3. distributed sink selection (same pure function on every sat)
+            if self.sink_policy == "scheduled":
+                decision = select_sink(
+                    walker=self.walker,
+                    gs=self.gs,
+                    predictor=self.predictor,
+                    link=sim.link,
+                    isl=sim.isl,
+                    plane=plane,
+                    t_train_done=t_train_done,
+                    payload_bits=self.payload_bits,
+                    require_next_download=self.require_next_download,
+                )
+            else:
+                decision = self._naive_sink(plane, t_train_done)
+            if decision is None:
+                return None, {"failed_plane": plane}
+
+            # 4. real local training + sink partial aggregation (eq. 9)
+            stacked = task.local_train(
+                self.global_params, clients, self._next_rng()
+            )
+            counts = [task.num_samples(c) for c in clients]
+            partial = aggregation.partial_aggregate(
+                stacked, counts, use_kernel=sim.use_kernel
+            )
+            trained_stacks.append(partial)
+            plane_counts.append(int(np.sum(counts)))
+            plane_hists.append(
+                np.sum([task.clients[c].histogram for c in clients], axis=0)
+            )
+
+            plane_upload_done.append(decision.t_upload_done)
+            plane_stats.append(
+                {
+                    "plane": plane,
+                    "source_slot": src_slot,
+                    "t_broadcast_done": t_recv,
+                    "sink_slot": decision.sink_slot,
+                    "t_models_at_sink": decision.t_models_at_sink,
+                    "t_wait_sink": decision.t_wait,
+                    "t_upload_done": decision.t_upload_done,
+                }
+            )
+
+        # 5. GS global aggregation (eq. 4 + non-IID weighting)
+        stacked_partials = aggregation.stack_pytrees(trained_stacks)
+        self.global_params = aggregation.global_aggregate(
+            stacked_partials,
+            plane_counts,
+            histograms=np.stack(plane_hists),
+            noniid_alpha=sim.noniid_alpha,
+            use_kernel=sim.use_kernel,
+        )
+        t_round_end = max(plane_upload_done)
+        return t_round_end, {"planes": plane_stats}

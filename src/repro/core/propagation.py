@@ -1,0 +1,105 @@
+"""Intra-plane model propagation (paper §IV-A).
+
+Given the satellite that first receives the global model from the GS
+(the *source*), the model floods both directions around the plane's
+bidirectional ring; each satellite forwards to its next-hop neighbor.
+Relaying trained models to the sink works the same way in reverse.
+
+The planner is pure geometry + eq. (20) timing:
+
+  * ``broadcast_schedule``: per-satellite model-receipt time when the
+    source floods the ring (hop distance * t_h).  Duplicate receptions
+    (two visible satellites, or the two flood fronts meeting) are
+    dropped, i.e. each satellite keeps the *earliest* receipt — exactly
+    the paper's "simply drop the duplicate".
+  * ``relay_schedule``: per-satellite arrival time of its trained model
+    at the sink (store-and-forward over `hops` ISL hops, eq. 21); the
+    orbit's relay completion is the max arrival.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+from repro.comms.isl import ISLConfig, isl_hop_time
+from repro.orbits.constellation import WalkerDelta
+
+
+@dataclasses.dataclass(frozen=True)
+class PropagationEvent:
+    slot: int
+    t_receive: float
+    hops: int
+    source_slot: int
+
+
+def ring_hops(num_slots: int, a: int, b: int) -> int:
+    d = abs(a - b) % num_slots
+    return min(d, num_slots - d)
+
+
+def broadcast_schedule(
+    num_slots: int,
+    source_slots: Sequence[int],
+    t_source: Sequence[float],
+    payload_bits: float,
+    isl: ISLConfig,
+) -> List[PropagationEvent]:
+    """Flood the global model around the ring from one or more sources.
+
+    Args:
+      num_slots: satellites on the plane (K).
+      source_slots: slots that received w^t directly from the GS.
+      t_source: receipt time at each source (same length).
+      payload_bits: z|N| of the model.
+
+    Returns:
+      One event per slot with its earliest receipt time (duplicates
+      dropped by taking the min over sources/directions).
+    """
+    t_hop = isl_hop_time(isl, payload_bits)
+    events: Dict[int, PropagationEvent] = {}
+    for src, t0 in zip(source_slots, t_source):
+        for slot in range(num_slots):
+            h = ring_hops(num_slots, src, slot)
+            t_recv = t0 + h * t_hop
+            if slot not in events or t_recv < events[slot].t_receive:
+                events[slot] = PropagationEvent(
+                    slot=slot, t_receive=t_recv, hops=h, source_slot=src
+                )
+    return [events[s] for s in range(num_slots)]
+
+
+def relay_schedule(
+    num_slots: int,
+    sink_slot: int,
+    t_ready: Sequence[float],
+    payload_bits: float,
+    isl: ISLConfig,
+) -> List[PropagationEvent]:
+    """Arrival time of each satellite's trained model at the sink.
+
+    ``t_ready[k]`` is when slot k finishes local training.  Each model is
+    store-and-forwarded over ring_hops(k, sink) hops (eq. 21's h * t_h
+    term).  We model per-hop pipelining conservatively: every model pays
+    its full hop count (no cut-through), matching eq. (21)'s max over
+    relaying satellites.
+    """
+    t_hop = isl_hop_time(isl, payload_bits)
+    out = []
+    for slot in range(num_slots):
+        h = ring_hops(num_slots, slot, sink_slot)
+        out.append(
+            PropagationEvent(
+                slot=slot,
+                t_receive=t_ready[slot] + h * t_hop,
+                hops=h,
+                source_slot=slot,
+            )
+        )
+    return out
+
+
+def relay_completion_time(events: Sequence[PropagationEvent]) -> float:
+    """Eq. (21): the orbit's t_h^* — all models collected at the sink."""
+    return max(e.t_receive for e in events)

@@ -1,0 +1,171 @@
+"""Distributed sink-satellite scheduling (paper §IV-B).
+
+Every satellite runs ``select_sink`` over the *same* deterministic inputs
+(constellation config, GS position, training-completion times, link
+parameters) and therefore reaches the same decision without any message
+exchange — this is what makes the scheduler distributed.
+
+Selection rule (eqs. 21-22): among candidate sinks C_l on orbit l, pick
+the satellite minimizing the orbit's completion time
+
+  T*_sum = t_c^U + t_c^D + t*_wait + t_train(K_l) + t*_h           (22)
+
+subject to the access-window feasibility constraint
+
+  AW(c_opt, GS) >= (time needed to exchange models with the GS),
+
+i.e. the sink's upcoming visibility window must be long enough for the
+partial-global-model upload (and next-round download).  Ties (several
+candidates with equal completion) resolve to the earliest visitor,
+matching "selects the one that will visit the GS the first".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.comms.isl import ISLConfig, isl_hop_time
+from repro.comms.link import LinkConfig, downlink_time, uplink_time
+from repro.core.propagation import ring_hops
+from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
+from repro.orbits.prediction import VisibilityPredictor
+from repro.orbits.visibility import VisibilityWindow
+
+
+@dataclasses.dataclass(frozen=True)
+class SinkDecision:
+    plane: int
+    sink_slot: int
+    window: VisibilityWindow
+    t_models_at_sink: float     # all trained models collected (eq. 21)
+    t_upload_start: float       # max(window start, models ready)
+    t_upload_done: float        # + t_c^D
+    t_wait: float               # t*_wait
+    candidates_considered: int
+
+
+def _distance_at(
+    walker: WalkerDelta, gs: GroundStation, sat: Satellite, t: float
+) -> float:
+    r_s = walker.position_of(sat, t)
+    r_g = gs.eci(np.asarray(t))
+    return float(np.linalg.norm(r_s - r_g))
+
+
+def select_sink(
+    *,
+    walker: WalkerDelta,
+    gs: GroundStation,
+    predictor: VisibilityPredictor,
+    link: LinkConfig,
+    isl: ISLConfig,
+    plane: int,
+    t_train_done: Sequence[float],
+    payload_bits: float,
+    require_next_download: bool = False,
+) -> Optional[SinkDecision]:
+    """Deterministic sink selection for one orbital plane.
+
+    Args:
+      t_train_done: per-slot local-training completion times (absolute
+        simulation seconds); index = slot on this plane.
+      payload_bits: model size z|N|.
+      require_next_download: also require room for the next global-model
+        download inside the same window (t_c^U + t_c^D).
+
+    Returns:
+      The SinkDecision, or None if no feasible window exists in the
+      predictor's horizon (caller should extend the horizon).
+    """
+    K = walker.config.sats_per_plane
+    t_hop = isl_hop_time(isl, payload_bits)
+    best: Optional[SinkDecision] = None
+    considered = 0
+
+    for cand in range(K):
+        sat = Satellite(plane=plane, slot=cand)
+        # eq. 21: when do all models reach this candidate sink?
+        arrivals = [
+            t_train_done[s] + ring_hops(K, s, cand) * t_hop for s in range(K)
+        ]
+        t_ready = max(arrivals)
+
+        # Feasibility: window long enough for the exchange. Distance (and
+        # hence t_c^D) depends on when the window occurs, so iterate the
+        # candidate's windows and evaluate the exchange time window-by-
+        # window with the true slant range at upload start.
+        for w in predictor.windows_of(sat):
+            if w.t_end <= t_ready:
+                continue
+            t_start_ul = max(w.t_start, t_ready)
+            d = _distance_at(walker, gs, sat, t_start_ul)
+            t_dl = downlink_time(link, payload_bits, d)
+            need = t_dl + (uplink_time(link, payload_bits, d)
+                           if require_next_download else 0.0)
+            if w.t_end - t_start_ul < need:
+                continue  # AW too short — not a valid candidate sink
+            considered += 1
+            decision = SinkDecision(
+                plane=plane,
+                sink_slot=cand,
+                window=w,
+                t_models_at_sink=t_ready,
+                t_upload_start=t_start_ul,
+                t_upload_done=t_start_ul + t_dl,
+                t_wait=max(0.0, w.t_start - t_ready),
+                candidates_considered=0,
+            )
+            # minimize completion; tie -> earliest window start
+            if (
+                best is None
+                or decision.t_upload_done < best.t_upload_done - 1e-9
+                or (
+                    abs(decision.t_upload_done - best.t_upload_done) <= 1e-9
+                    and decision.window.t_start < best.window.t_start
+                )
+            ):
+                best = decision
+            break  # later windows of the same candidate are never better
+
+    if best is None:
+        return None
+    return dataclasses.replace(best, candidates_considered=considered)
+
+
+def first_visible_download(
+    *,
+    walker: WalkerDelta,
+    gs: GroundStation,
+    predictor: VisibilityPredictor,
+    link: LinkConfig,
+    plane: int,
+    t: float,
+    payload_bits: float,
+) -> Optional[tuple]:
+    """Earliest (slot, t_received) at which ANY satellite of the plane can
+    finish downloading w^t from the GS after time t (§IV-A step 1).
+
+    The GS broadcasts over the full uplink bandwidth; the first visible
+    satellite of the plane becomes the propagation source.
+    """
+    K = walker.config.sats_per_plane
+    best_slot, best_done = None, None
+    for slot in range(K):
+        sat = Satellite(plane=plane, slot=slot)
+        for w in predictor.windows_of(sat):
+            if w.t_end <= t:
+                continue
+            t0 = max(w.t_start, t)
+            d = _distance_at(walker, gs, sat, t0)
+            t_ul = uplink_time(link, payload_bits, d)
+            if w.t_end - t0 < t_ul:
+                continue  # window too short to finish the download
+            done = t0 + t_ul
+            if best_done is None or done < best_done:
+                best_slot, best_done = slot, done
+            break
+    if best_slot is None:
+        return None
+    return best_slot, best_done

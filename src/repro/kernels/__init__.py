@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  * ``aggregate``  — weighted model aggregation (FedLEO eqs. 4/9): the FL
+    server hot-spot, a memory-bound streaming reduction over K stacked
+    parameter vectors.
+  * ``flash``      — GQA flash attention (causal / sliding-window) for the
+    transformer architectures.
+  * ``ssd``        — Mamba2 SSD chunked scan.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), <name>_ops.py
+(jit'd wrapper with interpret fallback on CPU) and <name>_ref.py (pure-jnp
+oracle used by the allclose test sweeps).
+"""
+from repro.kernels import aggregate_ops, flash_ops, ssd_ops
+
+__all__ = ["aggregate_ops", "flash_ops", "ssd_ops"]

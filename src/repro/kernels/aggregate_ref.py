@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the aggregation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aggregate_flat_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """out[n] = sum_k w[k] x[k, n], accumulated in fp32."""
+    return jnp.tensordot(
+        w.astype(jnp.float32), x.astype(jnp.float32), axes=1
+    ).astype(x.dtype)

@@ -1,0 +1,36 @@
+"""jit'd wrapper for the flash-attention kernel with CPU interpret
+fallback; the model layer calls this when attn_impl="pallas"."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash as _flash
+from repro.kernels.flash_ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    s = q.shape[1]
+    block = 128 if s % 128 == 0 else (64 if s % 64 == 0 else None)
+    if block is None:
+        # ragged sequence: fall back to the oracle
+        return flash_attention_ref(q, k, v, causal, window, logit_soft_cap)
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window,
+        logit_soft_cap=logit_soft_cap,
+        block_q=block, block_k=block,
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding window)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,        # (B, S, H, D)
+    k: jnp.ndarray,        # (B, S, G, D)
+    v: jnp.ndarray,        # (B, S, G, D)
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, s, h, d = q.shape
+    g = k.shape[2]
+    rep = h // g
+    qf = q.astype(jnp.float32).reshape(b, s, g, rep, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qf, kf) / math.sqrt(d)
+    if logit_soft_cap is not None:
+        logits = logit_soft_cap * jnp.tanh(logits / logit_soft_cap)
+    pos = jnp.arange(s)
+    diff = pos[:, None] - pos[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= diff >= 0
+    if window is not None:
+        mask &= diff < window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, vf)
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,37 @@
+"""Oracle for the SSD kernel: the model's chunked jnp implementation
+(itself validated against a naive per-step recurrence in the tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk: int = 128):
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    return y
+
+
+def ssd_naive(x, dt, A, Bm, Cm):
+    """O(S) sequential recurrence — ground truth for both implementations."""
+    import jax
+
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)   # (B,S,H,N)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+    a = dt.astype(jnp.float32) * A[None, None, :]          # (B,S,H)
+    xdt = x.astype(jnp.float32) * dt[..., None].astype(jnp.float32)
+
+    def step(state, t):
+        dA = jnp.exp(a[:, t])                              # (B,H)
+        state = state * dA[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", Bh[:, t], xdt[:, t]
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, t], state)
+        return state, y
+
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, state, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)          # (B,S,H,P)

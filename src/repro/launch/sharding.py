@@ -1,0 +1,175 @@
+"""Parameter/activation sharding rules (FSDP x tensor parallel).
+
+Assigns a PartitionSpec to every pytree leaf by its *name* (path) and
+trailing shape, then guards divisibility: a dim is sharded only if the
+mesh axis size divides it (e.g. GQA kv-head projections with 8 kv heads
+replicate across a 16-way model axis instead of sharding unevenly).
+
+Leading "extra" dims (scan stacks (L, ...), FedLEO orbit replicas) are
+padded with None on the left automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# name -> base spec for the TRAILING dims, using the roles:
+#   F = FSDP axis ("data" [+ "pod"]), T = tensor axis ("model")
+_RULES = [
+    # attention
+    (r"(^|/)wq$", ("F", "T", None)),
+    (r"(^|/)wk$", ("F", "T", None)),
+    (r"(^|/)wv$", ("F", "T", None)),
+    (r"(^|/)wo$", ("T", None, "F")),
+    # dense / shared-expert GLU FFN
+    (r"(^|/)w_gate$", ("F", "T")),
+    (r"(^|/)w_up$", ("F", "T")),
+    (r"(^|/)w_down$", ("T", "F")),
+    # MoE (leading expert dim -> expert parallel over T)
+    (r"moe.*router$|(^|/)router$", ("F", None)),
+    # embeddings / lm head
+    (r"(^|/)table$", ("T", "F")),
+    (r"lm_head.*(^|/)w$", ("F", "T")),
+    # mamba2
+    (r"(^|/)in_proj$", ("F", "T")),
+    (r"(^|/)out_proj$", ("T", "F")),
+    (r"(^|/)conv_w$", (None, "T")),
+    (r"(^|/)conv_b$", ("T",)),
+    # norms & scalars: replicated
+    (r"(^|/)(scale|bias|A_log|D|dt_bias)$", None),
+]
+
+# MoE expert tensors carry a leading E dim; detect via path containing
+# "moe" and 3 trailing dims on w_gate/w_up/w_down.
+_MOE_RULES = [
+    (r"(^|/)w_gate$", ("T", "F", None)),
+    (r"(^|/)w_up$", ("T", "F", None)),
+    (r"(^|/)w_down$", ("T", None, "F")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _resolve(role, fsdp_axes, model_ax):
+    if role == "F":
+        if not fsdp_axes:
+            return None          # TP-only / ZeRO-1 parameter layout
+        return fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    if role == "T":
+        return model_ax
+    return None
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for_leaf(
+    path_str: str,
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    fsdp_axes: Tuple[str, ...] = ("data",),
+    model_ax: str = "model",
+    leading_replica_axis: Optional[str] = None,
+) -> P:
+    """PartitionSpec for one leaf; unmatched names are replicated."""
+    is_moe_expert = (
+        "moe" in path_str
+        and re.search(r"(^|/)(w_gate|w_up|w_down)$", path_str)
+        and "shared" not in path_str
+        and len(shape) >= 3
+    )
+    rules = _MOE_RULES if is_moe_expert else _RULES
+    base = None
+    matched = False
+    for pat, spec in rules:
+        if re.search(pat, path_str):
+            base = spec
+            matched = True
+            break
+    if not matched or base is None:
+        base = ()
+
+    ndim = len(shape)
+    if len(base) > ndim:
+        # optimizer-state leaf with reduced rank (adafactor row/col):
+        # replicate — it is O(rows + cols), not worth sharding.
+        base = ()
+    pad = ndim - len(base)
+    full = [None] * pad + [
+        _resolve(r, fsdp_axes, model_ax) for r in base
+    ]
+    # divisibility guard
+    out = []
+    for dim, axis in zip(shape, full):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    if leading_replica_axis is not None and ndim >= 1:
+        rep_size = mesh.shape[leading_replica_axis]
+        if shape[0] % rep_size == 0:
+            out[0] = leading_replica_axis
+    return P(*out)
+
+
+def tree_shardings(
+    tree_shapes: PyTree,
+    mesh: Mesh,
+    fsdp_axes: Tuple[str, ...] = ("data",),
+    model_ax: str = "model",
+    leading_replica_axis: Optional[str] = None,
+) -> PyTree:
+    """NamedSharding tree matching a pytree of ShapeDtypeStructs."""
+
+    def one(path, leaf):
+        spec = spec_for_leaf(
+            _path_str(path), leaf.shape, mesh, fsdp_axes, model_ax,
+            leading_replica_axis,
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree_shapes)
+
+
+def with_shardings(tree_shapes: PyTree, shardings: PyTree) -> PyTree:
+    """Attach shardings to ShapeDtypeStructs (for AOT .lower())."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_shapes,
+        shardings,
+    )
+
+
+def batch_sharding(mesh: Mesh, batch_size: int) -> Tuple[str, ...]:
+    """Largest prefix of (pod, data) that divides the batch."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen = []
+    size = 1
+    for a in axes:
+        if batch_size % (size * mesh.shape[a]) == 0:
+            chosen.append(a)
+            size *= mesh.shape[a]
+    return tuple(chosen)

@@ -1,0 +1,146 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape, mesh)`` returns the batch pytree for the input
+shape's step kind; ``state_specs`` / ``cache_specs`` abstract-eval the
+train state / decode cache and attach shardings.  Everything here is
+weak-type-correct and shardable — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch import sharding as shardlib
+from repro.optim import get_optimizer
+from repro.train.steps import TrainState
+
+PyTree = Any
+
+
+def sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec or P())
+    )
+
+
+def sliding_window_for(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """Window policy: long_500k uses the sub-quadratic variant for
+    attention-bearing archs (DESIGN.md §4); other shapes use full attn."""
+    if shape.name != "long_500k":
+        return None
+    if cfg.family == "ssm":
+        return None                      # attention-free
+    return cfg.sliding_window
+
+
+def batch_specs(
+    cfg: ArchConfig, shape: InputShape, mesh: Optional[Mesh] = None
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Train/prefill batch pytree (decode uses token_specs/cache_specs)."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = shardlib.batch_sharding(mesh, b) if mesh is not None else ()
+    dp_spec = dp if len(dp) != 1 else dp[0]
+    batch = {
+        "tokens": sds((b, s), jnp.int32, mesh,
+                      P(dp_spec, None) if mesh else None)
+    }
+    if cfg.family == "vlm":
+        batch["extra"] = sds(
+            (b, cfg.vision.num_patches, cfg.d_model), jnp.bfloat16, mesh,
+            P(dp_spec, None, None) if mesh else None,
+        )
+    if cfg.family == "audio":
+        batch["source"] = sds(
+            (b, cfg.encoder.max_source_len, cfg.d_model), jnp.bfloat16,
+            mesh, P(dp_spec, None, None) if mesh else None,
+        )
+    return batch
+
+
+def params_specs(model, mesh: Mesh, fsdp_axes=("data",),
+                 rng_seed: int = 0) -> PyTree:
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(rng_seed))
+    shardings = shardlib.tree_shardings(shapes, mesh, fsdp_axes=fsdp_axes)
+    return shardlib.with_shardings(shapes, shardings)
+
+
+def state_specs(model, cfg: ArchConfig, mesh: Mesh,
+                fsdp_axes=("data",),
+                opt_fsdp_axes=None) -> PyTree:
+    """Sharding modes:
+      * FSDP-2D (baseline): fsdp_axes=("data",) — params 2-D sharded
+        (data x model); contraction-dim sharding causes redundant compute
+        (see EXPERIMENTS.md §Perf).
+      * ZeRO-1 (optimized): fsdp_axes=(), opt_fsdp_axes=("data",) —
+        params TP-only (replicated over data), optimizer state sharded
+        over data; sharded update + update all-gather.
+    """
+    opt_fsdp_axes = fsdp_axes if opt_fsdp_axes is None else opt_fsdp_axes
+    p_specs = params_specs(model, mesh, fsdp_axes)
+    opt = get_optimizer(cfg.optimizer, cfg.learning_rate)
+    opt_shapes = jax.eval_shape(opt.init, p_specs)
+    opt_shardings = shardlib.tree_shardings(opt_shapes, mesh,
+                                            fsdp_axes=opt_fsdp_axes)
+    opt_sds = shardlib.with_shardings(opt_shapes, opt_shardings)
+    step_sds = sds((), jnp.int32, mesh, P())
+    return TrainState(params=p_specs, opt_state=opt_sds, step=step_sds)
+
+
+def cache_specs(
+    model, cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+    fsdp_axes=("data",),
+) -> PyTree:
+    """Decode-cache ShapeDtypeStructs with batch/head sharding."""
+    b = shape.global_batch
+    if cfg.family == "audio":
+        p_specs = params_specs(model, mesh, fsdp_axes)
+        src = batch_specs(cfg, shape, mesh)["source"]
+        shapes = jax.eval_shape(
+            functools.partial(model.init_cache, max_len=shape.seq_len),
+            p_specs, src,
+        )
+    else:
+        shapes = jax.eval_shape(
+            functools.partial(model.init_cache, b, shape.seq_len)
+        )
+    dp = shardlib.batch_sharding(mesh, b)
+    dp_spec = dp if len(dp) != 1 else (dp[0] if dp else None)
+
+    def one(path, leaf):
+        # find the batch dim: caches are (B, ...) or stacked (L, B, ...)
+        shp = leaf.shape
+        spec = [None] * len(shp)
+        for i, d in enumerate(shp[:3]):
+            if d == b and dp:
+                spec[i] = dp_spec
+                break
+        # shard a kv-head / ssm-head dim over model when divisible
+        path_s = shardlib._path_str(path)
+        for i in range(len(shp) - 1, 0, -1):
+            if spec[i] is None and shp[i] > 1 and \
+                    shp[i] % mesh.shape["model"] == 0 and i >= 2:
+                if ("ssm" in path_s or "k" == path_s.split("/")[-1]
+                        or "v" == path_s.split("/")[-1]
+                        or "conv" in path_s):
+                    spec[i] = "model"
+                    break
+        return jax.ShapeDtypeStruct(
+            shp, leaf.dtype, sharding=NamedSharding(mesh, P(*spec))
+        )
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def token_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    b = shape.global_batch
+    dp = shardlib.batch_sharding(mesh, b)
+    dp_spec = dp if len(dp) != 1 else (dp[0] if dp else None)
+    return sds((b, 1), jnp.int32, mesh, P(dp_spec, None))

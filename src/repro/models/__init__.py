@@ -1,0 +1,1 @@
+"""Model zoo: paper's CNN/U-Net + the 10 assigned architectures."""

@@ -1,0 +1,97 @@
+"""The paper's evaluation models: a deep CNN (MNIST/CIFAR-10) and a
+U-Net (DeepGlobe road extraction).  §V-A: "we use a deep CNN for MNIST
+and CIFAR-10, and a U-Net model for DeepGlobe."
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+# --- deep CNN -----------------------------------------------------------------
+def init_cnn(
+    rng,
+    input_shape: Tuple[int, int, int] = (28, 28, 1),
+    num_classes: int = 10,
+    widths: Tuple[int, ...] = (32, 64),
+    hidden: int = 128,
+) -> Dict:
+    keys = jax.random.split(rng, len(widths) + 2)
+    params: Dict = {"conv": []}
+    in_ch = input_shape[-1]
+    h, w = input_shape[0], input_shape[1]
+    for i, ch in enumerate(widths):
+        params["conv"].append(nn.init_conv(keys[i], in_ch, ch))
+        in_ch = ch
+        h, w = h // 2, w // 2
+    flat = h * w * in_ch
+    params["fc1"] = nn.init_dense(keys[-2], flat, hidden)
+    params["fc2"] = nn.init_dense(keys[-1], hidden, num_classes)
+    return params
+
+
+def apply_cnn(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, H, W, C) -> logits (B, num_classes)."""
+    for p in params["conv"]:
+        x = nn.apply_conv(p, x)
+        x = jax.nn.relu(x)
+        x = nn.max_pool(x, 2)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(nn.apply_dense(params["fc1"], x))
+    return nn.apply_dense(params["fc2"], x)
+
+
+# --- U-Net ---------------------------------------------------------------------
+def init_unet(
+    rng,
+    in_ch: int = 3,
+    base: int = 16,
+    depth: int = 3,
+    num_classes: int = 2,
+) -> Dict:
+    n_keys = depth * 2 + depth * 2 + 2
+    keys = iter(jax.random.split(rng, n_keys + 1))
+    params: Dict = {"down": [], "up": [], "skipconv": []}
+    ch = in_ch
+    enc_chs = []
+    for d in range(depth):
+        out = base * (2**d)
+        params["down"].append(
+            {"c1": nn.init_conv(next(keys), ch, out),
+             "c2": nn.init_conv(next(keys), out, out)}
+        )
+        enc_chs.append(out)
+        ch = out
+    params["bottleneck"] = {
+        "c1": nn.init_conv(next(keys), ch, ch * 2),
+    }
+    ch = ch * 2
+    for d in reversed(range(depth)):
+        out = base * (2**d)
+        params["up"].append(
+            {"t": nn.init_conv(next(keys), ch, out, ksize=2),
+             "c1": nn.init_conv(next(keys), out + enc_chs[d], out)}
+        )
+        ch = out
+    params["head"] = nn.init_conv(next(keys), ch, num_classes, ksize=1)
+    return params
+
+
+def apply_unet(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, H, W, C) -> per-pixel logits (B, H, W, num_classes)."""
+    skips = []
+    for blk in params["down"]:
+        x = jax.nn.relu(nn.apply_conv(blk["c1"], x))
+        x = jax.nn.relu(nn.apply_conv(blk["c2"], x))
+        skips.append(x)
+        x = nn.max_pool(x, 2)
+    x = jax.nn.relu(nn.apply_conv(params["bottleneck"]["c1"], x))
+    for blk, skip in zip(params["up"], reversed(skips)):
+        x = nn.apply_conv_transpose(blk["t"], x, stride=2)
+        x = jnp.concatenate([x, skip], axis=-1)
+        x = jax.nn.relu(nn.apply_conv(blk["c1"], x))
+    return nn.apply_conv(params["head"], x)

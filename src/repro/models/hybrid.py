@@ -1,0 +1,215 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block
+[arXiv:2411.15242].
+
+The defining trick: one set of transformer-block weights (attention +
+MLP) is re-applied at multiple depths (every ``hybrid_attn_every`` Mamba
+layers).  Weights are shared; activations are not — each application gets
+its own KV cache slot during decode.
+
+Layout for L mamba layers with interval g:
+  [g mamba] -> shared attn -> [g mamba] -> shared attn -> ... -> remainder
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import nn
+from repro.models.layers import KVCache, apply_attention, apply_glu_ffn, \
+    init_attention, init_glu_ffn
+from repro.models.mamba2 import (
+    MambaCache,
+    apply_mamba_block,
+    init_mamba_block,
+    init_mamba_cache,
+)
+from repro.models.transformer import _attn_cfg
+
+PyTree = Any
+
+
+class HybridCache(NamedTuple):
+    mamba: PyTree            # stacked MambaCache (L, ...)
+    attn: PyTree             # list-stacked KVCache per shared-block use
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ArchConfig, *, dtype=jnp.bfloat16,
+                 attn_impl: str = "xla", ssd_impl: str = "xla",
+                 sliding_window: Optional[int] = None, **_):
+        assert cfg.ssm is not None
+        self.cfg = cfg
+        self.dtype = dtype
+        self.attn_impl = attn_impl
+        self.ssd_impl = ssd_impl
+        self.sliding_window = sliding_window
+        g = cfg.hybrid_attn_every
+        self.group = g
+        self.n_full = cfg.num_layers // g
+        self.rem = cfg.num_layers % g
+        self.n_attn_uses = self.n_full + (1 if self.rem else 0)
+
+    def init(self, rng) -> PyTree:
+        cfg = self.cfg
+        ke, km, ka, kf, kh = jax.random.split(rng, 5)
+        full_keys = jax.random.split(km, self.n_full * self.group).reshape(
+            self.n_full, self.group, 2
+        )
+        params = {
+            "embed": nn.init_embedding(ke, cfg.vocab_size, cfg.d_model),
+            # (n_full, group, ...) stacked mamba blocks, scanned two-level
+            "mamba_full": jax.vmap(
+                jax.vmap(lambda k: init_mamba_block(k, cfg))
+            )(full_keys),
+            # one SHARED transformer block
+            "shared_attn": {
+                "ln_attn": nn.init_rmsnorm(cfg.d_model),
+                "attn": init_attention(ka, _attn_cfg(cfg)),
+                "ln_ffn": nn.init_rmsnorm(cfg.d_model),
+                "ffn": init_glu_ffn(kf, cfg.d_model, cfg.d_ff),
+            },
+            "ln_final": nn.init_rmsnorm(cfg.d_model),
+        }
+        if self.rem:
+            krem = jax.random.split(rng, self.rem)
+            params["mamba_rem"] = jax.vmap(
+                lambda k: init_mamba_block(k, cfg)
+            )(krem)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": jax.random.normal(
+                    kh, (cfg.d_model, cfg.vocab_size), jnp.float32
+                ) * (1.0 / math.sqrt(cfg.d_model))
+            }
+        return params
+
+    def _shared_attn(self, sp, x, positions, cache=None):
+        acfg = _attn_cfg(self.cfg, sliding_window=self.sliding_window)
+        h = nn.apply_rmsnorm(sp["ln_attn"], x)
+        a, nc = apply_attention(sp["attn"], h, acfg, positions=positions,
+                                cache=cache, attn_impl=self.attn_impl)
+        x = x + a
+        h = nn.apply_rmsnorm(sp["ln_ffn"], x)
+        return x + apply_glu_ffn(sp["ffn"], h, self.cfg.activation), nc
+
+    def forward(self, params, tokens, extra_embeds=None, last_only=False):
+        cfg = self.cfg
+        x = nn.apply_embedding(params["embed"], tokens, self.dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def mamba_fn(x, bp):
+            y, _ = apply_mamba_block(bp, x, cfg, ssd_impl=self.ssd_impl)
+            return y, None
+
+        if cfg.remat:
+            mamba_fn = jax.checkpoint(mamba_fn)
+
+        def group_fn(x, gp):
+            if cfg.scan_layers:
+                y, _ = jax.lax.scan(mamba_fn, x, gp)
+                return y
+            for i in range(self.group):
+                bp = jax.tree_util.tree_map(lambda p: p[i], gp)
+                x, _ = mamba_fn(x, bp)
+            return x
+
+        # scan over groups is unrolled (n_full <= ~7): shared weights are
+        # re-applied, so a lax.scan over uses would capture them as carry
+        # constants anyway.
+        for gi in range(self.n_full):
+            gp = jax.tree_util.tree_map(lambda p: p[gi], params["mamba_full"])
+            x = group_fn(x, gp)
+            x, _ = self._shared_attn(params["shared_attn"], x, positions)
+        if self.rem:
+            if cfg.scan_layers:
+                x, _ = jax.lax.scan(mamba_fn, x, params["mamba_rem"])
+            else:
+                for i in range(self.rem):
+                    bp = jax.tree_util.tree_map(
+                        lambda p: p[i], params["mamba_rem"]
+                    )
+                    x, _ = mamba_fn(x, bp)
+            x, _ = self._shared_attn(params["shared_attn"], x, positions)
+
+        if last_only:
+            x = x[:, -1:]
+        x = nn.apply_rmsnorm(params["ln_final"], x)
+        return self._lm_head(params, x), 0.0
+
+    def _lm_head(self, params, x):
+        if self.cfg.tie_embeddings:
+            return x @ params["embed"]["table"].astype(x.dtype).T
+        return x @ params["lm_head"]["w"].astype(x.dtype)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        s_max = (
+            min(max_len, self.sliding_window)
+            if self.sliding_window is not None else max_len
+        )
+        mamba_full = jax.vmap(
+            lambda _: jax.vmap(lambda __: init_mamba_cache(cfg, batch))(
+                jnp.arange(self.group)
+            )
+        )(jnp.arange(self.n_full))
+        caches = {"mamba_full": mamba_full}
+        if self.rem:
+            caches["mamba_rem"] = jax.vmap(
+                lambda _: init_mamba_cache(cfg, batch)
+            )(jnp.arange(self.rem))
+        caches["attn"] = jax.vmap(
+            lambda _: KVCache.zeros(
+                batch, s_max, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+            )
+        )(jnp.arange(self.n_attn_uses))
+        return caches
+
+    def decode_step(self, params, tokens, cache, position):
+        cfg = self.cfg
+        x = nn.apply_embedding(params["embed"], tokens, self.dtype)
+        b = x.shape[0]
+        positions = jnp.broadcast_to(position, (b, 1)).astype(jnp.int32)
+
+        def mamba_fn(x, scanned):
+            bp, c = scanned
+            y, nc = apply_mamba_block(bp, x, cfg, cache=c)
+            return y, nc
+
+        new_mamba_full = []
+        new_attn = []
+        use = 0
+        for gi in range(self.n_full):
+            gp = jax.tree_util.tree_map(lambda p: p[gi], params["mamba_full"])
+            gc = jax.tree_util.tree_map(lambda c: c[gi], cache["mamba_full"])
+            x, nmc = jax.lax.scan(mamba_fn, x, (gp, gc))
+            new_mamba_full.append(nmc)
+            ac = jax.tree_util.tree_map(lambda c: c[use], cache["attn"])
+            x, nac = self._shared_attn(params["shared_attn"], x, positions,
+                                       cache=ac)
+            new_attn.append(nac)
+            use += 1
+        new_cache = {
+            "mamba_full": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_mamba_full
+            )
+        }
+        if self.rem:
+            x, nrc = jax.lax.scan(
+                mamba_fn, x, (params["mamba_rem"], cache["mamba_rem"])
+            )
+            new_cache["mamba_rem"] = nrc
+            ac = jax.tree_util.tree_map(lambda c: c[use], cache["attn"])
+            x, nac = self._shared_attn(params["shared_attn"], x, positions,
+                                       cache=ac)
+            new_attn.append(nac)
+        new_cache["attn"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_attn
+        )
+
+        x = nn.apply_rmsnorm(params["ln_final"], x)
+        return self._lm_head(params, x), new_cache

@@ -1,0 +1,366 @@
+"""Transformer building blocks shared by the assigned architectures.
+
+Functional style: ``init_*`` returns a param dict, ``apply_*`` is pure.
+Everything supports two modes:
+
+  * train/prefill: full-sequence forward, causal (or banded) mask;
+  * decode: single-token forward against a KV cache.
+
+Grouped-query attention (GQA) is expressed with an explicit group axis in
+the einsums (no head replication), RoPE is precomputable, and the FFN
+covers SwiGLU (mistral/phi3/llama4/kimi/minitron/zamba2) and GeGLU
+(gemma).  A sliding-window mask implements the sub-quadratic variant used
+for the ``long_500k`` shape on full-attention architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import nn
+
+PyTree = Any
+
+
+# --- rotary position embeddings -------------------------------------------------
+def rope_frequencies(head_dim: int, max_len: int, theta: float = 10000.0):
+    """(max_len, head_dim//2) cos/sin tables."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    t = np.arange(max_len)
+    freqs = np.outer(t, inv)  # (max_len, hd/2)
+    return jnp.asarray(np.cos(freqs), jnp.float32), jnp.asarray(
+        np.sin(freqs), jnp.float32
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """Rotate pairs of channels. x: (B, S, H, hd); positions: (B, S)."""
+    hd = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    angles = positions[..., None].astype(jnp.float32) * inv  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    # re-interleave
+    out = jnp.stack([out1, out2], axis=-1).reshape(x.shape)
+    return out
+
+
+# --- attention --------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    causal: bool = True
+    sliding_window: Optional[int] = None   # None = full attention
+    use_rope: bool = True
+    logit_soft_cap: Optional[float] = None
+
+    @property
+    def q_per_kv(self) -> int:
+        assert self.num_heads % self.num_kv_heads == 0
+        return self.num_heads // self.num_kv_heads
+
+
+class KVCache(NamedTuple):
+    """Decode cache. k/v: (B, S_max, H_kv, hd); index: scalar write pos.
+
+    For sliding-window attention S_max = window: the cache is a rolling
+    ring buffer (index mod window)."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    index: jnp.ndarray  # ()
+
+    @staticmethod
+    def zeros(batch: int, max_len: int, num_kv: int, head_dim: int,
+              dtype=jnp.bfloat16) -> "KVCache":
+        return KVCache(
+            k=jnp.zeros((batch, max_len, num_kv, head_dim), dtype),
+            v=jnp.zeros((batch, max_len, num_kv, head_dim), dtype),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+
+def init_attention(rng, cfg: AttentionConfig) -> Dict:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    d, h, g, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": jax.random.normal(kq, (d, h, hd), jnp.float32) * s,
+        "wk": jax.random.normal(kk, (d, g, hd), jnp.float32) * s,
+        "wv": jax.random.normal(kv, (d, g, hd), jnp.float32) * s,
+        "wo": jax.random.normal(ko, (h, hd, d), jnp.float32) * (s / math.sqrt(h)),
+    }
+
+
+def _attn_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+               window: Optional[int]) -> jnp.ndarray:
+    """(B, Sq, Sk) boolean allow-mask from absolute positions."""
+    diff = q_pos[:, :, None] - k_pos[:, None, :]
+    mask = jnp.ones(diff.shape, bool)
+    if causal:
+        mask &= diff >= 0
+    if window is not None:
+        mask &= diff < window
+    return mask
+
+
+def attention_scores(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    mask: jnp.ndarray, q_per_kv: int,
+    logit_soft_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Grouped-query SDPA.  q: (B,Sq,H,hd), k/v: (B,Sk,G,hd), H=G*q_per_kv.
+
+    The group axis is explicit so no KV replication is materialized —
+    important when the Pallas flash kernel is swapped in on TPU.
+    """
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    q = q.reshape(b, sq, g, q_per_kv, hd)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqgph,bkgh->bgpqk", q, k) * scale
+    if logit_soft_cap is not None:
+        logits = logit_soft_cap * jnp.tanh(logits / logit_soft_cap)
+    logits = jnp.where(mask[:, None, None], logits, jnp.finfo(logits.dtype).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgpqk,bkgh->bqgph", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def chunked_attention(
+    q: jnp.ndarray,            # (B, S, H, hd)
+    k: jnp.ndarray,            # (B, S, G, hd)
+    v: jnp.ndarray,            # (B, S, G, hd)
+    q_per_kv: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 512,
+) -> jnp.ndarray:
+    """Flash-style attention in pure XLA: online softmax over KV chunks.
+
+    Never materializes the (S, S) score matrix — peak live memory is
+    O(q_chunk * k_chunk) per (batch, head) — which is what lets the
+    32k/500k shapes lower within HBM.  The kv-chunk scan body is
+    checkpointed so the backward pass recomputes chunk scores instead of
+    saving them (flash-attention-style memory in the autodiff too).
+    """
+    b, s, h, hd = q.shape
+    g = k.shape[2]
+    # largest chunk <= requested that divides s (VLM fused sequences are
+    # patches + tokens and need not be powers of two)
+    q_chunk = math.gcd(s, min(q_chunk, s))
+    k_chunk = math.gcd(s, min(k_chunk, s))
+    assert s % q_chunk == 0 and s % k_chunk == 0
+    nq, nk = s // q_chunk, s // k_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    # (B, G, P, S, hd) layouts
+    qh = jnp.moveaxis(q.reshape(b, s, g, q_per_kv, hd), 1, 3)
+    kh = jnp.moveaxis(k, 1, 2)                      # (B, G, S, hd)
+    vh = jnp.moveaxis(v, 1, 2)
+    qc = qh.reshape(b, g, q_per_kv, nq, q_chunk, hd)
+    kc = kh.reshape(b, g, nk, k_chunk, hd)
+    vc = vh.reshape(b, g, nk, k_chunk, hd)
+
+    def one_q_chunk(qi_and_block):
+        qi, qblk = qi_and_block                     # (B,G,P,Qc,hd)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kv):
+            m_prev, l_prev, acc = carry
+            ki, kblk, vblk = kv
+            s_ = jnp.einsum(
+                "bgpqh,bgkh->bgpqk", qblk.astype(jnp.float32),
+                kblk.astype(jnp.float32),
+            ) * scale
+            if logit_soft_cap is not None:
+                s_ = logit_soft_cap * jnp.tanh(s_ / logit_soft_cap)
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+            diff = q_pos[:, None] - k_pos[None, :]
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= diff >= 0
+            if window is not None:
+                mask &= diff < window
+            s_ = jnp.where(mask, s_, -jnp.inf)
+            m_cur = jnp.max(s_, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s_ - m_safe)
+            p = jnp.where(jnp.isfinite(s_), p, 0.0)
+            corr = jnp.where(
+                jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0
+            )
+            l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * corr + jnp.einsum(
+                "bgpqk,bgkh->bgpqh", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        kv_step_ckpt = jax.checkpoint(kv_step)
+        m0 = jnp.full((b, g, q_per_kv, q_chunk, 1), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, g, q_per_kv, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, g, q_per_kv, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step_ckpt, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kc, 2, 0),
+             jnp.moveaxis(vc, 2, 0)),
+        )
+        return acc / jnp.maximum(l, 1e-30)
+
+    out = jax.lax.map(
+        one_q_chunk, (jnp.arange(nq), jnp.moveaxis(qc, 3, 0))
+    )                                                # (nq,B,G,P,Qc,hd)
+    out = jnp.moveaxis(out, 0, 3).reshape(b, g, q_per_kv, s, hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def apply_attention(
+    params: Dict,
+    x: jnp.ndarray,
+    cfg: AttentionConfig,
+    positions: Optional[jnp.ndarray] = None,
+    cache: Optional[KVCache] = None,
+    attn_impl: str = "xla",
+) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Full attention layer.  x: (B, S, D).
+
+    Train/prefill: cache=None, positions default to arange(S).
+    Decode: cache given, x is (B, 1, D), positions = current absolute pos.
+    """
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dgk->bsgk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dgk->bsgk", x, params["wv"].astype(x.dtype))
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        if attn_impl == "pallas":
+            from repro.kernels import flash_ops
+
+            out = flash_ops.flash_attention(
+                q, k, v, causal=cfg.causal, window=cfg.sliding_window,
+                logit_soft_cap=cfg.logit_soft_cap,
+            )
+        elif attn_impl == "chunked":
+            out = chunked_attention(
+                q, k, v, cfg.q_per_kv, causal=cfg.causal,
+                window=cfg.sliding_window,
+                logit_soft_cap=cfg.logit_soft_cap,
+            )
+        else:
+            k_pos = positions
+            mask = _attn_mask(positions, k_pos, cfg.causal,
+                              cfg.sliding_window)
+            out = attention_scores(q, k, v, mask, cfg.q_per_kv,
+                                   cfg.logit_soft_cap)
+    else:
+        # decode: write k/v at cache.index (ring buffer for windowed attn)
+        s_max = cache.k.shape[1]
+        write_idx = (
+            cache.index % s_max if cfg.sliding_window is not None
+            else cache.index
+        )
+        k_new = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), write_idx, axis=1
+        )
+        v_new = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), write_idx, axis=1
+        )
+        new_cache = KVCache(k=k_new, v=v_new, index=cache.index + s)
+        # absolute positions of cache slots
+        slot = jnp.arange(s_max)
+        if cfg.sliding_window is not None:
+            # ring buffer: slot i holds absolute pos = largest p <= index
+            # with p % s_max == i
+            cur = cache.index + s - 1  # last absolute position written
+            abs_pos = cur - ((cur - slot) % s_max)
+            valid = abs_pos >= jnp.maximum(0, cur - s_max + 1)
+        else:
+            abs_pos = slot
+            valid = slot < (cache.index + s)
+        k_pos = jnp.broadcast_to(abs_pos, (b, s_max))
+        mask = _attn_mask(positions, k_pos, cfg.causal, cfg.sliding_window)
+        mask &= valid[None, None, :]
+        out = attention_scores(
+            q, k_new.astype(q.dtype), v_new.astype(q.dtype), mask,
+            cfg.q_per_kv, cfg.logit_soft_cap,
+        )
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# --- cross attention (enc-dec) -----------------------------------------------------
+def apply_cross_attention(
+    params: Dict,
+    x: jnp.ndarray,
+    memory_kv: Tuple[jnp.ndarray, jnp.ndarray],
+    cfg: AttentionConfig,
+    memory_mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Decoder cross-attention over precomputed encoder K/V.
+
+    memory_kv: (k, v) each (B, S_enc, G, hd) — computed once per request
+    and cached across decode steps.
+    """
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k, v = memory_kv
+    s_enc = k.shape[1]
+    if memory_mask is None:
+        mask = jnp.ones((b, s, s_enc), bool)
+    else:
+        mask = jnp.broadcast_to(memory_mask[:, None, :], (b, s, s_enc))
+    out = attention_scores(q, k.astype(q.dtype), v.astype(q.dtype), mask,
+                           cfg.q_per_kv)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def encode_memory_kv(params: Dict, memory: jnp.ndarray, cfg: AttentionConfig):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    k = jnp.einsum("bsd,dgk->bsgk", memory, params["wk"].astype(memory.dtype))
+    v = jnp.einsum("bsd,dgk->bsgk", memory, params["wv"].astype(memory.dtype))
+    return k, v
+
+
+# --- gated FFN ---------------------------------------------------------------------
+def init_glu_ffn(rng, d_model: int, d_ff: int) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_out,
+    }
+
+
+def apply_glu_ffn(params: Dict, x: jnp.ndarray, activation: str = "silu"):
+    """SwiGLU ('silu') or GeGLU ('gelu') feed-forward."""
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    gate = act(x @ params["w_gate"].astype(x.dtype))
+    up = x @ params["w_up"].astype(x.dtype)
+    return (gate * up) @ params["w_down"].astype(x.dtype)

@@ -1,0 +1,348 @@
+"""Mamba2: state-space duality (SSD) blocks [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm:
+
+  h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t (x) x_t)
+  y_t = C_t . h_t + D x_t
+
+computed chunk-parallel: a within-chunk "attention-like" term
+(C B^T masked by the cumulative decay L) plus an across-chunk recurrent
+state pass (lax.scan over chunks).  This pure-jnp path doubles as the
+oracle (ref.py) for the Pallas ``ssd_scan`` kernel; the model can route
+through the kernel with ``ssd_impl="pallas"`` on TPU.
+
+The recurrent (decode) path keeps O(1) state per layer:
+conv state (B, W-1, C_conv) + SSM state (B, H, P, N) — which is why the
+SSM/hybrid architectures run ``long_500k`` natively (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models import nn
+
+PyTree = Any
+
+
+# --- the SSD scan (pure jnp; also the kernel oracle) ------------------------------
+def segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """L[i, j] = sum_{k=j+1..i} a[k] for i >= j else -inf.  a: (..., Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., i, j)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,        # (B, S, H, P)
+    dt: jnp.ndarray,       # (B, S, H) positive
+    A: jnp.ndarray,        # (H,) negative
+    Bm: jnp.ndarray,       # (B, S, G, N)
+    Cm: jnp.ndarray,       # (B, S, G, N)
+    chunk: int = 128,
+    initial_state: Optional[jnp.ndarray] = None,   # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    nc = s // chunk
+    rep = h // g  # heads per B/C group
+
+    dtype = x.dtype
+    xdt = (x * dt[..., None]).astype(jnp.float32)       # dt-weighted input
+    a = (dt * A[None, None, :]).astype(jnp.float32)     # (B, S, H) log-decay
+
+    # reshape into chunks
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h)
+    Bc = Bm.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+    Cc = Cm.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)                    # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # within-chunk (diagonal) term
+    L = jnp.exp(segsum(jnp.moveaxis(ac, -1, -2)))       # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)   # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp", scores, L,
+                        xc)                              # (B,nc,Q,H,P)
+
+    # chunk summaries: state contribution of each chunk
+    a_cum = jnp.cumsum(ac, axis=2)                       # (B,nc,Q,H)
+    a_tot = a_cum[:, :, -1, :]                           # (B,nc,H)
+    decay_to_end = jnp.exp(a_tot[:, :, None, :] - a_cum)  # (B,nc,Q,H)
+    chunk_states = jnp.einsum(
+        "bcqhn,bcqh,bcqhp->bchpn", Bh, decay_to_end, xc
+    )                                                     # (B,nc,H,P,N)
+
+    # across-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    else:
+        initial_state = initial_state.astype(jnp.float32)
+
+    def scan_fn(state, inp):
+        a_tot_c, new_c = inp                              # (B,H), (B,H,P,N)
+        out_state = state                                 # state BEFORE chunk
+        next_state = state * jnp.exp(a_tot_c)[:, :, None, None] + new_c
+        return next_state, out_state
+
+    final_state, states_before = jax.lax.scan(
+        scan_fn,
+        initial_state,
+        (jnp.moveaxis(a_tot, 1, 0), jnp.moveaxis(chunk_states, 1, 0)),
+    )
+    states_before = jnp.moveaxis(states_before, 0, 1)     # (B,nc,H,P,N)
+
+    # off-diagonal (carry-in) term
+    state_decay = jnp.exp(a_cum)                          # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Ch, states_before, state_decay
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p).astype(dtype)
+    return y, final_state
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,      # (B, H, P) single token
+    dt: jnp.ndarray,     # (B, H)
+    A: jnp.ndarray,      # (H,)
+    Bm: jnp.ndarray,     # (B, G, N)
+    Cm: jnp.ndarray,     # (B, G, N)
+    state: jnp.ndarray,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = x.shape[1]
+    g = Bm.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt.astype(jnp.float32) * A[None, :])      # (B,H)
+    xdt = (x * dt[..., None]).astype(jnp.float32)          # (B,H,P)
+    new_state = state * dA[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", Bh, xdt
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# --- Mamba2 block -------------------------------------------------------------------
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray    # (B, W-1, conv_channels)
+    ssm: jnp.ndarray     # (B, H, P, N)
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int, int]:
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nheads = d_inner // ssm.head_dim
+    conv_ch = d_inner + 2 * ssm.num_groups * ssm.state_dim
+    return d_inner, nheads, ssm.num_groups, ssm.state_dim, conv_ch
+
+
+def init_mamba_block(rng, cfg: ArchConfig) -> Dict:
+    ssm = cfg.ssm
+    d_inner, nheads, g, n, conv_ch = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    d = cfg.d_model
+    proj_out = 2 * d_inner + 2 * g * n + nheads   # z, x, B, C, dt
+    s = 1.0 / math.sqrt(d)
+    return {
+        "norm": nn.init_rmsnorm(d),
+        "in_proj": jax.random.normal(k1, (d, proj_out), jnp.float32) * s,
+        "conv_w": jax.random.normal(k2, (ssm.conv_width, conv_ch),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "out_norm": nn.init_rmsnorm(d_inner),
+        "out_proj": jax.random.normal(k3, (d_inner, d), jnp.float32)
+        * (1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jnp.ndarray):
+    d_inner, nheads, g, n, _ = _dims(cfg)
+    idx = 0
+    z = proj[..., idx: idx + d_inner]; idx += d_inner
+    xin = proj[..., idx: idx + d_inner]; idx += d_inner
+    Bm = proj[..., idx: idx + g * n]; idx += g * n
+    Cm = proj[..., idx: idx + g * n]; idx += g * n
+    dt = proj[..., idx:]
+    return z, xin, Bm, Cm, dt
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over (B, S, C) with width-W taps (W, C)."""
+    width = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((seq.shape[0], width - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = prev.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(
+        full[:, i: i + seq.shape[1], :] * w[i][None, None, :].astype(seq.dtype)
+        for i in range(width)
+    )
+    new_prev = full[:, -(width - 1):, :] if width > 1 else pad[:, :0]
+    return out + b[None, None, :].astype(seq.dtype), new_prev
+
+
+def apply_mamba_block(
+    params: Dict,
+    x: jnp.ndarray,                       # (B, S, D)
+    cfg: ArchConfig,
+    cache: Optional[MambaCache] = None,
+    ssd_impl: str = "xla",
+) -> Tuple[jnp.ndarray, Optional[MambaCache]]:
+    ssm = cfg.ssm
+    d_inner, nheads, g, n, conv_ch = _dims(cfg)
+    residual = x
+    h = nn.apply_rmsnorm(params["norm"], x)
+    proj = h @ params["in_proj"].astype(h.dtype)
+    z, xin, Bm, Cm, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    prev = cache.conv if cache is not None else None
+    conv_out, new_conv = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], prev
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xin = conv_out[..., :d_inner]
+    Bm = conv_out[..., d_inner: d_inner + g * n]
+    Cm = conv_out[..., d_inner + g * n:]
+
+    b, s, _ = x.shape
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(params["A_log"])
+    xh = xin.reshape(b, s, nheads, ssm.head_dim)
+    Bm = Bm.reshape(b, s, g, n)
+    Cm = Cm.reshape(b, s, g, n)
+
+    if cache is None:
+        if ssd_impl == "pallas":
+            from repro.kernels import ssd_ops
+
+            y, final_state = ssd_ops.ssd(
+                xh, dt, A, Bm, Cm, chunk=ssm.chunk_size
+            )
+        else:
+            y, final_state = ssd_chunked(
+                xh, dt, A, Bm, Cm, chunk=min(ssm.chunk_size, s)
+            )
+        new_cache = None
+    else:
+        y, new_ssm = ssd_decode_step(
+            xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], cache.ssm
+        )
+        y = y[:, None]
+        new_cache = MambaCache(conv=new_conv, ssm=new_ssm)
+
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, s, d_inner)
+    y = y * jax.nn.silu(z)
+    y = nn.apply_rmsnorm(params["out_norm"], y)
+    out = residual + y @ params["out_proj"].astype(y.dtype)
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int) -> MambaCache:
+    ssm = cfg.ssm
+    d_inner, nheads, g, n, conv_ch = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, ssm.conv_width - 1, conv_ch), jnp.bfloat16),
+        ssm=jnp.zeros((batch, nheads, ssm.head_dim, n), jnp.float32),
+    )
+
+
+# --- full Mamba2 model ------------------------------------------------------------------
+class Mamba2Model:
+    def __init__(self, cfg: ArchConfig, *, dtype=jnp.bfloat16,
+                 ssd_impl: str = "xla", **_):
+        assert cfg.ssm is not None
+        self.cfg = cfg
+        self.dtype = dtype
+        self.ssd_impl = ssd_impl
+
+    def init(self, rng) -> PyTree:
+        cfg = self.cfg
+        ke, kl, kh = jax.random.split(rng, 3)
+        layer_keys = jax.random.split(kl, cfg.num_layers)
+        params = {
+            "embed": nn.init_embedding(ke, cfg.vocab_size, cfg.d_model),
+            "layers": jax.vmap(lambda k: init_mamba_block(k, cfg))(layer_keys),
+            "ln_final": nn.init_rmsnorm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": jax.random.normal(
+                    kh, (cfg.d_model, cfg.vocab_size), jnp.float32
+                ) * (1.0 / math.sqrt(cfg.d_model))
+            }
+        return params
+
+    def forward(self, params, tokens, extra_embeds=None, last_only=False):
+        x = nn.apply_embedding(params["embed"], tokens, self.dtype)
+
+        def block_fn(x, bp):
+            y, _ = apply_mamba_block(bp, x, self.cfg, ssd_impl=self.ssd_impl)
+            return y, None
+
+        if self.cfg.remat:
+            block_fn = jax.checkpoint(block_fn)
+        if self.cfg.scan_layers:
+            x, _ = jax.lax.scan(block_fn, x, params["layers"])
+        else:
+            for i in range(self.cfg.num_layers):
+                bp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+                x, _ = block_fn(x, bp)
+        if last_only:
+            x = x[:, -1:]
+        x = nn.apply_rmsnorm(params["ln_final"], x)
+        return self._lm_head(params, x), 0.0
+
+    def _lm_head(self, params, x):
+        if self.cfg.tie_embeddings:
+            return x @ params["embed"]["table"].astype(x.dtype).T
+        return x @ params["lm_head"]["w"].astype(x.dtype)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        def one(_):
+            return init_mamba_cache(self.cfg, batch)
+
+        return jax.vmap(one)(jnp.arange(self.cfg.num_layers))
+
+    def decode_step(self, params, tokens, cache, position):
+        x = nn.apply_embedding(params["embed"], tokens, self.dtype)
+
+        def block_fn(x, scanned):
+            bp, c = scanned
+            y, nc = apply_mamba_block(bp, x, self.cfg, cache=c)
+            return y, nc
+
+        if self.cfg.scan_layers:
+            x, new_cache = jax.lax.scan(
+                block_fn, x, (params["layers"], cache)
+            )
+        else:
+            ncs = []
+            for i in range(self.cfg.num_layers):
+                bp = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+                cu = jax.tree_util.tree_map(lambda c: c[i], cache)
+                x, nc = block_fn(x, (bp, cu))
+                ncs.append(nc)
+            new_cache = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *ncs
+            )
+        x = nn.apply_rmsnorm(params["ln_final"], x)
+        return self._lm_head(params, x), new_cache

@@ -1,0 +1,475 @@
+"""Decoder-only / encoder-decoder transformer covering the assigned
+architectures (dense, MoE, VLM, audio enc-dec).
+
+Structure: pre-norm blocks, GQA attention (repro.models.layers), SwiGLU/
+GeGLU FFN or MoE FFN, RMSNorm, RoPE.  Layers are *scanned* (stacked
+params + ``jax.lax.scan``) so 48-88-layer configs lower to compact HLO,
+with optional per-block ``jax.checkpoint`` (remat).
+
+Three entry points per model:
+  * ``forward(params, tokens, ...)``   — train/prefill full-sequence
+  * ``init_cache(batch, max_len)``     — decode cache pytree
+  * ``decode_step(params, tokens, cache)`` — single-token serve step
+
+Multimodal handling (the one allowed stub): ``extra_embeds`` are
+precomputed patch/frame embeddings (B, P, D) prepended to the token
+embeddings (VLM), or used as the encoder source sequence (audio enc-dec).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import nn
+from repro.models.layers import (
+    AttentionConfig,
+    KVCache,
+    apply_attention,
+    apply_cross_attention,
+    apply_glu_ffn,
+    encode_memory_kv,
+    init_attention,
+    init_glu_ffn,
+)
+from repro.models.moe import apply_moe, init_moe
+
+PyTree = Any
+
+
+def _attn_cfg(cfg: ArchConfig, sliding_window: Optional[int] = None,
+              causal: bool = True) -> AttentionConfig:
+    return AttentionConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        causal=causal,
+        sliding_window=sliding_window,
+        logit_soft_cap=cfg.logit_soft_cap,
+    )
+
+
+class Transformer:
+    """Decoder-only transformer (dense or MoE); also hosts the VLM stub."""
+
+    def __init__(self, cfg: ArchConfig, *, attn_impl: str = "xla",
+                 dtype=jnp.bfloat16, sliding_window: Optional[int] = None):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.dtype = dtype
+        self.sliding_window = sliding_window
+        # scan unit layout: a unit is the params of `moe_every` consecutive
+        # blocks, the last of which is MoE (if cfg.moe). Dense: unit = 1 block.
+        if cfg.moe is not None:
+            assert cfg.num_layers % cfg.moe_every == 0, (
+                f"{cfg.name}: num_layers must divide moe_every"
+            )
+            self.unit_size = cfg.moe_every
+            self.num_units = cfg.num_layers // cfg.moe_every
+        else:
+            self.unit_size = 1
+            self.num_units = cfg.num_layers
+
+    # --- init -------------------------------------------------------------------
+    def _init_block(self, rng, moe: bool) -> Dict:
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(rng, 4)
+        block = {
+            "ln_attn": nn.init_rmsnorm(cfg.d_model),
+            "attn": init_attention(k1, _attn_cfg(cfg)),
+            "ln_ffn": nn.init_rmsnorm(cfg.d_model),
+        }
+        if moe:
+            block["moe"] = init_moe(k2, cfg.d_model, cfg.moe)
+        else:
+            block["ffn"] = init_glu_ffn(k3, cfg.d_model, cfg.d_ff)
+        return block
+
+    def _init_unit(self, rng) -> Dict:
+        keys = jax.random.split(rng, self.unit_size)
+        unit = {}
+        for i in range(self.unit_size):
+            is_moe = self.cfg.moe is not None and i == self.unit_size - 1
+            unit[f"block{i}"] = self._init_block(keys[i], is_moe)
+        return unit
+
+    def init(self, rng) -> PyTree:
+        cfg = self.cfg
+        k_embed, k_layers, k_head = jax.random.split(rng, 3)
+        layer_keys = jax.random.split(k_layers, self.num_units)
+        # always stacked (scan_layers=False just unrolls the apply loop —
+        # used by the roofline depth-extrapolation, see benchmarks/)
+        layers = jax.vmap(self._init_unit)(layer_keys)
+        params = {
+            "embed": nn.init_embedding(k_embed, cfg.vocab_size, cfg.d_model),
+            "layers": layers,
+            "ln_final": nn.init_rmsnorm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": jax.random.normal(
+                    k_head, (cfg.d_model, cfg.vocab_size), jnp.float32
+                ) * (1.0 / math.sqrt(cfg.d_model))
+            }
+        return params
+
+    # --- blocks ---------------------------------------------------------------------
+    def _apply_block(self, bp: Dict, x, positions, cache=None,
+                     window=None):
+        cfg = self.cfg
+        acfg = _attn_cfg(cfg, sliding_window=window)
+        h = nn.apply_rmsnorm(bp["ln_attn"], x)
+        attn_out, new_cache = apply_attention(
+            bp["attn"], h, acfg, positions=positions, cache=cache,
+            attn_impl=self.attn_impl,
+        )
+        x = x + attn_out
+        h = nn.apply_rmsnorm(bp["ln_ffn"], x)
+        if "moe" in bp:
+            ffn_out, aux = apply_moe(bp["moe"], h, cfg.moe, cfg.activation)
+        else:
+            ffn_out, aux = apply_glu_ffn(bp["ffn"], h, cfg.activation), 0.0
+        return x + ffn_out, new_cache, aux
+
+    def _apply_unit(self, up: Dict, x, positions, caches=None, window=None):
+        new_caches = {}
+        aux_total = 0.0
+        for i in range(self.unit_size):
+            c = caches[f"block{i}"] if caches is not None else None
+            x, nc, aux = self._apply_block(
+                up[f"block{i}"], x, positions, cache=c, window=window
+            )
+            aux_total = aux_total + aux
+            if nc is not None:
+                new_caches[f"block{i}"] = nc
+        return x, (new_caches if caches is not None else None), aux_total
+
+    # --- forward (train / prefill) -----------------------------------------------------
+    def forward(
+        self,
+        params: PyTree,
+        tokens: jnp.ndarray,
+        extra_embeds: Optional[jnp.ndarray] = None,
+        last_only: bool = False,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """tokens: (B, S) -> (logits (B, S_total, V), aux_loss).
+
+        extra_embeds (B, P, D): VLM patch embeddings prepended (early
+        fusion); logits cover the full fused sequence.
+        last_only: compute logits for the final position only (prefill
+        serving path — avoids materializing the (B, S, V) tensor).
+        """
+        cfg = self.cfg
+        x = nn.apply_embedding(params["embed"], tokens, self.dtype)
+        if extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(self.dtype), x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        window = self.sliding_window
+
+        def unit_fn(x, up):
+            y, _, aux = self._apply_unit(up, x, positions, window=window)
+            return y, aux
+
+        if cfg.remat:
+            unit_fn = jax.checkpoint(unit_fn)
+
+        if cfg.scan_layers:
+            x, auxes = jax.lax.scan(unit_fn, x, params["layers"])
+            aux = jnp.sum(auxes) if cfg.moe is not None else 0.0
+        else:
+            aux = 0.0
+            for i in range(self.num_units):
+                up = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+                x, a = unit_fn(x, up)
+                aux = aux + a
+
+        if last_only:
+            x = x[:, -1:]
+        x = nn.apply_rmsnorm(params["ln_final"], x)
+        logits = self._lm_head(params, x)
+        return logits, aux
+
+    def _lm_head(self, params, x):
+        if self.cfg.tie_embeddings:
+            w = params["embed"]["table"].astype(x.dtype)
+            return x @ w.T
+        return x @ params["lm_head"]["w"].astype(x.dtype)
+
+    # --- decode ------------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        """Cache pytree matching the scanned layer stack.
+
+        For sliding-window mode the per-layer buffer is window-sized
+        (ring buffer) — this is what makes long_500k sub-quadratic in
+        memory and compute for full-attention archs.
+        """
+        cfg = self.cfg
+        s_max = (
+            min(max_len, self.sliding_window)
+            if self.sliding_window is not None else max_len
+        )
+
+        def one(_):
+            return {
+                f"block{i}": KVCache.zeros(
+                    batch, s_max, cfg.num_kv_heads, cfg.resolved_head_dim,
+                    dtype,
+                )
+                for i in range(self.unit_size)
+            }
+
+        return jax.vmap(one)(jnp.arange(self.num_units))
+
+    def prefill_into_cache(self, params, tokens, cache):
+        """(Simplified) sequential prefill is exercised via decode_step;
+        benchmark prefill uses ``forward``."""
+        raise NotImplementedError
+
+    def decode_step(
+        self,
+        params: PyTree,
+        tokens: jnp.ndarray,          # (B, 1)
+        cache: PyTree,
+        position: jnp.ndarray,        # scalar int32: absolute position
+    ) -> Tuple[jnp.ndarray, PyTree]:
+        cfg = self.cfg
+        x = nn.apply_embedding(params["embed"], tokens, self.dtype)
+        b = x.shape[0]
+        positions = jnp.broadcast_to(position, (b, 1)).astype(jnp.int32)
+        window = self.sliding_window
+
+        def unit_fn(x, scanned):
+            up, cache_u = scanned
+            y, new_cache, _ = self._apply_unit(
+                up, x, positions, caches=cache_u, window=window
+            )
+            return y, new_cache
+
+        if cfg.scan_layers:
+            x, new_cache = jax.lax.scan(unit_fn, x, (params["layers"], cache))
+        else:
+            ncs = []
+            for i in range(self.num_units):
+                up = jax.tree_util.tree_map(lambda p: p[i], params["layers"])
+                cu = jax.tree_util.tree_map(lambda c: c[i], cache)
+                x, nc = unit_fn(x, (up, cu))
+                ncs.append(nc)
+            new_cache = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *ncs
+            )
+
+        x = nn.apply_rmsnorm(params["ln_final"], x)
+        return self._lm_head(params, x), new_cache
+
+
+# --- encoder-decoder (audio: seamless-m4t) ------------------------------------------------
+class EncDecCache(NamedTuple):
+    self_cache: PyTree
+    cross_kv: PyTree            # per decoder unit: (k, v) from encoder
+
+
+class EncoderDecoder:
+    """Enc-dec transformer; the audio frontend is stubbed to frame
+    embeddings (B, S_enc, D) per the multimodal carve-out."""
+
+    def __init__(self, cfg: ArchConfig, *, attn_impl: str = "xla",
+                 dtype=jnp.bfloat16, sliding_window: Optional[int] = None):
+        assert cfg.encoder is not None
+        self.cfg = cfg
+        self.dtype = dtype
+        self.attn_impl = attn_impl
+        self.sliding_window = sliding_window
+        self.dec = Transformer(cfg, attn_impl=attn_impl, dtype=dtype,
+                               sliding_window=sliding_window)
+
+    # encoder block: bidirectional self-attn + FFN
+    def _init_enc_block(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        return {
+            "ln_attn": nn.init_rmsnorm(cfg.d_model),
+            "attn": init_attention(k1, _attn_cfg(cfg, causal=False)),
+            "ln_ffn": nn.init_rmsnorm(cfg.d_model),
+            "ffn": init_glu_ffn(k2, cfg.d_model, cfg.d_ff),
+        }
+
+    def _init_dec_unit(self, rng):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        unit = self.dec._init_unit(k1)
+        for i in range(self.dec.unit_size):
+            kc, k2 = jax.random.split(k2)
+            unit[f"block{i}"]["ln_cross"] = nn.init_rmsnorm(cfg.d_model)
+            unit[f"block{i}"]["cross"] = init_attention(kc, _attn_cfg(cfg))
+        return unit
+
+    def init(self, rng) -> PyTree:
+        cfg = self.cfg
+        k_enc, k_dec, k_e, k_h, k_ln = jax.random.split(rng, 5)
+        enc_keys = jax.random.split(k_enc, cfg.encoder.num_layers)
+        dec_keys = jax.random.split(k_dec, self.dec.num_units)
+        params = {
+            "embed": nn.init_embedding(k_e, cfg.vocab_size, cfg.d_model),
+            "enc_layers": jax.vmap(self._init_enc_block)(enc_keys),
+            "ln_enc": nn.init_rmsnorm(cfg.d_model),
+            "dec_layers": jax.vmap(self._init_dec_unit)(dec_keys),
+            "ln_final": nn.init_rmsnorm(cfg.d_model),
+            "lm_head": {
+                "w": jax.random.normal(
+                    k_h, (cfg.d_model, cfg.vocab_size), jnp.float32
+                ) * (1.0 / math.sqrt(cfg.d_model))
+            },
+        }
+        return params
+
+    def encode(self, params, source_embeds: jnp.ndarray) -> jnp.ndarray:
+        """source_embeds: stubbed frames (B, S_enc, D) -> memory."""
+        cfg = self.cfg
+        x = source_embeds.astype(self.dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        acfg = _attn_cfg(cfg, causal=False)
+
+        def block_fn(x, bp):
+            h = nn.apply_rmsnorm(bp["ln_attn"], x)
+            a, _ = apply_attention(bp["attn"], h, acfg, positions=positions,
+                                   attn_impl=self.attn_impl)
+            x = x + a
+            h = nn.apply_rmsnorm(bp["ln_ffn"], x)
+            return x + apply_glu_ffn(bp["ffn"], h, cfg.activation), None
+
+        if cfg.remat:
+            block_fn = jax.checkpoint(block_fn)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(block_fn, x, params["enc_layers"])
+        else:
+            for i in range(cfg.encoder.num_layers):
+                bp = jax.tree_util.tree_map(
+                    lambda p: p[i], params["enc_layers"]
+                )
+                x, _ = block_fn(x, bp)
+        return nn.apply_rmsnorm(params["ln_enc"], x)
+
+    def _dec_unit_fn(self, up, x, positions, memory_or_kv, caches=None,
+                     precomputed_kv: bool = False):
+        cfg = self.cfg
+        acfg = _attn_cfg(cfg, sliding_window=self.sliding_window)
+        new_caches = {}
+        for i in range(self.dec.unit_size):
+            bp = up[f"block{i}"]
+            h = nn.apply_rmsnorm(bp["ln_attn"], x)
+            c = caches[f"block{i}"] if caches is not None else None
+            a, nc = apply_attention(bp["attn"], h, acfg, positions=positions,
+                                    cache=c, attn_impl=self.attn_impl)
+            x = x + a
+            if nc is not None:
+                new_caches[f"block{i}"] = nc
+            h = nn.apply_rmsnorm(bp["ln_cross"], x)
+            kv = (
+                memory_or_kv[f"block{i}"] if precomputed_kv
+                else encode_memory_kv(bp["cross"], memory_or_kv, acfg)
+            )
+            x = x + apply_cross_attention(bp["cross"], h, kv, acfg)
+            h = nn.apply_rmsnorm(bp["ln_ffn"], x)
+            x = x + apply_glu_ffn(bp["ffn"], h, cfg.activation)
+        return x, (new_caches if caches is not None else None)
+
+    def forward(self, params, tokens, source_embeds, last_only=False):
+        """Teacher-forced training forward: (B, S_dec) + (B, S_enc, D)."""
+        memory = self.encode(params, source_embeds)
+        x = nn.apply_embedding(params["embed"], tokens, self.dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def unit_fn(x, up):
+            y, _ = self._dec_unit_fn(up, x, positions, memory)
+            return y, None
+
+        if self.cfg.remat:
+            unit_fn = jax.checkpoint(unit_fn)
+        if self.cfg.scan_layers:
+            x, _ = jax.lax.scan(unit_fn, x, params["dec_layers"])
+        else:
+            for i in range(self.dec.num_units):
+                up = jax.tree_util.tree_map(
+                    lambda p: p[i], params["dec_layers"]
+                )
+                x, _ = unit_fn(x, up)
+        if last_only:
+            x = x[:, -1:]
+        x = nn.apply_rmsnorm(params["ln_final"], x)
+        return x @ params["lm_head"]["w"].astype(x.dtype), 0.0
+
+    def init_cache(self, params, source_embeds, max_len: int,
+                   dtype=jnp.bfloat16) -> EncDecCache:
+        """Encode once; precompute per-layer cross K/V; allocate self cache."""
+        cfg = self.cfg
+        memory = self.encode(params, source_embeds)
+        acfg = _attn_cfg(cfg)
+        b = source_embeds.shape[0]
+        s_max = (
+            min(max_len, self.sliding_window)
+            if self.sliding_window is not None else max_len
+        )
+
+        def unit_kv(up):
+            return {
+                f"block{i}": encode_memory_kv(
+                    up[f"block{i}"]["cross"], memory, acfg
+                )
+                for i in range(self.dec.unit_size)
+            }
+
+        cross_kv = jax.vmap(unit_kv)(params["dec_layers"])
+
+        def one(_):
+            return {
+                f"block{i}": KVCache.zeros(
+                    b, s_max, cfg.num_kv_heads, cfg.resolved_head_dim, dtype
+                )
+                for i in range(self.dec.unit_size)
+            }
+
+        self_cache = jax.vmap(one)(jnp.arange(self.dec.num_units))
+        return EncDecCache(self_cache=self_cache, cross_kv=cross_kv)
+
+    def decode_step(self, params, tokens, cache: EncDecCache,
+                    position: jnp.ndarray):
+        x = nn.apply_embedding(params["embed"], tokens, self.dtype)
+        b = x.shape[0]
+        positions = jnp.broadcast_to(position, (b, 1)).astype(jnp.int32)
+
+        def unit_fn(x, scanned):
+            up, cu, kv = scanned
+            y, nc = self._dec_unit_fn(up, x, positions, kv, caches=cu,
+                                      precomputed_kv=True)
+            return y, nc
+
+        if self.cfg.scan_layers:
+            x, new_self = jax.lax.scan(
+                unit_fn, x, (params["dec_layers"], cache.self_cache,
+                             cache.cross_kv)
+            )
+        else:
+            ncs = []
+            for i in range(self.dec.num_units):
+                sl = jax.tree_util.tree_map(
+                    lambda p: p[i],
+                    (params["dec_layers"], cache.self_cache,
+                     cache.cross_kv),
+                )
+                x, nc = unit_fn(x, sl)
+                ncs.append(nc)
+            new_self = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *ncs
+            )
+        x = nn.apply_rmsnorm(params["ln_final"], x)
+        logits = x @ params["lm_head"]["w"].astype(x.dtype)
+        return logits, EncDecCache(self_cache=new_self, cross_kv=cache.cross_kv)

@@ -1,0 +1,20 @@
+"""Pure-JAX optimizers (no optax dependency in this offline container)."""
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adam,
+    adafactor,
+    clip_by_global_norm,
+    get_optimizer,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adam",
+    "adafactor",
+    "clip_by_global_norm",
+    "get_optimizer",
+]

@@ -1,0 +1,30 @@
+"""Orbital mechanics substrate: Walker-delta constellations, visibility."""
+from repro.orbits.constellation import (
+    ConstellationConfig,
+    GroundStation,
+    Satellite,
+    WalkerDelta,
+    orbital_period,
+    orbital_speed,
+)
+from repro.orbits.visibility import (
+    elevation_angle,
+    visibility_mask,
+    visibility_windows,
+    VisibilityWindow,
+)
+from repro.orbits.prediction import VisibilityPredictor
+
+__all__ = [
+    "ConstellationConfig",
+    "GroundStation",
+    "Satellite",
+    "WalkerDelta",
+    "orbital_period",
+    "orbital_speed",
+    "elevation_angle",
+    "visibility_mask",
+    "visibility_windows",
+    "VisibilityWindow",
+    "VisibilityPredictor",
+]

@@ -1,0 +1,101 @@
+"""Visibility prediction service used by the distributed scheduler.
+
+The paper (§IV-B) predicts each satellite's visibility using the method
+of Ali et al. [11].  Because every satellite knows the constellation
+configuration and the GS position, each can deterministically compute the
+same access-window table ``AW(k, GS)`` — this is what makes the sink
+selection *distributed without coordination*: all satellites run the same
+pure function of shared state and agree on the result.
+
+``VisibilityPredictor`` precomputes windows over a horizon and answers:
+  * next_window(sat, t): the first window with t_end > t,
+  * next_window_with_duration(sat, t, min_duration): first window after t
+    that is long enough (the AW(c_opt, GS) >= T*_sum constraint),
+  * wait_time(sat, t): t_wait — time until the satellite next becomes
+    visible (0 if currently inside a window).
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Dict, List, Optional, Tuple
+
+from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
+from repro.orbits.visibility import VisibilityWindow, visibility_windows
+
+
+class VisibilityPredictor:
+    def __init__(
+        self,
+        walker: WalkerDelta,
+        gs: GroundStation,
+        horizon_s: float,
+        t0: float = 0.0,
+        coarse_step_s: float = 10.0,
+    ):
+        self.walker = walker
+        self.gs = gs
+        self.t0 = t0
+        self.horizon_s = horizon_s
+        self._windows = visibility_windows(
+            walker, gs, t0, t0 + horizon_s, coarse_step_s=coarse_step_s
+        )
+        # per-satellite sorted window lists + start-time index for bisect
+        self._by_sat: Dict[Tuple[int, int], List[VisibilityWindow]] = {}
+        for w in self._windows:
+            self._by_sat.setdefault((w.plane, w.slot), []).append(w)
+        self._starts: Dict[Tuple[int, int], List[float]] = {
+            k: [w.t_start for w in v] for k, v in self._by_sat.items()
+        }
+
+    @property
+    def windows(self) -> List[VisibilityWindow]:
+        return list(self._windows)
+
+    def windows_of(self, sat: Satellite) -> List[VisibilityWindow]:
+        return list(self._by_sat.get((sat.plane, sat.slot), []))
+
+    def current_window(
+        self, sat: Satellite, t: float
+    ) -> Optional[VisibilityWindow]:
+        """Window containing t, if the satellite is visible right now."""
+        wins = self._by_sat.get((sat.plane, sat.slot), [])
+        starts = self._starts.get((sat.plane, sat.slot), [])
+        i = bisect.bisect_right(starts, t) - 1
+        if i >= 0 and wins[i].contains(t):
+            return wins[i]
+        return None
+
+    def next_window(
+        self, sat: Satellite, t: float
+    ) -> Optional[VisibilityWindow]:
+        """First window with t_end > t (possibly the one containing t)."""
+        wins = self._by_sat.get((sat.plane, sat.slot), [])
+        for w in wins:
+            if w.t_end > t:
+                return w
+        return None
+
+    def next_window_with_duration(
+        self, sat: Satellite, t: float, min_duration: float
+    ) -> Optional[VisibilityWindow]:
+        """First window after t whose *remaining* duration >= min_duration.
+
+        This is the paper's sink feasibility constraint
+        ``AW(c_opt, GS) >= T*_sum``: the access window must be long enough
+        to exchange the partial global model with the GS.
+        """
+        wins = self._by_sat.get((sat.plane, sat.slot), [])
+        for w in wins:
+            if w.t_end <= t:
+                continue
+            effective_start = max(w.t_start, t)
+            if w.t_end - effective_start >= min_duration:
+                return w
+        return None
+
+    def wait_time(self, sat: Satellite, t: float) -> Optional[float]:
+        """t_wait(k): time from t until the satellite is next visible."""
+        w = self.next_window(sat, t)
+        if w is None:
+            return None
+        return max(0.0, w.t_start - t)

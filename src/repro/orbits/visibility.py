@@ -1,0 +1,144 @@
+"""Satellite-GS visibility: elevation angles, masks, and access windows.
+
+The paper's visibility condition (§III):
+
+  a satellite k is visible from GS g at time t iff the line-of-sight is
+  not blocked by the Earth and the elevation angle is at least the GS's
+  minimum elevation angle theta_min:
+
+    angle(r_g(t), r_k(t) - r_g(t)) <= pi/2 - theta_min
+
+which is equivalent to  elevation(k, g, t) >= theta_min.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.orbits.constellation import GroundStation, WalkerDelta
+
+
+def elevation_angle(r_sat: np.ndarray, r_gs: np.ndarray) -> np.ndarray:
+    """Elevation of the satellite above the GS's local horizon [rad].
+
+    Args:
+      r_sat: (..., 3) satellite ECI positions [m].
+      r_gs:  (..., 3) GS ECI positions [m] (broadcastable to r_sat).
+
+    Returns:
+      (...) elevation angles [rad]; >= 0 means above the horizon.
+    """
+    d = r_sat - r_gs
+    d_norm = np.linalg.norm(d, axis=-1)
+    g_norm = np.linalg.norm(r_gs, axis=-1)
+    # sin(elevation) = (d . r_gs_hat) / |d|
+    sin_el = np.einsum("...i,...i->...", d, r_gs) / (d_norm * g_norm)
+    return np.arcsin(np.clip(sin_el, -1.0, 1.0))
+
+
+def visibility_mask(
+    walker: WalkerDelta,
+    gs: GroundStation,
+    t: np.ndarray,
+) -> np.ndarray:
+    """Boolean visibility (L, K, T) of every satellite at every time."""
+    r_sat = walker.positions(t)            # (L, K, T, 3)
+    r_gs = gs.eci(t)                       # (T, 3)
+    el = elevation_angle(r_sat, r_gs[None, None])
+    return el >= np.radians(gs.min_elevation_deg)
+
+
+@dataclasses.dataclass(frozen=True)
+class VisibilityWindow:
+    """One access window AW(k, GS): [t_start, t_end] of the r-th visit."""
+
+    plane: int
+    slot: int
+    t_start: float
+    t_end: float
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+    def contains(self, t: float) -> bool:
+        return self.t_start <= t <= self.t_end
+
+
+def _refine_crossing(
+    f, lo: float, hi: float, rising: bool, iters: int = 40
+) -> float:
+    """Bisection root of the elevation-threshold crossing in [lo, hi]."""
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        above = f(mid) >= 0.0
+        if above == rising:
+            # crossing is in [lo, mid] for rising (f goes -..+), symmetric
+            hi = mid
+        else:
+            lo = mid
+    return 0.5 * (lo + hi)
+
+
+def visibility_windows(
+    walker: WalkerDelta,
+    gs: GroundStation,
+    t_start: float,
+    t_end: float,
+    coarse_step_s: float = 10.0,
+    refine: bool = True,
+) -> List[VisibilityWindow]:
+    """All access windows of every satellite within [t_start, t_end].
+
+    Coarse grid scan + bisection refinement of rise/set times (the
+    deterministic analogue of the visibility prediction method of Ali et
+    al. [11] used by the paper's scheduler).
+
+    Returns windows sorted by t_start.
+    """
+    t = np.arange(t_start, t_end + coarse_step_s, coarse_step_s)
+    mask = visibility_mask(walker, gs, t)          # (L, K, T)
+    min_el = np.radians(gs.min_elevation_deg)
+
+    windows: List[VisibilityWindow] = []
+    L, K, T = mask.shape
+    for p in range(L):
+        for s in range(K):
+            m = mask[p, s]
+            # transitions: diff +1 = rise between i and i+1; -1 = set
+            dm = np.diff(m.astype(np.int8))
+            rises = list(np.nonzero(dm == 1)[0])
+            sets_ = list(np.nonzero(dm == -1)[0])
+            # handle windows clipped by the scan interval
+            starts: List[float] = []
+            ends: List[float] = []
+            sat = walker.satellites[p * K + s]
+
+            def el_fn(tt: float) -> float:
+                r_s = walker.position_of(sat, tt)
+                r_g = gs.eci(np.asarray(tt))
+                return float(elevation_angle(r_s, r_g) - min_el)
+
+            if m[0]:
+                starts.append(t[0])
+            for i in rises:
+                if refine:
+                    starts.append(_refine_crossing(el_fn, t[i], t[i + 1], True))
+                else:
+                    starts.append(t[i + 1])
+            for i in sets_:
+                if refine:
+                    ends.append(_refine_crossing(el_fn, t[i], t[i + 1], False))
+                else:
+                    ends.append(t[i])
+            if m[-1]:
+                ends.append(t[-1])
+            for a, b in zip(starts, ends):
+                if b > a:
+                    windows.append(
+                        VisibilityWindow(plane=p, slot=s, t_start=a, t_end=b)
+                    )
+    windows.sort(key=lambda w: w.t_start)
+    return windows

@@ -1,0 +1,22 @@
+"""Training/serving steps for the assigned architectures."""
+from repro.train.steps import (
+    TrainState,
+    make_init_fn,
+    make_train_step,
+    make_serve_step,
+    lm_loss,
+)
+from repro.train.fedleo_step import (
+    make_fedleo_local_step,
+    make_fedleo_aggregate,
+)
+
+__all__ = [
+    "TrainState",
+    "make_init_fn",
+    "make_train_step",
+    "make_serve_step",
+    "lm_loss",
+    "make_fedleo_local_step",
+    "make_fedleo_aggregate",
+]

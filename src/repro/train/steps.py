@@ -1,0 +1,140 @@
+"""train_step / serve_step builders for every architecture family.
+
+``make_train_step(model, optimizer)`` returns a pure function
+  (state, batch) -> (state, metrics)
+suitable for jit/pjit lowering with ShapeDtypeStruct inputs (the
+multi-pod dry-run path) and for real CPU smoke execution.
+
+Batches are dicts:
+  LM:      {"tokens": (B, S) int32, "extra": optional modality embeds}
+  enc-dec: {"tokens": (B, S) int32, "source": (B, S_enc, D)}
+Decode (serve_step): token (B, 1) + cache + position.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, clip_by_global_norm
+from repro.optim.optimizers import apply_updates
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: PyTree
+    step: jnp.ndarray
+
+
+def lm_loss(logits: jnp.ndarray, tokens: jnp.ndarray,
+            num_prefix: int = 0) -> jnp.ndarray:
+    """Next-token cross-entropy.  logits may include ``num_prefix``
+    non-text (vision/audio) positions prepended; they are excluded."""
+    if num_prefix:
+        logits = logits[:, num_prefix:]
+    pred = logits[:, :-1]
+    tgt = tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def make_init_fn(model) -> Callable:
+    def init(rng) -> PyTree:
+        return model.init(rng)
+
+    return init
+
+
+def make_train_step(
+    model,
+    optimizer: Optimizer,
+    grad_clip: Optional[float] = 1.0,
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        if cfg.family == "audio":
+            logits, aux = model.forward(params, batch["tokens"],
+                                        batch["source"])
+            num_prefix = 0
+        elif cfg.family == "vlm":
+            logits, aux = model.forward(params, batch["tokens"],
+                                        extra_embeds=batch["extra"])
+            num_prefix = batch["extra"].shape[1]
+        else:
+            logits, aux = model.forward(params, batch["tokens"])
+            num_prefix = 0
+        loss = lm_loss(logits, batch["tokens"], num_prefix)
+        return loss + aux, loss
+
+    def train_step(state: TrainState, batch: Dict):
+        (total, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        if grad_clip is not None:
+            grads = clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1)
+        return new_state, {"loss": ce, "total_loss": total}
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    """Inference prefill: full-sequence forward, logits for the last
+    position only (never materializes the (B, S, V) tensor)."""
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            logits, _ = model.forward(params, batch["tokens"],
+                                      batch["source"], last_only=True)
+        elif cfg.family == "vlm":
+            logits, _ = model.forward(params, batch["tokens"],
+                                      extra_embeds=batch["extra"],
+                                      last_only=True)
+        else:
+            logits, _ = model.forward(params, batch["tokens"],
+                                      last_only=True)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(model) -> Callable:
+    """Single-token decode: (params, token, cache, position) ->
+    (next_token_logits, new_cache)."""
+
+    def serve_step(params, token, cache, position):
+        logits, new_cache = model.decode_step(params, token, cache, position)
+        return logits[:, -1, :], new_cache
+
+    return serve_step
+
+
+def make_greedy_decode(model, num_steps: int) -> Callable:
+    """Greedy autoregressive loop (lax.scan over serve_step)."""
+    serve_step = make_serve_step(model)
+
+    def decode(params, first_token, cache, start_pos):
+        def body(carry, _):
+            token, cache, pos = carry
+            logits, cache = serve_step(params, token, cache, pos)
+            nxt = jnp.argmax(logits, axis=-1, keepdims=True).astype(
+                token.dtype
+            )
+            return (nxt, cache, pos + 1), nxt[:, 0]
+
+        (_, cache, _), toks = jax.lax.scan(
+            body, (first_token, cache, start_pos), None, length=num_steps
+        )
+        return jnp.moveaxis(toks, 0, 1), cache
+
+    return decode

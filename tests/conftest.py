@@ -1,0 +1,10 @@
+import os
+
+# Smoke tests and benches must see ONE device — the 512-device flag is
+# set only inside repro.launch.dryrun (see MULTI-POD DRY-RUN rules).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

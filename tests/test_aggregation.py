@@ -1,0 +1,120 @@
+"""Aggregation math (eqs. 4/9) + non-IID weighting properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.aggregation import (
+    global_aggregate,
+    index_pytree,
+    noniid_weights,
+    partial_aggregate,
+    stack_pytrees,
+    weighted_average,
+)
+
+
+def _rand_tree(rng, k):
+    return {
+        "w": jnp.asarray(rng.standard_normal((k, 4, 3)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((k, 5)), jnp.float32),
+    }
+
+
+def test_weighted_average_matches_manual():
+    rng = np.random.default_rng(0)
+    k = 5
+    tree = _rand_tree(rng, k)
+    w = jnp.asarray(rng.random(k), jnp.float32)
+    out = weighted_average(tree, w)
+    wn = np.asarray(w) / np.asarray(w).sum()
+    np.testing.assert_allclose(
+        out["w"], np.einsum("k,kij->ij", wn, np.asarray(tree["w"])),
+        rtol=1e-5,
+    )
+
+
+@given(st.lists(st.integers(1, 1000), min_size=2, max_size=8))
+def test_partial_aggregate_is_convex(counts):
+    """Eq. (9): the partial model is a convex combination — it lies inside
+    the componentwise min/max envelope of the client models."""
+    rng = np.random.default_rng(1)
+    k = len(counts)
+    tree = _rand_tree(rng, k)
+    out = partial_aggregate(tree, counts)
+    for key in tree:
+        x = np.asarray(tree[key])
+        o = np.asarray(out[key])
+        assert (o <= x.max(axis=0) + 1e-5).all()
+        assert (o >= x.min(axis=0) - 1e-5).all()
+
+
+def test_identical_models_fixed_point():
+    """Aggregating identical models returns the same model (any weights)."""
+    rng = np.random.default_rng(2)
+    one = {"w": jnp.asarray(rng.standard_normal((3, 3)), jnp.float32)}
+    stacked = stack_pytrees([one, one, one])
+    out = global_aggregate(stacked, [10, 20, 30])
+    np.testing.assert_allclose(out["w"], one["w"], rtol=1e-6)
+
+
+def test_noniid_weights_class_coverage():
+    """Orbits holding exclusive classes keep influence despite small m_k
+    (the piggybacked-histogram weighting of §IV-A)."""
+    # orbit 0: tiny dataset but sole holder of classes 4-9
+    hists = np.array([
+        [0, 0, 0, 0, 10, 10, 10, 10, 10, 10],
+        [500, 500, 500, 500, 0, 0, 0, 0, 0, 0],
+        [500, 500, 500, 500, 0, 0, 0, 0, 0, 0],
+    ], dtype=float)
+    w = noniid_weights(hists)
+    assert abs(w.sum() - 1.0) < 1e-9
+    # orbit 0 holds 6 of 10 class "shares" -> weight 0.6
+    assert abs(w[0] - 0.6) < 1e-9
+    # m_k-proportional weighting would have given orbit 0 only 60/2060
+    m_weight = hists.sum(1) / hists.sum()
+    assert w[0] > 10 * m_weight[0]
+
+
+@given(st.integers(2, 6), st.integers(2, 10))
+def test_noniid_weights_uniform_when_balanced(k, c):
+    hists = np.full((k, c), 7.0)
+    w = noniid_weights(hists)
+    np.testing.assert_allclose(w, np.full(k, 1.0 / k), rtol=1e-9)
+
+
+def test_global_aggregate_blend():
+    rng = np.random.default_rng(3)
+    tree = _rand_tree(rng, 2)
+    hists = np.array([[100, 0], [0, 100]], dtype=float)
+    pure = global_aggregate(tree, [300, 100])
+    balanced = global_aggregate(tree, [300, 100], histograms=hists,
+                                noniid_alpha=1.0)
+    # fully balanced weighting = equal weights here (each holds one class)
+    manual = weighted_average(tree, jnp.asarray([0.5, 0.5]))
+    np.testing.assert_allclose(balanced["w"], manual["w"], rtol=1e-5)
+    assert not np.allclose(pure["w"], balanced["w"])
+
+
+def test_stack_index_roundtrip():
+    rng = np.random.default_rng(4)
+    trees = [
+        {"a": jnp.asarray(rng.standard_normal(3), jnp.float32)}
+        for _ in range(4)
+    ]
+    stacked = stack_pytrees(trees)
+    for i in range(4):
+        np.testing.assert_array_equal(
+            index_pytree(stacked, i)["a"], trees[i]["a"]
+        )
+
+
+def test_kernel_path_matches_jnp_path():
+    rng = np.random.default_rng(5)
+    tree = _rand_tree(rng, 4)
+    w = jnp.asarray([0.4, 0.3, 0.2, 0.1], jnp.float32)
+    a = weighted_average(tree, w, use_kernel=False)
+    b = weighted_average(tree, w, use_kernel=True)   # interpret on CPU
+    for key in tree:
+        np.testing.assert_allclose(a[key], b[key], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests: reduced same-family variants run one
+forward/train step + one decode step on CPU, asserting shapes + no NaNs.
+(The FULL configs are exercised via the dry-run only.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, build_model, get_config, get_smoke_config
+from repro.optim import get_optimizer
+from repro.train.steps import (
+    TrainState,
+    make_serve_step,
+    make_train_step,
+)
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32
+        )
+    }
+    if cfg.family == "vlm":
+        batch["extra"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision.num_patches, cfg.d_model)),
+            jnp.bfloat16,
+        )
+    if cfg.family == "audio":
+        batch["source"] = jnp.asarray(
+            rng.standard_normal((B, 32, cfg.d_model)), jnp.bfloat16
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_limits(arch):
+    """Smoke configs respect the reduced-variant contract."""
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    full = get_config(arch)
+    assert cfg.family == full.family
+    assert cfg.activation == full.activation
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = np.random.default_rng(hash(arch) % 2**31)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = get_optimizer(cfg.optimizer, cfg.learning_rate)
+    state = TrainState(params=params, opt_state=opt.init(params),
+                       step=jnp.zeros((), jnp.int32))
+    step = jax.jit(make_train_step(model, opt))
+    batch = _batch(cfg, rng)
+    state2, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss)
+    # a fresh model's LM loss must be near ln(vocab)
+    assert abs(loss - np.log(cfg.vocab_size)) < 1.5
+    # params actually changed
+    delta = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.sum(jnp.abs(l))),
+        jax.tree_util.tree_map(jnp.subtract, state2.params, state.params),
+        0.0,
+    )
+    assert delta > 0.0
+    assert int(state2.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_serve_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = np.random.default_rng(1)
+    params = model.init(jax.random.PRNGKey(0))
+    if cfg.family == "audio":
+        src = jnp.asarray(rng.standard_normal((B, 32, cfg.d_model)),
+                          jnp.bfloat16)
+        cache = model.init_cache(params, src, max_len=32)
+    else:
+        cache = model.init_cache(B, 32)
+    serve = jax.jit(make_serve_step(model))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.zeros((), jnp.int32)
+    for _ in range(3):
+        logits, cache = serve(params, tok, cache, pos)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        tok = jnp.argmax(logits, axis=-1, keepdims=True).astype(jnp.int32)
+        pos = pos + 1
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "mamba2-780m", "zamba2-1.2b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce the full-sequence forward
+    logits (cache correctness)."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    s = 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, s)), jnp.int32)
+    full_logits, _ = model.forward(params, tokens)
+    cache = model.init_cache(1, s)
+    outs = []
+    for t in range(s):
+        logits, cache = model.decode_step(
+            params, tokens[:, t: t + 1], cache, jnp.asarray(t, jnp.int32)
+        )
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits, np.float32),
+        np.asarray(full_logits, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact assigned dimensions."""
+    spec = {
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "mamba2-780m": (48, 1536, 0, 0, 0, 50280),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+    }
+    for arch, (nl, dm, nh, kv, dff, vocab) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == nl, arch
+        assert cfg.d_model == dm, arch
+        assert cfg.num_heads == nh, arch
+        assert cfg.num_kv_heads == kv, arch
+        assert cfg.d_ff == dff, arch
+        assert cfg.vocab_size == vocab, arch
+    # MoE / SSM extras
+    assert get_config("llama4-maverick-400b-a17b").moe.num_experts == 128
+    assert get_config("llama4-maverick-400b-a17b").moe.top_k == 1
+    assert get_config("kimi-k2-1t-a32b").moe.num_experts == 384
+    assert get_config("kimi-k2-1t-a32b").moe.top_k == 8
+    assert get_config("mamba2-780m").ssm.state_dim == 128
+    assert get_config("zamba2-1.2b").ssm.state_dim == 64
+    assert get_config("gemma-7b").resolved_head_dim == 256

@@ -1,0 +1,69 @@
+"""Link-budget model tests (paper eqs. 5-8, 13-16, 20)."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.comms import (
+    ISLConfig,
+    LinkConfig,
+    downlink_time,
+    free_space_path_loss,
+    isl_hop_time,
+    model_exchange_time,
+    propagation_time,
+    relay_time,
+    shannon_rate,
+    snr_db,
+    snr_linear,
+    transmission_time,
+    uplink_time,
+)
+
+
+def test_path_loss_formula():
+    # eq. (6) at d=1000 km, f=2.4 GHz
+    L = free_space_path_loss(1.0e6, 2.4e9)
+    expected_db = 20 * math.log10(4 * math.pi * 1.0e6 * 2.4e9 / 299792458.0)
+    assert abs(10 * math.log10(L) - expected_db) < 1e-9
+
+
+@given(st.floats(min_value=500e3, max_value=3000e3))
+def test_snr_decreases_with_distance(d):
+    cfg = LinkConfig()
+    assert snr_linear(cfg, d) > snr_linear(cfg, d * 1.5)
+
+
+def test_shannon_rate_capped_at_table1():
+    cfg = LinkConfig()
+    # paper Table I: R = 16 Mb/s max
+    r = shannon_rate(cfg, 1500e3)
+    assert r <= 16e6 + 1e-9
+    assert r > 1e6  # the 1500 km LEO link is comfortably above 1 Mb/s
+
+
+@given(
+    st.floats(min_value=1e6, max_value=1e9),
+    st.floats(min_value=500e3, max_value=3000e3),
+)
+def test_exchange_time_components(bits, d):
+    cfg = LinkConfig()
+    t = model_exchange_time(cfg, bits, d)
+    rate = shannon_rate(cfg, d)
+    assert t >= transmission_time(bits, rate)
+    assert t >= propagation_time(d)
+    assert abs(t - (bits / rate + d / 299792458.0)) < 1e-9
+
+
+def test_uplink_faster_than_downlink():
+    # uplink uses full B; downlink one RB of B/N (eqs. 15 vs 16)
+    cfg = LinkConfig()
+    bits = 32e6
+    assert uplink_time(cfg, bits, 1500e3) < downlink_time(cfg, bits, 1500e3)
+
+
+@given(st.integers(min_value=1, max_value=8),
+       st.floats(min_value=1e6, max_value=1e8))
+def test_relay_time_linear_in_hops(h, bits):
+    isl = ISLConfig()
+    assert abs(relay_time(isl, bits, h) - h * isl_hop_time(isl, bits)) < 1e-9

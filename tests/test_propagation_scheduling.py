@@ -1,0 +1,145 @@
+"""Model propagation + distributed sink scheduling tests (paper §IV)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.comms import ISLConfig, LinkConfig, downlink_time, isl_hop_time
+from repro.core.propagation import (
+    broadcast_schedule,
+    relay_completion_time,
+    relay_schedule,
+    ring_hops,
+)
+from repro.core.scheduling import first_visible_download, select_sink
+from repro.orbits import (
+    ConstellationConfig,
+    GroundStation,
+    VisibilityPredictor,
+    WalkerDelta,
+)
+
+
+@given(st.integers(2, 32), st.integers(0, 31), st.integers(0, 31))
+def test_ring_hops_metric(k, a, b):
+    a, b = a % k, b % k
+    # symmetric, bounded by floor(k/2), zero iff same slot
+    assert ring_hops(k, a, b) == ring_hops(k, b, a)
+    assert ring_hops(k, a, b) <= k // 2
+    assert (ring_hops(k, a, b) == 0) == (a == b)
+
+
+@given(st.integers(2, 16), st.integers(0, 15))
+def test_broadcast_reaches_all_exactly_once(k, src):
+    src = src % k
+    isl = ISLConfig()
+    events = broadcast_schedule(k, [src], [100.0], 1e7, isl)
+    assert len(events) == k
+    t_hop = isl_hop_time(isl, 1e7)
+    for e in events:
+        # receipt time = source time + hop-distance * hop time
+        assert abs(e.t_receive - (100.0 + ring_hops(k, src, e.slot) * t_hop)) < 1e-9
+    # the source receives instantly; the farthest waits floor(k/2) hops
+    assert events[src].t_receive == 100.0
+    assert max(e.hops for e in events) == k // 2
+
+
+def test_duplicate_drop_two_sources():
+    """Two visible satellites: each slot keeps the EARLIEST copy (§IV-A:
+    'simply drop the duplicate')."""
+    isl = ISLConfig()
+    k = 8
+    ev_two = broadcast_schedule(k, [0, 4], [0.0, 0.0], 1e7, isl)
+    ev_one = broadcast_schedule(k, [0], [0.0], 1e7, isl)
+    for e2, e1 in zip(ev_two, ev_one):
+        assert e2.t_receive <= e1.t_receive + 1e-12
+    # slot 4's copy must now be instant
+    assert ev_two[4].t_receive == 0.0
+
+
+@given(st.integers(2, 12))
+def test_relay_completion_is_max(k):
+    isl = ISLConfig()
+    t_ready = [float(i) for i in range(k)]
+    events = relay_schedule(k, 0, t_ready, 1e7, isl)
+    assert relay_completion_time(events) == max(e.t_receive for e in events)
+
+
+@pytest.fixture(scope="module")
+def sim_world():
+    cfg = ConstellationConfig(num_planes=3, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    gs = GroundStation()
+    pred = VisibilityPredictor(walker, gs, horizon_s=36 * 3600)
+    return cfg, walker, gs, pred
+
+
+def test_sink_selection_deterministic(sim_world):
+    """The scheduler is distributed: every satellite evaluates the same
+    pure function -> repeated evaluation must agree exactly."""
+    cfg, walker, gs, pred = sim_world
+    link, isl = LinkConfig(), ISLConfig()
+    t_done = [3600.0 + 60.0 * s for s in range(cfg.sats_per_plane)]
+    a = select_sink(walker=walker, gs=gs, predictor=pred, link=link,
+                    isl=isl, plane=0, t_train_done=t_done,
+                    payload_bits=3.2e7)
+    b = select_sink(walker=walker, gs=gs, predictor=pred, link=link,
+                    isl=isl, plane=0, t_train_done=t_done,
+                    payload_bits=3.2e7)
+    assert a is not None
+    assert (a.sink_slot, a.t_upload_done) == (b.sink_slot, b.t_upload_done)
+
+
+def test_sink_window_fits_upload(sim_world):
+    """AW(c_opt, GS) >= exchange time (eq. 22 feasibility)."""
+    cfg, walker, gs, pred = sim_world
+    link, isl = LinkConfig(), ISLConfig()
+    payload = 3.2e7
+    t_done = [7200.0] * cfg.sats_per_plane
+    d = select_sink(walker=walker, gs=gs, predictor=pred, link=link,
+                    isl=isl, plane=1, t_train_done=t_done,
+                    payload_bits=payload)
+    assert d is not None
+    assert d.window.t_end >= d.t_upload_done - 1e-6
+    assert d.t_upload_start >= d.t_models_at_sink - 1e-6
+    assert d.t_wait >= 0.0
+
+
+def test_sink_minimizes_completion(sim_world):
+    """No other feasible candidate finishes earlier than the chosen sink."""
+    cfg, walker, gs, pred = sim_world
+    from repro.core.propagation import ring_hops as rh
+    from repro.core.scheduling import _distance_at
+    link, isl = LinkConfig(), ISLConfig()
+    payload = 3.2e7
+    K = cfg.sats_per_plane
+    t_done = [1800.0 * (1 + s % 3) for s in range(K)]
+    d = select_sink(walker=walker, gs=gs, predictor=pred, link=link,
+                    isl=isl, plane=2, t_train_done=t_done,
+                    payload_bits=payload)
+    assert d is not None
+    t_hop = isl_hop_time(isl, payload)
+    from repro.orbits.constellation import Satellite
+    for cand in range(K):
+        t_ready = max(t_done[s] + rh(K, s, cand) * t_hop for s in range(K))
+        for w in pred.windows_of(Satellite(2, cand)):
+            if w.t_end <= t_ready:
+                continue
+            t0 = max(w.t_start, t_ready)
+            dd = _distance_at(walker, gs, Satellite(2, cand), t0)
+            tc = downlink_time(link, payload, dd)
+            if w.t_end - t0 >= tc:
+                assert t0 + tc >= d.t_upload_done - 1e-6
+                break
+
+
+def test_first_visible_download(sim_world):
+    cfg, walker, gs, pred = sim_world
+    link = LinkConfig()
+    out = first_visible_download(
+        walker=walker, gs=gs, predictor=pred, link=link, plane=0,
+        t=0.0, payload_bits=3.2e7,
+    )
+    assert out is not None
+    slot, t_done = out
+    assert 0 <= slot < cfg.sats_per_plane
+    assert t_done > 0.0

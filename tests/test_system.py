@@ -1,0 +1,97 @@
+"""End-to-end behaviour tests for the FedLEO system.
+
+The headline reproduction properties (paper Table II / §IV):
+  1. FedLEO converges under the paper's non-IID split;
+  2. its round latency beats the star topology (eq. 12 < eq. 10);
+  3. the whole stack (orbits -> comms -> scheduling -> training ->
+     aggregation) is driven end-to-end, including the U-Net/DeepGlobe
+     path and the paper's CNN path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedLEO, FederatedTask, SimConfig, TrainHyperparams
+from repro.core.fltask import cross_entropy_loss
+from repro.data import (
+    make_classification_dataset,
+    make_segmentation_dataset,
+    partition_iid,
+    partition_noniid_by_orbit,
+)
+from repro.models.cnn import apply_cnn, apply_unet, init_cnn, init_unet
+from repro.optim import get_optimizer
+
+
+def test_fedleo_end_to_end_noniid():
+    ds = make_classification_dataset("mnist-like", num_samples=1200, seed=0)
+    test = make_classification_dataset("mnist-like", num_samples=300,
+                                       seed=77)
+    clients = partition_noniid_by_orbit(ds, 5, 8)
+    hp = TrainHyperparams(local_epochs=100, learning_rate=0.05,
+                          batch_size=16)
+    task = FederatedTask(
+        init_fn=lambda r: init_cnn(r, (28, 28, 1), 10, widths=(8, 16),
+                                   hidden=32),
+        apply_fn=apply_cnn,
+        clients=clients,
+        test_set=test,
+        optimizer=get_optimizer("sgd", 0.05),
+        hp=hp,
+        sim_epochs=8,
+    )
+    res = FedLEO(task, SimConfig(horizon_hours=72.0)).run(max_rounds=4)
+    assert res.final_accuracy > 0.6
+    # simulated clock plausibility: rounds take hours, not seconds/days
+    assert 0.5 < res.final_time_hours < 72.0
+
+
+def test_unet_deepglobe_path():
+    """The paper's DeepGlobe road-extraction experiment (U-Net)."""
+    ds = make_segmentation_dataset(num_samples=32, size=32, seed=0)
+    test = make_segmentation_dataset(num_samples=8, size=32, seed=9)
+    clients = partition_iid(ds, 2, 2)   # small constellation for CPU
+    from repro.orbits import ConstellationConfig
+
+    hp = TrainHyperparams(local_epochs=20, learning_rate=0.01,
+                          batch_size=4)
+    task = FederatedTask(
+        init_fn=lambda r: init_unet(r, in_ch=3, base=4, depth=2),
+        apply_fn=apply_unet,
+        clients=clients,
+        test_set=test,
+        optimizer=get_optimizer("adam", 1e-3),
+        hp=hp,
+        sim_epochs=3,
+    )
+    sim = SimConfig(
+        constellation=ConstellationConfig(num_planes=2, sats_per_plane=2),
+        horizon_hours=72.0,
+    )
+    res = FedLEO(task, sim).run(max_rounds=2)
+    assert len(res.history) == 2
+    # pixel accuracy should beat the trivial floor quickly
+    assert res.final_accuracy > 0.5
+
+
+def test_round_time_decomposition_eq12():
+    """T*_sum structure: round end == max over planes of sink upload."""
+    ds = make_classification_dataset("mnist-like", num_samples=400, seed=4)
+    clients = partition_noniid_by_orbit(ds, 5, 8)
+    hp = TrainHyperparams()
+    task = FederatedTask(
+        init_fn=lambda r: init_cnn(r, (28, 28, 1), 10, widths=(8,),
+                                   hidden=16),
+        apply_fn=apply_cnn,
+        clients=clients,
+        test_set=ds,
+        optimizer=get_optimizer("sgd", 0.05),
+        hp=hp,
+        sim_epochs=1,
+    )
+    strat = FedLEO(task, SimConfig(horizon_hours=72.0))
+    res = strat.run(max_rounds=1)
+    ev = res.history[0].events["planes"]
+    t_end = res.history[0].t_hours * 3600.0
+    assert abs(t_end - max(p["t_upload_done"] for p in ev)) < 1e-6
