@@ -1,0 +1,144 @@
+"""Visibility-engine scaling: vectorized vs scalar-reference predictor
+construction at mega-constellation scale.
+
+The visibility/scheduling layer is the simulator's hot path (ROADMAP:
+production scale): the seed's per-satellite per-crossing scalar loop
+cost ~5-9 s for a 6 h horizon at 40x22 — ~90 s at the predictor's
+default 108 h horizon — before a single FL round ran.  This benchmark
+pins the speedup of the batched-bisection engine on the same inputs and
+emits a BENCH JSON line so the perf trajectory tracks it.
+
+Usage: PYTHONPATH=src python -m benchmarks.constellation_scaling
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.configs.constellations import (
+    get_constellation,
+    get_ground_stations,
+)
+from repro.orbits import (
+    VisibilityPredictor,
+    WalkerDelta,
+    visibility_windows,
+    visibility_windows_reference,
+)
+
+HORIZON_S = 6 * 3600.0
+REQUIRED_SPEEDUP = 10.0
+
+
+def _time(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def bench_constellation(name: str, with_reference: bool = True) -> dict:
+    cfg = get_constellation(name)
+    walker = WalkerDelta(cfg)
+    (gs,) = get_ground_stations(["rolla"])
+
+    vec, t_vec = _time(
+        lambda: visibility_windows(walker, gs, 0.0, HORIZON_S)
+    )
+    rec = {
+        "bench": "constellation_scaling",
+        "constellation": name,
+        "num_planes": cfg.num_planes,
+        "sats_per_plane": cfg.sats_per_plane,
+        "horizon_s": HORIZON_S,
+        "num_windows": len(vec),
+        "vectorized_s": round(t_vec, 4),
+    }
+    if with_reference:
+        ref, t_ref = _time(
+            lambda: visibility_windows_reference(walker, gs, 0.0, HORIZON_S)
+        )
+        windows_equal = len(vec) == len(ref)
+        if windows_equal:
+            pairs = zip(
+                sorted(vec, key=lambda w: (w.plane, w.slot, w.t_start)),
+                sorted(ref, key=lambda w: (w.plane, w.slot, w.t_start)),
+            )
+            max_diff = max(
+                (max(abs(a.t_start - b.t_start), abs(a.t_end - b.t_end))
+                 for a, b in pairs),
+                default=0.0,
+            )
+        else:
+            # counts diverged: a pairwise diff over misaligned windows
+            # would understate the damage (and inf is not valid JSON)
+            max_diff = None
+        rec.update(
+            reference_s=round(t_ref, 4),
+            speedup=round(t_ref / t_vec, 2),
+            windows_equal=windows_equal,
+            max_boundary_diff_s=max_diff,
+        )
+    return rec
+
+
+def bench_predictor_queries(name: str) -> dict:
+    """Throughput of the bisect-indexed predictor queries."""
+    cfg = get_constellation(name)
+    walker = WalkerDelta(cfg)
+    (gs,) = get_ground_stations(["rolla"])
+    pred, t_build = _time(
+        lambda: VisibilityPredictor(walker, gs, horizon_s=HORIZON_S)
+    )
+    sats = walker.satellites
+    n_queries = 0
+    t0 = time.perf_counter()
+    for sat in sats:
+        for tq in (0.0, HORIZON_S / 3, 2 * HORIZON_S / 3):
+            pred.next_window(sat, tq)
+            pred.wait_time(sat, tq)
+            n_queries += 2
+    t_q = time.perf_counter() - t0
+    return {
+        "bench": "predictor_queries",
+        "constellation": name,
+        "build_s": round(t_build, 4),
+        "queries": n_queries,
+        "us_per_query": round(t_q / n_queries * 1e6, 2),
+    }
+
+
+def run(fast: bool = False) -> list:
+    rows = [bench_constellation("paper-5x8")]
+    if not fast:
+        rows.append(bench_constellation("starlink-40x22"))
+        rows.append(bench_predictor_queries("starlink-40x22"))
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for rec in rows:
+        print("BENCH " + json.dumps(rec))
+        with open("constellation_scaling.jsonl", "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    scale = next(
+        r for r in rows if r["constellation"] == "starlink-40x22"
+        and r["bench"] == "constellation_scaling"
+    )
+    ok = (
+        scale["speedup"] >= REQUIRED_SPEEDUP
+        and scale["windows_equal"]
+        and scale["max_boundary_diff_s"] is not None
+        and scale["max_boundary_diff_s"] <= 1e-3
+    )
+    print(
+        f"# 40x22 predictor construction: {scale['reference_s']}s -> "
+        f"{scale['vectorized_s']}s ({scale['speedup']}x, "
+        f"floor {REQUIRED_SPEEDUP}x) — {'OK' if ok else 'REGRESSION'}"
+    )
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

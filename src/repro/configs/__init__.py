@@ -14,8 +14,20 @@ from repro.configs.registry import (
     get_config,
     get_smoke_config,
 )
+from repro.configs.constellations import (
+    CONSTELLATION_PRESETS,
+    GROUND_STATION_PRESETS,
+    get_constellation,
+    get_ground_stations,
+    make_sim_config,
+)
 
 __all__ = [
+    "CONSTELLATION_PRESETS",
+    "GROUND_STATION_PRESETS",
+    "get_constellation",
+    "get_ground_stations",
+    "make_sim_config",
     "ArchConfig",
     "EncoderConfig",
     "InputShape",

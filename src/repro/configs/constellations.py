@@ -1,0 +1,113 @@
+"""Constellation + ground-segment presets for scenario scaling.
+
+The paper's experiment uses a 40-satellite Walker delta (5 planes x 8
+sats at 1500 km).  The production-scale engine must also cover
+mega-constellation shells, so the presets below parameterize the same
+``ConstellationConfig`` at Starlink/Kuiper/OneWeb scale (first-shell
+public filing parameters; circular-orbit Walker idealization as in
+§III's system model).
+
+Ground-segment presets pair the paper's Rolla, MO station with common
+high-latitude polar teleport sites so multi-GS (union-of-windows)
+scheduling scenarios are one call away.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+from repro.orbits.constellation import ConstellationConfig, GroundStation
+
+CONSTELLATION_PRESETS: Dict[str, ConstellationConfig] = {
+    # the paper's §V-A setup: 40 sats, 5 planes, 1500 km, 80 deg
+    "paper-5x8": ConstellationConfig(),
+    # mid-size shell for scaling studies
+    "walker-12x12": ConstellationConfig(
+        num_planes=12, sats_per_plane=12, altitude_m=1200.0e3,
+        inclination_deg=70.0, phasing_factor=1,
+    ),
+    # Starlink shell 2-like: 720 sats in 40 planes at 550 km / 53 deg
+    # (the 40x22 scale ISSUE/ROADMAP track for the perf trajectory)
+    "starlink-40x22": ConstellationConfig(
+        num_planes=40, sats_per_plane=22, altitude_m=550.0e3,
+        inclination_deg=53.0, phasing_factor=13,
+    ),
+    # Kuiper first shell-like: 34 planes x 34 sats at 630 km / 51.9 deg
+    "kuiper-34x34": ConstellationConfig(
+        num_planes=34, sats_per_plane=34, altitude_m=630.0e3,
+        inclination_deg=51.9, phasing_factor=11,
+    ),
+    # OneWeb-like polar shell: 12 planes x 49 sats at 1200 km / 87.9 deg
+    "oneweb-12x49": ConstellationConfig(
+        num_planes=12, sats_per_plane=49, altitude_m=1200.0e3,
+        inclination_deg=87.9, phasing_factor=1,
+    ),
+}
+
+GROUND_STATION_PRESETS: Dict[str, GroundStation] = {
+    # the paper's GS (Rolla, MO) — the ConstellationConfig default
+    "rolla": GroundStation(),
+    # high-latitude teleports: long frequent passes for inclined shells
+    "svalbard": GroundStation(
+        lat_deg=78.229, lon_deg=15.408, alt_m=450.0,
+        min_elevation_deg=10.0, name="Svalbard-NO",
+    ),
+    "punta-arenas": GroundStation(
+        lat_deg=-53.163, lon_deg=-70.917, alt_m=30.0,
+        min_elevation_deg=10.0, name="Punta-Arenas-CL",
+    ),
+    "awarua": GroundStation(
+        lat_deg=-46.529, lon_deg=168.381, alt_m=10.0,
+        min_elevation_deg=10.0, name="Awarua-NZ",
+    ),
+    # the ideal-setup pole station used by FedISL/FedSat baselines
+    "north-pole": GroundStation(
+        lat_deg=89.5, lon_deg=0.0, alt_m=0.0,
+        min_elevation_deg=5.0, name="North-Pole",
+    ),
+}
+
+
+def get_constellation(name: str) -> ConstellationConfig:
+    if name not in CONSTELLATION_PRESETS:
+        raise ValueError(
+            f"unknown constellation {name!r}; have "
+            f"{sorted(CONSTELLATION_PRESETS)}"
+        )
+    return CONSTELLATION_PRESETS[name]
+
+
+def get_ground_stations(
+    names: Sequence[str],
+) -> Tuple[GroundStation, ...]:
+    out = []
+    for n in names:
+        if n not in GROUND_STATION_PRESETS:
+            raise ValueError(
+                f"unknown ground station {n!r}; have "
+                f"{sorted(GROUND_STATION_PRESETS)}"
+            )
+        out.append(GROUND_STATION_PRESETS[n])
+    return tuple(out)
+
+
+def make_sim_config(
+    constellation: str = "paper-5x8",
+    ground_stations: Sequence[str] = ("rolla",),
+    **overrides,
+):
+    """SimConfig from presets: FedLEO and every baseline in
+    ``core/baselines.py`` run on any constellation/ground-segment pair.
+
+    Extra keyword arguments override SimConfig fields (horizon_hours,
+    coarse_step_s, ...).
+    """
+    from repro.core.engine import SimConfig
+
+    gss = get_ground_stations(ground_stations)
+    kwargs = dict(
+        constellation=get_constellation(constellation),
+        ground_station=gss[0],
+        ground_stations=gss if len(gss) > 1 else (),
+    )
+    kwargs.update(overrides)     # explicit overrides win over presets
+    return SimConfig(**kwargs)

@@ -35,9 +35,14 @@ from repro.core import aggregation
 from repro.core.engine import FLStrategy, SimConfig
 from repro.core.fltask import FederatedTask
 from repro.core.propagation import broadcast_schedule, ring_hops
-from repro.core.scheduling import _distance_at, first_visible_download
+from repro.core.scheduling import (
+    earliest_transfer,
+    first_visible_download,
+    symmetric_transfer,
+)
 from repro.comms.isl import isl_hop_time
 from repro.comms.link import downlink_time, uplink_time
+from repro.configs.constellations import GROUND_STATION_PRESETS
 from repro.orbits.constellation import GroundStation, Satellite
 from repro.orbits.prediction import VisibilityPredictor
 
@@ -52,31 +57,38 @@ class _StarMixin:
         gs: Optional[GroundStation] = None,
         same_window: bool = True,
     ) -> Optional[float]:
-        """Completion time of the first feasible transfer after t.
+        """Completion time of the earliest feasible transfer after t.
 
-        Scans the satellite's windows; a window is feasible if its
-        remaining duration after max(t, start) covers the transfer time
-        computed with the true slant range. ``same_window=False`` forces
-        the transfer to start at a window *after* t (the naive FedAvg
-        behaviour of eq. (10) case 2: wait for the next visit).
+        A window is feasible if its remaining duration after
+        max(t, start) covers the transfer time computed with the true
+        slant range against the window's own station (multi-GS union
+        predictors tag every window with its gs_index).
+        ``same_window=False`` forces the transfer to start at a window
+        *after* t (the naive FedAvg behaviour of eq. (10) case 2: wait
+        for the next visit).
         """
         predictor = predictor or self.predictor
-        gs = gs or self.gs
-        for w in predictor.windows_of(sat):
-            if w.t_end <= t:
-                continue
-            if not same_window and w.contains(t) and w.t_start < t:
-                continue  # skip the in-progress window
-            t0 = max(w.t_start, t)
-            d = _distance_at(self.walker, gs, sat, t0)
-            tc = (
-                downlink_time(self.sim.link, payload_bits, d)
-                if downlink
-                else uplink_time(self.sim.link, payload_bits, d)
-            )
-            if w.t_end - t0 >= tc:
-                return t0 + tc
-        return None
+        if gs is not None:
+            # stations come from the predictor that tagged the windows;
+            # an explicit gs must match it (FedHAP's per-server pairs)
+            assert (gs,) == predictor.ground_stations, \
+                "gs does not match the predictor's ground segment"
+
+        tt = symmetric_transfer(
+            downlink_time if downlink else uplink_time,
+            self.sim.link, payload_bits,
+        )
+
+        skip = None
+        if not same_window:
+            def skip(w):      # skip the in-progress window
+                return w.contains(t) and w.t_start < t
+
+        hit = earliest_transfer(
+            walker=self.walker, predictor=predictor, sat=sat,
+            t=t, transfer_time=tt, skip_window=skip,
+        )
+        return None if hit is None else hit[1]
 
 
 # --- synchronous star baselines ----------------------------------------------------
@@ -194,25 +206,21 @@ class FedISL(FLStrategy, _StarMixin):
         if self.ideal:
             sim = dataclasses.replace(
                 sim,
-                ground_station=GroundStation(
-                    lat_deg=89.5, lon_deg=0.0, alt_m=0.0,
-                    min_elevation_deg=5.0, name="North-Pole",
-                ),
+                ground_station=GROUND_STATION_PRESETS["north-pole"],
+                ground_stations=(),
             )
         super().__init__(task, sim)
 
     def _upload_with_retries(self, sat: Satellite, t_ready: float,
                              payload_bits: float) -> Optional[float]:
-        for w in self.predictor.windows_of(sat):
-            if w.t_end <= t_ready:
-                continue
-            t0 = max(w.t_start, t_ready)
-            d = _distance_at(self.walker, self.gs, sat, t0)
-            tc = downlink_time(self.sim.link, payload_bits, d)
-            if w.t_end - t0 >= tc:
-                return t0 + tc
-            # window too short: the naive sink retries at its next window
-        return None
+        # windows too short are skipped: the naive sink retries at its
+        # next window
+        tt = symmetric_transfer(downlink_time, self.sim.link, payload_bits)
+        hit = earliest_transfer(
+            walker=self.walker, predictor=self.predictor,
+            sat=sat, t=t_ready, transfer_time=tt,
+        )
+        return None if hit is None else hit[1]
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
         task, sim = self.task, self.sim
@@ -223,7 +231,7 @@ class FedISL(FLStrategy, _StarMixin):
         for plane in range(L):
             clients = self.plane_clients(plane)
             dl = first_visible_download(
-                walker=self.walker, gs=self.gs, predictor=self.predictor,
+                walker=self.walker, gs=self.gs_list, predictor=self.predictor,
                 link=sim.link, plane=plane, t=t,
                 payload_bits=self.payload_bits,
             )
@@ -344,10 +352,8 @@ class FedSat(_AsyncStar):
     def __init__(self, task: FederatedTask, sim: SimConfig):
         sim = dataclasses.replace(
             sim,
-            ground_station=GroundStation(
-                lat_deg=89.5, lon_deg=0.0, alt_m=0.0,
-                min_elevation_deg=5.0, name="North-Pole",
-            ),
+            ground_station=GROUND_STATION_PRESETS["north-pole"],
+            ground_stations=(),
         )
         super().__init__(task, sim)
         self._buffer: List[Tuple[int, float]] = []
@@ -450,7 +456,7 @@ class AsyncFLEO(FLStrategy, _StarMixin):
         K = sim.constellation.sats_per_plane
         clients = self.plane_clients(plane)
         dl = first_visible_download(
-            walker=self.walker, gs=self.gs, predictor=self.predictor,
+            walker=self.walker, gs=self.gs_list, predictor=self.predictor,
             link=sim.link, plane=plane, t=t, payload_bits=self.payload_bits,
         )
         if dl is None:
@@ -477,19 +483,16 @@ class AsyncFLEO(FLStrategy, _StarMixin):
         t_ready = max(
             t_done[s] + ring_hops(K, s, sink) * t_hop for s in range(K)
         )
-        # naive upload with retries (ignores window-duration feasibility)
-        t_ul = None
-        for w in self.predictor.windows_of(Satellite(plane, sink)):
-            if w.t_end <= t_ready:
-                continue
-            t0 = max(w.t_start, t_ready)
-            d = _distance_at(self.walker, self.gs, Satellite(plane, sink), t0)
-            tc = downlink_time(sim.link, self.payload_bits, d)
-            if w.t_end - t0 >= tc:
-                t_ul = t0 + tc
-                break
-        if t_ul is None:
+        # naive upload with retries (window chosen after the fact, not
+        # scheduled ahead like FedLEO)
+        tt = symmetric_transfer(downlink_time, sim.link, self.payload_bits)
+        hit = earliest_transfer(
+            walker=self.walker, predictor=self.predictor,
+            sat=Satellite(plane, sink), t=t_ready, transfer_time=tt,
+        )
+        if hit is None:
             return
+        t_ul = hit[1]
         heapq.heappush(self._queue, (t_ul, plane, t_recv))
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:

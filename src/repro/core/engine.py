@@ -43,6 +43,10 @@ class SimConfig:
     ground_station: GroundStation = dataclasses.field(
         default_factory=GroundStation
     )
+    # Multi-GS scenarios: when non-empty this is the FULL station list
+    # (``ground_station`` is ignored) and scheduling uses the union of
+    # every station's visibility windows.
+    ground_stations: Tuple[GroundStation, ...] = ()
     link: LinkConfig = dataclasses.field(default_factory=LinkConfig)
     isl: ISLConfig = dataclasses.field(default_factory=ISLConfig)
     horizon_hours: float = 72.0           # paper simulates 3 days
@@ -50,6 +54,10 @@ class SimConfig:
     noniid_alpha: float = 0.5             # non-IID-aware weighting blend
     use_kernel: bool = False              # Pallas aggregation path (TPU)
     seed: int = 0
+
+    @property
+    def all_ground_stations(self) -> Tuple[GroundStation, ...]:
+        return tuple(self.ground_stations) or (self.ground_station,)
 
 
 @dataclasses.dataclass
@@ -96,10 +104,11 @@ class FLStrategy:
         self.task = task
         self.sim = sim
         self.walker = WalkerDelta(sim.constellation)
-        self.gs = sim.ground_station
+        self.gs_list = list(sim.all_ground_stations)
+        self.gs = self.gs_list[0]
         self.predictor = VisibilityPredictor(
             self.walker,
-            self.gs,
+            self.gs_list,
             horizon_s=sim.horizon_hours * 3600.0 * 1.5,
             coarse_step_s=sim.coarse_step_s,
         )

@@ -63,7 +63,11 @@ class FedLEO(FLStrategy):
         from repro.comms.isl import isl_hop_time
         from repro.comms.link import downlink_time
         from repro.core.propagation import ring_hops
-        from repro.core.scheduling import SinkDecision, _distance_at
+        from repro.core.scheduling import (
+            SinkDecision,
+            earliest_transfer,
+            symmetric_transfer,
+        )
         from repro.orbits.constellation import Satellite
 
         sim = self.sim
@@ -84,22 +88,21 @@ class FedLEO(FLStrategy):
             for s in range(K)
         )
         # upload with retries across this sink's windows
-        for w in self.predictor.windows_of(Satellite(plane, sink)):
-            if w.t_end <= t_ready:
-                continue
-            t0 = max(w.t_start, t_ready)
-            d = _distance_at(self.walker, self.gs, Satellite(plane, sink),
-                             t0)
-            tc = downlink_time(sim.link, self.payload_bits, d)
-            if w.t_end - t0 >= tc:
-                return SinkDecision(
-                    plane=plane, sink_slot=sink, window=w,
-                    t_models_at_sink=t_ready, t_upload_start=t0,
-                    t_upload_done=t0 + tc,
-                    t_wait=max(0.0, w.t_start - t_ready),
-                    candidates_considered=1,
-                )
-        return None
+        tt = symmetric_transfer(downlink_time, sim.link, self.payload_bits)
+        hit = earliest_transfer(
+            walker=self.walker, predictor=self.predictor,
+            sat=Satellite(plane, sink), t=t_ready, transfer_time=tt,
+        )
+        if hit is None:
+            return None
+        t0, t_done, w = hit
+        return SinkDecision(
+            plane=plane, sink_slot=sink, window=w,
+            t_models_at_sink=t_ready, t_upload_start=t0,
+            t_upload_done=t_done,
+            t_wait=max(0.0, w.t_start - t_ready),
+            candidates_considered=1,
+        )
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
         sim, task = self.sim, self.task
@@ -117,7 +120,7 @@ class FedLEO(FLStrategy):
             # 1. GS -> first reachable satellite of the plane
             dl = first_visible_download(
                 walker=self.walker,
-                gs=self.gs,
+                gs=self.gs_list,
                 predictor=self.predictor,
                 link=sim.link,
                 plane=plane,
@@ -141,7 +144,7 @@ class FedLEO(FLStrategy):
             if self.sink_policy == "scheduled":
                 decision = select_sink(
                     walker=self.walker,
-                    gs=self.gs,
+                    gs=self.gs_list,
                     predictor=self.predictor,
                     link=sim.link,
                     isl=sim.isl,

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Sequence
 
+import numpy as np
+
 from repro.comms.isl import ISLConfig, isl_hop_time
 from repro.orbits.constellation import WalkerDelta
 
@@ -36,6 +38,18 @@ class PropagationEvent:
 def ring_hops(num_slots: int, a: int, b: int) -> int:
     d = abs(a - b) % num_slots
     return min(d, num_slots - d)
+
+
+def ring_hops_matrix(num_slots: int) -> np.ndarray:
+    """hops[a, b] = ring_hops(num_slots, a, b) for every slot pair.
+
+    The single source of truth for the ISL hop metric in vectorized
+    code — keep it in lockstep with ``ring_hops`` if the topology ever
+    grows beyond the intra-plane ring.
+    """
+    slots = np.arange(num_slots)
+    d = np.abs(slots[:, None] - slots[None, :]) % num_slots
+    return np.minimum(d, num_slots - d)
 
 
 def broadcast_schedule(

@@ -18,19 +18,30 @@ i.e. the sink's upcoming visibility window must be long enough for the
 partial-global-model upload (and next-round download).  Ties (several
 candidates with equal completion) resolve to the earliest visitor,
 matching "selects the one that will visit the GS the first".
+
+Both schedulers accept a single ``GroundStation`` or a sequence
+(multi-GS union semantics: a window against ANY station qualifies, and
+the slant range is computed against the window's own station).  Slant
+ranges are evaluated in batch — one ``walker.positions_batch`` call per
+resolution round covering every candidate of the plane — instead of the
+seed's per-candidate-per-window scalar ``position_of`` calls.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.comms.isl import ISLConfig, isl_hop_time
 from repro.comms.link import LinkConfig, downlink_time, uplink_time
-from repro.core.propagation import ring_hops
+from repro.core.propagation import ring_hops_matrix
 from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
-from repro.orbits.prediction import VisibilityPredictor
+from repro.orbits.prediction import (
+    GroundStations,
+    VisibilityPredictor,
+    as_gs_list,
+)
 from repro.orbits.visibility import VisibilityWindow
 
 
@@ -54,10 +65,186 @@ def _distance_at(
     return float(np.linalg.norm(r_s - r_g))
 
 
+def _slant_ranges(
+    walker: WalkerDelta,
+    gss: Sequence[GroundStation],
+    gs_idx: np.ndarray,
+    planes: np.ndarray,
+    slots: np.ndarray,
+    times: np.ndarray,
+) -> np.ndarray:
+    """|r_sat - r_gs| for a batch of (window-gs, plane, slot, time)."""
+    times = np.asarray(times, dtype=np.float64)
+    r_s = walker.positions_batch(planes, slots, times)     # (C, 3)
+    r_g = np.empty_like(r_s)
+    for gi in np.unique(np.asarray(gs_idx)):
+        m = np.asarray(gs_idx) == gi
+        r_g[m] = gss[int(gi)].eci(times[m])
+    return np.linalg.norm(r_s - r_g, axis=-1)
+
+
+def _ready_times(
+    K: int, t_train_done: Sequence[float], t_hop: float
+) -> np.ndarray:
+    """Eq. 21 for every candidate at once: t_ready[c] = max_s(t_done[s] +
+    ring_hops(s, c) * t_hop)."""
+    hops = ring_hops_matrix(K)                             # (cand, src)
+    return np.max(
+        np.asarray(t_train_done, dtype=np.float64)[None, :] + hops * t_hop,
+        axis=1,
+    )
+
+
+def _first_fit_transfers(
+    *,
+    walker: WalkerDelta,
+    predictor: VisibilityPredictor,
+    plane: int,
+    t_ready: np.ndarray,
+    transfer_time,  # (gs_index, distance) -> (need_s, done_s)
+) -> List[Optional[Tuple[float, float, int]]]:
+    """Per slot: (t0, t0 + done_s, window_index) of the earliest-
+    completing window after t_ready[slot] that covers need_s, or None.
+
+    ``need_s`` is the window-feasibility requirement, ``done_s`` the
+    offset of the reported completion — they differ when a window must
+    also leave room for a follow-up transfer (eq. 22's next-round
+    download) that does not delay the completion itself.
+
+    Resolution proceeds in rounds: every still-pending slot contributes
+    its current candidate window, ALL slant ranges of the round are
+    evaluated with one batched positions call, and slots whose window is
+    too short advance to their next window.  With a single station the
+    first fitting window in start order is the answer (disjoint windows:
+    any later window starts after this one ends).  Under a multi-GS
+    union, windows of the same satellite may OVERLAP, so after the first
+    fit every window starting before that completion is also evaluated
+    (a nearer station's overlapping pass can finish earlier); windows
+    starting at or after an achieved completion can never beat it.
+    """
+    # the predictor assigned every window's gs_index, so it — not the
+    # caller — is the authority on which station a window belongs to
+    gss = predictor.ground_stations
+    K = walker.config.sats_per_plane
+    recs = [predictor.sat_arrays(plane, s) for s in range(K)]
+    ptrs: List[Optional[int]] = []
+    for s, rec in enumerate(recs):
+        if rec is None:
+            ptrs.append(None)
+            continue
+        j = int(np.searchsorted(rec["cummax_end"], t_ready[s], side="right"))
+        ptrs.append(j if j < rec["starts"].size else None)
+
+    out: List[Optional[Tuple[float, float, int]]] = [None] * K
+    sweeps: List[Tuple[int, int]] = []     # (slot, overlap-window index)
+    pending = [s for s in range(K) if ptrs[s] is not None]
+    while pending:
+        t0s = np.array(
+            [max(recs[s]["starts"][ptrs[s]], t_ready[s]) for s in pending]
+        )
+        gs_idx = np.array([recs[s]["gs_index"][ptrs[s]] for s in pending])
+        dists = _slant_ranges(
+            walker, gss, gs_idx,
+            np.full(len(pending), plane), np.array(pending), t0s,
+        )
+        nxt = []
+        for s, t0, d in zip(pending, t0s, dists):
+            rec, j = recs[s], ptrs[s]
+            need, done = transfer_time(int(rec["gs_index"][j]), float(d))
+            if rec["ends"][j] - t0 >= need:
+                out[s] = (float(t0), float(t0 + done), j)
+                # multi-GS overlap sweep candidates: any window starting
+                # before the achieved completion may still finish earlier
+                for k in range(j + 1, rec["starts"].size):
+                    if rec["starts"][k] >= out[s][1]:
+                        break
+                    if rec["ends"][k] > t_ready[s]:
+                        sweeps.append((s, k))
+                continue
+            # window too short — advance past windows already over
+            j += 1
+            while j < rec["ends"].size and rec["ends"][j] <= t_ready[s]:
+                j += 1
+            if j < rec["ends"].size:
+                ptrs[s] = j
+                nxt.append(s)
+        pending = nxt
+
+    if sweeps:
+        # evaluate every overlap candidate of every slot in ONE batched
+        # slant-range call (in-order processing keeps ties deterministic)
+        t0s = np.array(
+            [max(recs[s]["starts"][k], t_ready[s]) for s, k in sweeps]
+        )
+        gs_idx = np.array([recs[s]["gs_index"][k] for s, k in sweeps])
+        dists = _slant_ranges(
+            walker, gss, gs_idx,
+            np.full(len(sweeps), plane),
+            np.array([s for s, _ in sweeps]), t0s,
+        )
+        for (s, k), t0k, dk in zip(sweeps, t0s, dists):
+            rec = recs[s]
+            need_k, done_k = transfer_time(int(rec["gs_index"][k]),
+                                           float(dk))
+            if rec["ends"][k] - t0k >= need_k \
+                    and t0k + done_k < out[s][1]:
+                out[s] = (float(t0k), float(t0k + done_k), k)
+    return out
+
+
+def symmetric_transfer(time_fn, link: LinkConfig, payload_bits: float):
+    """transfer_time callback for a single up- or downlink: feasibility
+    need and completion offset are the same transfer duration."""
+    def tt(_gs_index: int, d: float):
+        tc = time_fn(link, payload_bits, d)
+        return tc, tc
+
+    return tt
+
+
+def earliest_transfer(
+    *,
+    walker: WalkerDelta,
+    predictor: VisibilityPredictor,
+    sat: Satellite,
+    t: float,
+    transfer_time,  # (gs_index, distance) -> (need_s, done_s)
+    skip_window=None,
+) -> Optional[Tuple[float, float, VisibilityWindow]]:
+    """Earliest-completing feasible transfer of one satellite after t:
+    (t0, t_done, window), or None.
+
+    The scalar single-satellite analogue of ``_first_fit_transfers``,
+    shared by the baseline retry loops so they price every window
+    against its own station (taken from the predictor that tagged the
+    windows) and agree with ``select_sink`` on earliest-completion
+    semantics under multi-GS union windows (where overlapping windows
+    mean the first fit in start order is not necessarily the earliest
+    completion).
+    """
+    gss = predictor.ground_stations
+    best: Optional[Tuple[float, float, VisibilityWindow]] = None
+    for w in predictor.windows_of(sat):
+        if w.t_end <= t:
+            continue
+        if best is not None and w.t_start >= best[1]:
+            break           # can no longer beat the achieved completion
+        if skip_window is not None and skip_window(w):
+            continue
+        t0 = max(w.t_start, t)
+        d = _distance_at(walker, gss[w.gs_index], sat, t0)
+        need, done = transfer_time(w.gs_index, d)
+        if w.t_end - t0 < need:
+            continue
+        if best is None or t0 + done < best[1]:
+            best = (t0, t0 + done, w)
+    return best
+
+
 def select_sink(
     *,
     walker: WalkerDelta,
-    gs: GroundStation,
+    gs: GroundStations,
     predictor: VisibilityPredictor,
     link: LinkConfig,
     isl: ISLConfig,
@@ -69,6 +256,11 @@ def select_sink(
     """Deterministic sink selection for one orbital plane.
 
     Args:
+      gs: the ground station(s), part of the scheduler's shared
+        deterministic inputs.  With several, any station's window
+        qualifies and the exchange is priced against the window's own
+        station (per the predictor's gs_index tags — the predictor must
+        be built over these same stations).
       t_train_done: per-slot local-training completion times (absolute
         simulation seconds); index = slot on this plane.
       payload_bits: model size z|N|.
@@ -79,55 +271,54 @@ def select_sink(
       The SinkDecision, or None if no feasible window exists in the
       predictor's horizon (caller should extend the horizon).
     """
+    assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
+        "predictor was built over a different ground segment"
     K = walker.config.sats_per_plane
     t_hop = isl_hop_time(isl, payload_bits)
+    t_ready = _ready_times(K, t_train_done, t_hop)        # eq. 21, batched
+
+    def exchange_time(_gi: int, d: float):
+        # completion is the partial-model upload (t_c^D); the optional
+        # next-round download only widens the feasibility requirement
+        t_dl = downlink_time(link, payload_bits, d)
+        need = t_dl
+        if require_next_download:
+            need += uplink_time(link, payload_bits, d)
+        return need, t_dl
+
+    fits = _first_fit_transfers(
+        walker=walker, predictor=predictor, plane=plane,
+        t_ready=t_ready, transfer_time=exchange_time,
+    )
+
     best: Optional[SinkDecision] = None
     considered = 0
-
     for cand in range(K):
-        sat = Satellite(plane=plane, slot=cand)
-        # eq. 21: when do all models reach this candidate sink?
-        arrivals = [
-            t_train_done[s] + ring_hops(K, s, cand) * t_hop for s in range(K)
-        ]
-        t_ready = max(arrivals)
-
-        # Feasibility: window long enough for the exchange. Distance (and
-        # hence t_c^D) depends on when the window occurs, so iterate the
-        # candidate's windows and evaluate the exchange time window-by-
-        # window with the true slant range at upload start.
-        for w in predictor.windows_of(sat):
-            if w.t_end <= t_ready:
-                continue
-            t_start_ul = max(w.t_start, t_ready)
-            d = _distance_at(walker, gs, sat, t_start_ul)
-            t_dl = downlink_time(link, payload_bits, d)
-            need = t_dl + (uplink_time(link, payload_bits, d)
-                           if require_next_download else 0.0)
-            if w.t_end - t_start_ul < need:
-                continue  # AW too short — not a valid candidate sink
-            considered += 1
-            decision = SinkDecision(
-                plane=plane,
-                sink_slot=cand,
-                window=w,
-                t_models_at_sink=t_ready,
-                t_upload_start=t_start_ul,
-                t_upload_done=t_start_ul + t_dl,
-                t_wait=max(0.0, w.t_start - t_ready),
-                candidates_considered=0,
+        if fits[cand] is None:
+            continue
+        t0, t_done, j = fits[cand]
+        w = predictor.windows_of(Satellite(plane, cand))[j]
+        considered += 1
+        decision = SinkDecision(
+            plane=plane,
+            sink_slot=cand,
+            window=w,
+            t_models_at_sink=float(t_ready[cand]),
+            t_upload_start=t0,
+            t_upload_done=t_done,
+            t_wait=max(0.0, w.t_start - float(t_ready[cand])),
+            candidates_considered=0,
+        )
+        # minimize completion; tie -> earliest window start
+        if (
+            best is None
+            or decision.t_upload_done < best.t_upload_done - 1e-9
+            or (
+                abs(decision.t_upload_done - best.t_upload_done) <= 1e-9
+                and decision.window.t_start < best.window.t_start
             )
-            # minimize completion; tie -> earliest window start
-            if (
-                best is None
-                or decision.t_upload_done < best.t_upload_done - 1e-9
-                or (
-                    abs(decision.t_upload_done - best.t_upload_done) <= 1e-9
-                    and decision.window.t_start < best.window.t_start
-                )
-            ):
-                best = decision
-            break  # later windows of the same candidate are never better
+        ):
+            best = decision
 
     if best is None:
         return None
@@ -137,7 +328,7 @@ def select_sink(
 def first_visible_download(
     *,
     walker: WalkerDelta,
-    gs: GroundStation,
+    gs: GroundStations,
     predictor: VisibilityPredictor,
     link: LinkConfig,
     plane: int,
@@ -150,22 +341,23 @@ def first_visible_download(
     The GS broadcasts over the full uplink bandwidth; the first visible
     satellite of the plane becomes the propagation source.
     """
+    assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
+        "predictor was built over a different ground segment"
     K = walker.config.sats_per_plane
+
+    fits = _first_fit_transfers(
+        walker=walker, predictor=predictor, plane=plane,
+        t_ready=np.full(K, float(t)),
+        transfer_time=symmetric_transfer(uplink_time, link, payload_bits),
+    )
+
     best_slot, best_done = None, None
     for slot in range(K):
-        sat = Satellite(plane=plane, slot=slot)
-        for w in predictor.windows_of(sat):
-            if w.t_end <= t:
-                continue
-            t0 = max(w.t_start, t)
-            d = _distance_at(walker, gs, sat, t0)
-            t_ul = uplink_time(link, payload_bits, d)
-            if w.t_end - t0 < t_ul:
-                continue  # window too short to finish the download
-            done = t0 + t_ul
-            if best_done is None or done < best_done:
-                best_slot, best_done = slot, done
-            break
+        if fits[slot] is None:
+            continue
+        done = fits[slot][1]
+        if best_done is None or done < best_done:
+            best_slot, best_done = slot, done
     if best_slot is None:
         return None
     return best_slot, best_done

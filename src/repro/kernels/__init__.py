@@ -11,6 +11,22 @@ Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), <name>_ops.py
 (jit'd wrapper with interpret fallback on CPU) and <name>_ref.py (pure-jnp
 oracle used by the allclose test sweeps).
 """
-from repro.kernels import aggregate_ops, flash_ops, ssd_ops
 
-__all__ = ["aggregate_ops", "flash_ops", "ssd_ops"]
+
+def tpu_compiler_params(**kwargs):
+    """Build Mosaic compiler params across the pltpu rename.
+
+    JAX 0.4.x exposes ``pltpu.TPUCompilerParams``; newer releases renamed
+    it to ``pltpu.CompilerParams``.  Kernels must work on both.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+from repro.kernels import aggregate_ops, flash_ops, ssd_ops  # noqa: E402
+
+__all__ = ["aggregate_ops", "flash_ops", "ssd_ops", "tpu_compiler_params"]

@@ -10,10 +10,13 @@ from repro.orbits.constellation import (
 from repro.orbits.visibility import (
     elevation_angle,
     visibility_mask,
+    visibility_table,
     visibility_windows,
+    visibility_windows_reference,
     VisibilityWindow,
+    WindowTable,
 )
-from repro.orbits.prediction import VisibilityPredictor
+from repro.orbits.prediction import VisibilityPredictor, as_gs_list
 
 __all__ = [
     "ConstellationConfig",
@@ -24,7 +27,11 @@ __all__ = [
     "orbital_speed",
     "elevation_angle",
     "visibility_mask",
+    "visibility_table",
     "visibility_windows",
+    "visibility_windows_reference",
     "VisibilityWindow",
+    "WindowTable",
     "VisibilityPredictor",
+    "as_gs_list",
 ]

@@ -7,73 +7,180 @@ same access-window table ``AW(k, GS)`` — this is what makes the sink
 selection *distributed without coordination*: all satellites run the same
 pure function of shared state and agree on the result.
 
-``VisibilityPredictor`` precomputes windows over a horizon and answers:
+``VisibilityPredictor`` precomputes windows over a horizon (one
+vectorized ``visibility_table`` sweep per ground station) and answers:
   * next_window(sat, t): the first window with t_end > t,
   * next_window_with_duration(sat, t, min_duration): first window after t
     that is long enough (the AW(c_opt, GS) >= T*_sum constraint),
   * wait_time(sat, t): t_wait — time until the satellite next becomes
     visible (0 if currently inside a window).
+
+Multi-GS support: pass a *sequence* of ground stations and the predictor
+holds the union of every station's windows (each tagged with its
+``gs_index``) — a satellite is schedulable whenever ANY station sees it.
+Queries are O(log W) via per-satellite sorted start/cummax-end arrays
+instead of the seed's linear scans.
 """
 from __future__ import annotations
 
-import bisect
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
-from repro.orbits.visibility import VisibilityWindow, visibility_windows
+from repro.orbits.visibility import (
+    VisibilityWindow,
+    WindowTable,
+    visibility_table,
+)
+
+GroundStations = Union[GroundStation, Sequence[GroundStation]]
+
+
+def as_gs_list(gs: GroundStations) -> List[GroundStation]:
+    """Normalize a single station or a sequence into a list."""
+    if isinstance(gs, GroundStation):
+        return [gs]
+    return list(gs)
 
 
 class VisibilityPredictor:
     def __init__(
         self,
         walker: WalkerDelta,
-        gs: GroundStation,
+        gs: GroundStations,
         horizon_s: float,
         t0: float = 0.0,
         coarse_step_s: float = 10.0,
+        engine: str = "vectorized",
     ):
+        """Args:
+          gs: one ground station, or a sequence for union-of-windows
+            multi-GS scheduling.
+          engine: "vectorized" (default) or "reference" — the scalar
+            oracle, kept selectable for equivalence tests and benchmarks.
+        """
         self.walker = walker
-        self.gs = gs
+        gss = as_gs_list(gs)
+        self.ground_stations: Tuple[GroundStation, ...] = tuple(gss)
+        self.gs = gss[0]                       # primary station (back-compat)
         self.t0 = t0
         self.horizon_s = horizon_s
-        self._windows = visibility_windows(
-            walker, gs, t0, t0 + horizon_s, coarse_step_s=coarse_step_s
-        )
-        # per-satellite sorted window lists + start-time index for bisect
-        self._by_sat: Dict[Tuple[int, int], List[VisibilityWindow]] = {}
-        for w in self._windows:
-            self._by_sat.setdefault((w.plane, w.slot), []).append(w)
-        self._starts: Dict[Tuple[int, int], List[float]] = {
-            k: [w.t_start for w in v] for k, v in self._by_sat.items()
-        }
 
+        if engine == "vectorized":
+            tables = [
+                visibility_table(
+                    walker, g, t0, t0 + horizon_s,
+                    coarse_step_s=coarse_step_s, gs_index=i,
+                )
+                for i, g in enumerate(gss)
+            ]
+            self.table = WindowTable.concatenate(tables).sorted_by_start()
+        elif engine == "reference":
+            from repro.orbits.visibility import visibility_windows_reference
+
+            rows = []
+            for i, g in enumerate(gss):
+                for w in visibility_windows_reference(
+                    walker, g, t0, t0 + horizon_s,
+                    coarse_step_s=coarse_step_s,
+                ):
+                    rows.append((w.plane, w.slot, w.t_start, w.t_end, i))
+            arr = np.asarray(rows, dtype=np.float64).reshape(-1, 5)
+            self.table = WindowTable(
+                plane=arr[:, 0].astype(np.int32),
+                slot=arr[:, 1].astype(np.int32),
+                t_start=arr[:, 2],
+                t_end=arr[:, 3],
+                gs_index=arr[:, 4].astype(np.int32),
+            ).sorted_by_start()
+        else:
+            raise ValueError(f"unknown engine {engine!r}")
+
+        # Per-satellite start-sorted slices of the table.  ``_cummax_end``
+        # (running max of t_end in start order) makes "first window with
+        # t_end > t" a single searchsorted even when multi-GS windows of
+        # the same satellite overlap.
+        self._by_sat: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
+        K = walker.config.sats_per_plane
+        sat_ids = self.table.plane.astype(np.int64) * K + self.table.slot
+        order = np.lexsort((self.table.t_start, sat_ids))
+        sat_sorted = sat_ids[order]
+        uniq, first_idx = np.unique(sat_sorted, return_index=True)
+        bounds = list(first_idx) + [len(order)]
+        for u, lo, hi in zip(uniq, bounds[:-1], bounds[1:]):
+            idx = order[lo:hi]
+            starts = self.table.t_start[idx]
+            ends = self.table.t_end[idx]
+            self._by_sat[(int(u) // K, int(u) % K)] = {
+                "idx": idx,
+                "starts": starts,
+                "ends": ends,
+                "cummax_end": np.maximum.accumulate(ends),
+                "gs_index": self.table.gs_index[idx],
+            }
+        self._win_cache: Dict[Tuple[int, int], List[VisibilityWindow]] = {}
+
+    # -- window access -----------------------------------------------------------
     @property
     def windows(self) -> List[VisibilityWindow]:
-        return list(self._windows)
+        return self.table.to_windows()
 
     def windows_of(self, sat: Satellite) -> List[VisibilityWindow]:
-        return list(self._by_sat.get((sat.plane, sat.slot), []))
+        key = (sat.plane, sat.slot)
+        if key not in self._win_cache:
+            rec = self._by_sat.get(key)
+            if rec is None:
+                self._win_cache[key] = []
+            else:
+                self._win_cache[key] = [
+                    self.table.window(i) for i in rec["idx"]
+                ]
+        return list(self._win_cache[key])
 
+    def sat_arrays(self, plane: int, slot: int) -> Optional[Dict[str, np.ndarray]]:
+        """Raw per-satellite window arrays (starts, ends, cummax_end,
+        gs_index) in start order — the batch-query surface used by the
+        vectorized scheduler."""
+        return self._by_sat.get((plane, slot))
+
+    def _first_index_ending_after(self, key, t: float) -> Optional[int]:
+        """Index (in start order) of the first window with t_end > t."""
+        rec = self._by_sat.get(key)
+        if rec is None:
+            return None
+        # cummax_end is non-decreasing; the first index where it exceeds
+        # t is exactly the first window whose own t_end exceeds t.
+        j = int(np.searchsorted(rec["cummax_end"], t, side="right"))
+        if j >= rec["starts"].size:
+            return None
+        return j
+
+    # -- queries ----------------------------------------------------------------
     def current_window(
         self, sat: Satellite, t: float
     ) -> Optional[VisibilityWindow]:
         """Window containing t, if the satellite is visible right now."""
-        wins = self._by_sat.get((sat.plane, sat.slot), [])
-        starts = self._starts.get((sat.plane, sat.slot), [])
-        i = bisect.bisect_right(starts, t) - 1
-        if i >= 0 and wins[i].contains(t):
-            return wins[i]
+        key = (sat.plane, sat.slot)
+        rec = self._by_sat.get(key)
+        if rec is None:
+            return None
+        wins = self.windows_of(sat)
+        i = int(np.searchsorted(rec["starts"], t, side="right")) - 1
+        while i >= 0 and rec["cummax_end"][i] >= t:
+            if wins[i].contains(t):
+                return wins[i]
+            i -= 1
         return None
 
     def next_window(
         self, sat: Satellite, t: float
     ) -> Optional[VisibilityWindow]:
         """First window with t_end > t (possibly the one containing t)."""
-        wins = self._by_sat.get((sat.plane, sat.slot), [])
-        for w in wins:
-            if w.t_end > t:
-                return w
-        return None
+        j = self._first_index_ending_after((sat.plane, sat.slot), t)
+        if j is None:
+            return None
+        return self.windows_of(sat)[j]
 
     def next_window_with_duration(
         self, sat: Satellite, t: float, min_duration: float
@@ -84,13 +191,18 @@ class VisibilityPredictor:
         ``AW(c_opt, GS) >= T*_sum``: the access window must be long enough
         to exchange the partial global model with the GS.
         """
-        wins = self._by_sat.get((sat.plane, sat.slot), [])
-        for w in wins:
-            if w.t_end <= t:
+        key = (sat.plane, sat.slot)
+        j = self._first_index_ending_after(key, t)
+        if j is None:
+            return None
+        rec = self._by_sat[key]
+        wins = self.windows_of(sat)
+        for i in range(j, len(wins)):
+            if rec["ends"][i] <= t:
                 continue
-            effective_start = max(w.t_start, t)
-            if w.t_end - effective_start >= min_duration:
-                return w
+            effective_start = max(rec["starts"][i], t)
+            if rec["ends"][i] - effective_start >= min_duration:
+                return wins[i]
         return None
 
     def wait_time(self, sat: Satellite, t: float) -> Optional[float]:

@@ -9,15 +9,37 @@ The paper's visibility condition (§III):
     angle(r_g(t), r_k(t) - r_g(t)) <= pi/2 - theta_min
 
 which is equivalent to  elevation(k, g, t) >= theta_min.
+
+Two implementations of the access-window extraction live here:
+
+  * ``visibility_table`` / ``visibility_windows`` — the vectorized
+    engine.  It samples the full (L, K, T) elevation tensor once
+    (time-chunked so mega-constellation grids never materialize a
+    multi-GB position tensor), finds every rise/set transition with one
+    ``np.diff``, and refines ALL crossings of ALL satellites with a
+    single batched bisection.  Windows come back as a ``WindowTable`` of
+    structured NumPy arrays; ``VisibilityWindow`` dataclasses are thin
+    views kept for API compatibility.
+  * ``visibility_windows_reference`` — the original per-satellite
+    per-crossing scalar loop, kept as the equivalence oracle for tests
+    and the baseline for ``benchmarks/constellation_scaling.py``.
+
+Both share the same clamped time grid (``_time_grid``), so a window can
+never extend past the requested horizon.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List
 
 import numpy as np
 
 from repro.orbits.constellation import GroundStation, WalkerDelta
+
+# Time-chunk length for the coarse elevation scan: bounds the transient
+# (L, K, chunk, 3) position tensor to ~100 MB at Starlink scale.
+_SCAN_CHUNK_T = 2048
 
 
 def elevation_angle(r_sat: np.ndarray, r_gs: np.ndarray) -> np.ndarray:
@@ -43,21 +65,55 @@ def visibility_mask(
     gs: GroundStation,
     t: np.ndarray,
 ) -> np.ndarray:
-    """Boolean visibility (L, K, T) of every satellite at every time."""
-    r_sat = walker.positions(t)            # (L, K, T, 3)
-    r_gs = gs.eci(t)                       # (T, 3)
-    el = elevation_angle(r_sat, r_gs[None, None])
-    return el >= np.radians(gs.min_elevation_deg)
+    """Boolean visibility (L, K, T) of every satellite at every time.
+
+    Evaluated in time chunks: the (L, K, Tc, 3) position tensor is the
+    only large intermediate, so a 40x22 constellation over a 108 h
+    horizon needs ~100 MB transient instead of ~7 GB.
+    """
+    scalar = np.ndim(t) == 0
+    t = np.atleast_1d(np.asarray(t, dtype=np.float64))
+    min_el = np.radians(gs.min_elevation_deg)
+    L, K = walker.config.num_planes, walker.config.sats_per_plane
+    mask = np.empty((L, K, t.size), dtype=bool)
+    for i in range(0, t.size, _SCAN_CHUNK_T):
+        tc = t[i : i + _SCAN_CHUNK_T]
+        el = walker.elevations_from(gs, tc)     # (L, K, Tc)
+        mask[:, :, i : i + _SCAN_CHUNK_T] = el >= min_el
+    return mask[:, :, 0] if scalar else mask
+
+
+def _time_grid(t_start: float, t_end: float, step: float) -> np.ndarray:
+    """Coarse scan grid clamped to [t_start, t_end].
+
+    The final sample is exactly t_end (the historical
+    ``arange(t_start, t_end + step, step)`` sampled past the horizon, so
+    clipped windows could overshoot the requested range).
+    """
+    if t_end <= t_start:
+        raise ValueError(f"empty scan range [{t_start}, {t_end}]")
+    n = int(math.floor((t_end - t_start) / step + 1e-9))
+    t = t_start + step * np.arange(n + 1, dtype=np.float64)
+    if t[-1] < t_end - 1e-9 * max(1.0, abs(t_end)):
+        t = np.append(t, t_end)
+    else:
+        t[-1] = min(t[-1], t_end)
+    return t
 
 
 @dataclasses.dataclass(frozen=True)
 class VisibilityWindow:
-    """One access window AW(k, GS): [t_start, t_end] of the r-th visit."""
+    """One access window AW(k, GS): [t_start, t_end] of the r-th visit.
+
+    ``gs_index`` identifies which ground station the window belongs to
+    when a multi-GS predictor merges window sets (union semantics).
+    """
 
     plane: int
     slot: int
     t_start: float
     t_end: float
+    gs_index: int = 0
 
     @property
     def duration(self) -> float:
@@ -67,6 +123,210 @@ class VisibilityWindow:
         return self.t_start <= t <= self.t_end
 
 
+@dataclasses.dataclass(frozen=True)
+class WindowTable:
+    """Structured access-window storage: parallel arrays, one row per
+    window, sorted by (t_start, plane, slot).
+
+    This is the vectorized engine's native output; ``to_windows`` builds
+    the ``VisibilityWindow`` dataclass views for the legacy list API.
+    """
+
+    plane: np.ndarray      # (W,) int32
+    slot: np.ndarray       # (W,) int32
+    t_start: np.ndarray    # (W,) float64
+    t_end: np.ndarray      # (W,) float64
+    gs_index: np.ndarray   # (W,) int32
+
+    def __len__(self) -> int:
+        return int(self.plane.size)
+
+    def window(self, i: int) -> VisibilityWindow:
+        return VisibilityWindow(
+            plane=int(self.plane[i]),
+            slot=int(self.slot[i]),
+            t_start=float(self.t_start[i]),
+            t_end=float(self.t_end[i]),
+            gs_index=int(self.gs_index[i]),
+        )
+
+    def to_windows(self) -> List[VisibilityWindow]:
+        return [self.window(i) for i in range(len(self))]
+
+    def sorted_by_start(self) -> "WindowTable":
+        order = np.lexsort((self.slot, self.plane, self.t_start))
+        return self.take(order)
+
+    def take(self, idx: np.ndarray) -> "WindowTable":
+        return WindowTable(
+            plane=self.plane[idx],
+            slot=self.slot[idx],
+            t_start=self.t_start[idx],
+            t_end=self.t_end[idx],
+            gs_index=self.gs_index[idx],
+        )
+
+    @staticmethod
+    def empty() -> "WindowTable":
+        z = np.zeros(0)
+        return WindowTable(z.astype(np.int32), z.astype(np.int32),
+                           z, z.copy(), z.astype(np.int32))
+
+    @staticmethod
+    def concatenate(tables: List["WindowTable"]) -> "WindowTable":
+        if not tables:
+            return WindowTable.empty()
+        return WindowTable(
+            plane=np.concatenate([t.plane for t in tables]),
+            slot=np.concatenate([t.slot for t in tables]),
+            t_start=np.concatenate([t.t_start for t in tables]),
+            t_end=np.concatenate([t.t_end for t in tables]),
+            gs_index=np.concatenate([t.gs_index for t in tables]),
+        )
+
+
+def _elevation_margin(
+    walker: WalkerDelta,
+    gs: GroundStation,
+    planes: np.ndarray,
+    slots: np.ndarray,
+    t: np.ndarray,
+    min_el: float,
+) -> np.ndarray:
+    """elevation - theta_min for arbitrary (plane, slot, t) triples."""
+    r_s = walker.positions_batch(planes, slots, t)
+    r_g = gs.eci(np.asarray(t, dtype=np.float64))
+    return elevation_angle(r_s, r_g) - min_el
+
+
+def _refine_crossings_batched(
+    walker: WalkerDelta,
+    gs: GroundStation,
+    planes: np.ndarray,
+    slots: np.ndarray,
+    lo: np.ndarray,
+    hi: np.ndarray,
+    rising: bool,
+    min_el: float,
+    iters: int = 40,
+) -> np.ndarray:
+    """Bisection of EVERY elevation-threshold crossing simultaneously.
+
+    Identical iteration count and update rule as the scalar
+    ``_refine_crossing``, evaluated for all C crossings per step — the
+    whole refinement is ``iters`` vectorized elevation evaluations
+    instead of ``iters * C`` scalar ones.
+    """
+    lo = np.array(lo, dtype=np.float64)
+    hi = np.array(hi, dtype=np.float64)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        above = (
+            _elevation_margin(walker, gs, planes, slots, mid, min_el) >= 0.0
+        )
+        go_hi = above == rising     # crossing is in [lo, mid]
+        hi = np.where(go_hi, mid, hi)
+        lo = np.where(go_hi, lo, mid)
+    return 0.5 * (lo + hi)
+
+
+def visibility_table(
+    walker: WalkerDelta,
+    gs: GroundStation,
+    t_start: float,
+    t_end: float,
+    coarse_step_s: float = 10.0,
+    refine: bool = True,
+    gs_index: int = 0,
+) -> WindowTable:
+    """All access windows of every satellite within [t_start, t_end],
+    as a structured ``WindowTable`` (the vectorized engine).
+
+    Coarse grid scan + one batched bisection over every rise/set
+    crossing of every satellite (the deterministic analogue of the
+    visibility prediction method of Ali et al. [11] used by the paper's
+    scheduler, at constellation scale).
+    """
+    t = _time_grid(t_start, t_end, coarse_step_s)
+    mask = visibility_mask(walker, gs, t)          # (L, K, T)
+    min_el = float(np.radians(gs.min_elevation_deg))
+    K = walker.config.sats_per_plane
+
+    dm = np.diff(mask.astype(np.int8), axis=-1)
+    rise_p, rise_s, rise_i = np.nonzero(dm == 1)
+    set_p, set_s, set_i = np.nonzero(dm == -1)
+
+    if refine and rise_i.size:
+        rise_t = _refine_crossings_batched(
+            walker, gs, rise_p, rise_s, t[rise_i], t[rise_i + 1],
+            rising=True, min_el=min_el,
+        )
+    else:
+        rise_t = t[rise_i + 1]
+    if refine and set_i.size:
+        set_t = _refine_crossings_batched(
+            walker, gs, set_p, set_s, t[set_i], t[set_i + 1],
+            rising=False, min_el=min_el,
+        )
+    else:
+        set_t = t[set_i]
+
+    # windows clipped by the scan range open at t[0] / close at t[-1]
+    clip_lo_p, clip_lo_s = np.nonzero(mask[:, :, 0])
+    clip_hi_p, clip_hi_s = np.nonzero(mask[:, :, -1])
+
+    start_p = np.concatenate([clip_lo_p, rise_p])
+    start_s = np.concatenate([clip_lo_s, rise_s])
+    start_t = np.concatenate(
+        [np.full(clip_lo_p.size, t[0]), np.asarray(rise_t, dtype=np.float64)]
+    )
+    end_p = np.concatenate([set_p, clip_hi_p])
+    end_s = np.concatenate([set_s, clip_hi_s])
+    end_t = np.concatenate(
+        [np.asarray(set_t, dtype=np.float64), np.full(clip_hi_p.size, t[-1])]
+    )
+
+    # Per satellite the 1-D mask alternates rise/set, so start and end
+    # counts match; sorting both sides by (satellite, time) pairs the
+    # r-th start with the r-th end of the same satellite.
+    start_order = np.lexsort((start_t, start_p * K + start_s))
+    end_order = np.lexsort((end_t, end_p * K + end_s))
+    sp = start_p[start_order]
+    ss = start_s[start_order]
+    st = start_t[start_order]
+    et = end_t[end_order]
+
+    keep = et > st            # drop degenerate single-sample windows
+    table = WindowTable(
+        plane=sp[keep].astype(np.int32),
+        slot=ss[keep].astype(np.int32),
+        t_start=st[keep],
+        t_end=et[keep],
+        gs_index=np.full(int(np.count_nonzero(keep)), gs_index,
+                         dtype=np.int32),
+    )
+    return table.sorted_by_start()
+
+
+def visibility_windows(
+    walker: WalkerDelta,
+    gs: GroundStation,
+    t_start: float,
+    t_end: float,
+    coarse_step_s: float = 10.0,
+    refine: bool = True,
+) -> List[VisibilityWindow]:
+    """Vectorized access-window extraction, legacy list-of-dataclass API.
+
+    Returns windows sorted by t_start.
+    """
+    return visibility_table(
+        walker, gs, t_start, t_end, coarse_step_s=coarse_step_s,
+        refine=refine,
+    ).to_windows()
+
+
+# --- scalar reference implementation (equivalence oracle + benchmark baseline) ---
 def _refine_crossing(
     f, lo: float, hi: float, rising: bool, iters: int = 40
 ) -> float:
@@ -82,7 +342,7 @@ def _refine_crossing(
     return 0.5 * (lo + hi)
 
 
-def visibility_windows(
+def visibility_windows_reference(
     walker: WalkerDelta,
     gs: GroundStation,
     t_start: float,
@@ -90,15 +350,13 @@ def visibility_windows(
     coarse_step_s: float = 10.0,
     refine: bool = True,
 ) -> List[VisibilityWindow]:
-    """All access windows of every satellite within [t_start, t_end].
+    """The original per-satellite scalar loop (per-crossing bisection).
 
-    Coarse grid scan + bisection refinement of rise/set times (the
-    deterministic analogue of the visibility prediction method of Ali et
-    al. [11] used by the paper's scheduler).
-
-    Returns windows sorted by t_start.
+    Kept as the oracle the vectorized engine is tested against and as
+    the baseline of ``benchmarks/constellation_scaling.py``.  Returns
+    windows sorted by t_start.
     """
-    t = np.arange(t_start, t_end + coarse_step_s, coarse_step_s)
+    t = _time_grid(t_start, t_end, coarse_step_s)
     mask = visibility_mask(walker, gs, t)          # (L, K, T)
     min_el = np.radians(gs.min_elevation_deg)
 

@@ -4,7 +4,69 @@ import os
 # set only inside repro.launch.dryrun (see MULTI-POD DRY-RUN rules).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    # hypothesis is an optional dependency: without it the suite must
+    # still collect (property tests auto-skip, everything else runs).
+    # Install an import shim so ``from hypothesis import given,
+    # strategies as st`` keeps working in every test module.
+    import sys
+    import types
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+    import pytest
+
+    class _AnyStrategy:
+        """Stands in for any strategy object/combinator chain."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            # Zero-arg replacement: pytest must not treat the wrapped
+            # test's strategy parameters as fixture requests.
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
+
+    class _Settings:
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _AnyStrategy()
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _Settings
+    _hyp.strategies = _st
+    _hyp.assume = lambda *args, **kwargs: True
+    _hyp.example = lambda *args, **kwargs: (lambda fn: fn)
+    _hyp.note = lambda *args, **kwargs: None
+    _hyp.HealthCheck = _AnyStrategy()
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+else:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")

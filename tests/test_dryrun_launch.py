@@ -20,10 +20,10 @@ import json
 import jax
 import jax.numpy as jnp
 from repro.configs import get_smoke_config
-from repro.launch.dryrun import collective_bytes, lower_pair
+from repro.launch.dryrun import collective_bytes, cost_analysis_dict, lower_pair
+from repro.launch.mesh import make_mesh_compat
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
 out = {}
 for arch, shape in [("gemma-7b", "train_4k"),
                     ("kimi-k2-1t-a32b", "train_4k"),
@@ -38,7 +38,7 @@ for arch, shape in [("gemma-7b", "train_4k"),
     try:
         lowered, meta = lower_pair(arch, shape, mesh, cfg=cfg)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         coll = collective_bytes(compiled.as_text())
         out[f"{arch}|{shape}"] = {
             "ok": True,
@@ -55,7 +55,9 @@ print("RESULT:" + json.dumps(out))
 def dryrun_result():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # forced host-device count only multiplies the CPU platform; pin it
+    # so jax never probes a (baked-in but absent) TPU backend for 60 s
+    env["JAX_PLATFORMS"] = "cpu"
     proc = subprocess.run(
         [sys.executable, "-c", _SCRIPT],
         capture_output=True, text=True, timeout=540, env=env,

@@ -1,0 +1,415 @@
+"""Vectorized visibility/scheduling engine: equivalence against the
+scalar reference, horizon clamping, multi-GS union semantics, and the
+constellation presets (ISSUE 1 tentpole)."""
+import numpy as np
+import pytest
+
+from repro.comms import ISLConfig, LinkConfig
+from repro.configs.constellations import (
+    CONSTELLATION_PRESETS,
+    get_constellation,
+    get_ground_stations,
+    make_sim_config,
+)
+from repro.core.scheduling import first_visible_download, select_sink
+from repro.orbits import (
+    ConstellationConfig,
+    GroundStation,
+    VisibilityPredictor,
+    WalkerDelta,
+    visibility_table,
+    visibility_windows,
+    visibility_windows_reference,
+)
+
+
+def _sorted_key(wins):
+    return sorted(wins, key=lambda w: (w.plane, w.slot, w.t_start))
+
+
+# --- vectorized vs scalar-reference equivalence ------------------------------------
+RANDOM_CASES = []
+_rng = np.random.default_rng(1234)
+for _ in range(6):
+    RANDOM_CASES.append(
+        dict(
+            num_planes=int(_rng.integers(2, 7)),
+            sats_per_plane=int(_rng.integers(3, 9)),
+            altitude_m=float(_rng.uniform(400e3, 1800e3)),
+            inclination_deg=float(_rng.uniform(40.0, 95.0)),
+            phasing_factor=int(_rng.integers(0, 3)),
+            gs_lat=float(_rng.uniform(-60.0, 75.0)),
+            gs_lon=float(_rng.uniform(-180.0, 180.0)),
+        )
+    )
+
+
+@pytest.mark.parametrize("case", RANDOM_CASES)
+def test_vectorized_matches_reference_randomized(case):
+    cfg = ConstellationConfig(
+        num_planes=case["num_planes"],
+        sats_per_plane=case["sats_per_plane"],
+        altitude_m=case["altitude_m"],
+        inclination_deg=case["inclination_deg"],
+        phasing_factor=case["phasing_factor"],
+    )
+    walker = WalkerDelta(cfg)
+    gs = GroundStation(lat_deg=case["gs_lat"], lon_deg=case["gs_lon"])
+    vec = visibility_windows(walker, gs, 0.0, 8 * 3600.0)
+    ref = visibility_windows_reference(walker, gs, 0.0, 8 * 3600.0)
+    assert len(vec) == len(ref)
+    for a, b in zip(_sorted_key(vec), _sorted_key(ref)):
+        assert (a.plane, a.slot) == (b.plane, b.slot)
+        assert abs(a.t_start - b.t_start) <= 1e-3
+        assert abs(a.t_end - b.t_end) <= 1e-3
+
+
+def test_vectorized_matches_reference_unrefined():
+    cfg = ConstellationConfig(num_planes=3, sats_per_plane=5)
+    walker = WalkerDelta(cfg)
+    gs = GroundStation()
+    vec = visibility_windows(walker, gs, 0.0, 6 * 3600.0, refine=False)
+    ref = visibility_windows_reference(
+        walker, gs, 0.0, 6 * 3600.0, refine=False
+    )
+    assert [(w.plane, w.slot, w.t_start, w.t_end) for w in _sorted_key(vec)] \
+        == [(w.plane, w.slot, w.t_start, w.t_end) for w in _sorted_key(ref)]
+
+
+def test_window_table_structure():
+    cfg = ConstellationConfig(num_planes=2, sats_per_plane=4)
+    table = visibility_table(WalkerDelta(cfg), GroundStation(), 0.0,
+                             12 * 3600.0)
+    assert len(table) > 0
+    # start-sorted structured arrays, valid [start, end] intervals
+    assert np.all(np.diff(table.t_start) >= 0)
+    assert np.all(table.t_end > table.t_start)
+    assert table.plane.dtype == np.int32
+    views = table.to_windows()
+    assert views[0].t_start == table.t_start[0]
+    assert views[0].duration > 0
+
+
+# --- horizon clamping (grid-overshoot regression) ----------------------------------
+def test_windows_clamped_to_horizon():
+    """The seed's arange grid sampled past t_end, so clipped windows
+    could overshoot the requested horizon; both engines must clamp."""
+    cfg = ConstellationConfig(num_planes=4, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    gs = GroundStation()
+    # horizon deliberately NOT a multiple of the coarse step
+    t_end = 4 * 3600.0 + 7.0
+    for fn in (visibility_windows, visibility_windows_reference):
+        wins = fn(walker, gs, 0.0, t_end, coarse_step_s=10.0)
+        assert wins, "expected at least one window"
+        for w in wins:
+            assert w.t_end <= t_end
+            assert w.t_start >= 0.0
+
+
+# --- predictor queries on the bisect index -----------------------------------------
+def test_predictor_engines_agree():
+    cfg = ConstellationConfig(num_planes=3, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    gs = GroundStation()
+    vec = VisibilityPredictor(walker, gs, horizon_s=24 * 3600.0)
+    ref = VisibilityPredictor(walker, gs, horizon_s=24 * 3600.0,
+                              engine="reference")
+    assert len(vec.windows) == len(ref.windows)
+    for sat in walker.satellites:
+        for t in (0.0, 3600.0, 7200.0, 20 * 3600.0):
+            wv, wr = vec.next_window(sat, t), ref.next_window(sat, t)
+            assert (wv is None) == (wr is None)
+            if wv is not None:
+                assert abs(wv.t_start - wr.t_start) <= 1e-3
+                assert abs(wv.t_end - wr.t_end) <= 1e-3
+            dv = vec.next_window_with_duration(sat, t, 120.0)
+            dr = ref.next_window_with_duration(sat, t, 120.0)
+            assert (dv is None) == (dr is None)
+            if dv is not None:
+                assert abs(dv.t_start - dr.t_start) <= 1e-3
+
+
+def test_predictor_next_window_is_first_ending_after():
+    """Bisect-indexed next_window must equal the linear-scan answer."""
+    cfg = ConstellationConfig(num_planes=2, sats_per_plane=5)
+    walker = WalkerDelta(cfg)
+    pred = VisibilityPredictor(walker, GroundStation(),
+                               horizon_s=24 * 3600.0)
+    for sat in walker.satellites:
+        wins = pred.windows_of(sat)
+        for t in np.linspace(0.0, 24 * 3600.0, 37):
+            expect = next((w for w in wins if w.t_end > t), None)
+            got = pred.next_window(sat, float(t))
+            assert got == expect
+
+
+# --- scheduling decisions unchanged on the batched path ----------------------------
+@pytest.fixture(scope="module")
+def sched_world():
+    cfg = ConstellationConfig(num_planes=3, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    gs = GroundStation()
+    vec = VisibilityPredictor(walker, gs, horizon_s=36 * 3600.0)
+    ref = VisibilityPredictor(walker, gs, horizon_s=36 * 3600.0,
+                              engine="reference")
+    return cfg, walker, gs, vec, ref
+
+
+@pytest.mark.parametrize("require_next_download", [False, True])
+def test_select_sink_decisions_unchanged(sched_world, require_next_download):
+    cfg, walker, gs, vec, ref = sched_world
+    link, isl = LinkConfig(), ISLConfig()
+    K = cfg.sats_per_plane
+    for plane in range(cfg.num_planes):
+        for base in (1800.0, 7200.0, 20 * 3600.0):
+            t_done = [base + 120.0 * (s % 4) for s in range(K)]
+            a = select_sink(walker=walker, gs=gs, predictor=vec, link=link,
+                            isl=isl, plane=plane, t_train_done=t_done,
+                            payload_bits=3.2e7,
+                            require_next_download=require_next_download)
+            b = select_sink(walker=walker, gs=gs, predictor=ref, link=link,
+                            isl=isl, plane=plane, t_train_done=t_done,
+                            payload_bits=3.2e7,
+                            require_next_download=require_next_download)
+            assert (a is None) == (b is None)
+            if a is not None:
+                assert a.sink_slot == b.sink_slot
+                assert a.t_upload_done == pytest.approx(b.t_upload_done,
+                                                        abs=1e-3)
+                assert a.t_wait == pytest.approx(b.t_wait, abs=1e-3)
+                # completion is the downlink only; the next-round
+                # download widens feasibility but never the completion
+                assert a.window.t_end >= a.t_upload_done - 1e-6
+
+
+def test_require_next_download_only_widens_feasibility(sched_world):
+    """t_upload_done is t0 + t_c^D regardless of the flag: requiring
+    room for the next download must not inflate the completion time of
+    an unchanged (sink, window) decision."""
+    cfg, walker, gs, vec, _ = sched_world
+    link, isl = LinkConfig(), ISLConfig()
+    K = cfg.sats_per_plane
+    t_done = [7200.0] * K
+    plain = select_sink(walker=walker, gs=gs, predictor=vec, link=link,
+                        isl=isl, plane=0, t_train_done=t_done,
+                        payload_bits=3.2e7)
+    strict = select_sink(walker=walker, gs=gs, predictor=vec, link=link,
+                         isl=isl, plane=0, t_train_done=t_done,
+                         payload_bits=3.2e7, require_next_download=True)
+    assert plain is not None and strict is not None
+    if (strict.sink_slot, strict.window.t_start) == (
+            plain.sink_slot, plain.window.t_start):
+        assert strict.t_upload_done == pytest.approx(plain.t_upload_done,
+                                                     abs=1e-9)
+
+
+def test_first_visible_download_unchanged(sched_world):
+    cfg, walker, gs, vec, ref = sched_world
+    link = LinkConfig()
+    for plane in range(cfg.num_planes):
+        for t in (0.0, 3600.0, 12 * 3600.0):
+            a = first_visible_download(walker=walker, gs=gs, predictor=vec,
+                                       link=link, plane=plane, t=t,
+                                       payload_bits=3.2e7)
+            b = first_visible_download(walker=walker, gs=gs, predictor=ref,
+                                       link=link, plane=plane, t=t,
+                                       payload_bits=3.2e7)
+            assert (a is None) == (b is None)
+            if a is not None:
+                assert a[0] == b[0]
+                assert a[1] == pytest.approx(b[1], abs=1e-3)
+
+
+# --- multi-GS union semantics ------------------------------------------------------
+def test_multi_gs_union_of_windows():
+    cfg = ConstellationConfig(num_planes=3, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    gs_a, gs_b = get_ground_stations(["rolla", "svalbard"])
+    horizon = 12 * 3600.0
+    both = VisibilityPredictor(walker, [gs_a, gs_b], horizon_s=horizon)
+    only_a = VisibilityPredictor(walker, gs_a, horizon_s=horizon)
+    only_b = VisibilityPredictor(walker, gs_b, horizon_s=horizon)
+    assert len(both.windows) == len(only_a.windows) + len(only_b.windows)
+    # every union window is tagged with its own station and matches it
+    singles = {0: only_a, 1: only_b}
+    for w in both.windows:
+        src = singles[w.gs_index].windows
+        assert any(
+            v.plane == w.plane and v.slot == w.slot
+            and abs(v.t_start - w.t_start) < 1e-9 for v in src
+        )
+    # union can only shorten (or keep) the wait to the next contact
+    sat = walker.satellites[0]
+    for t in (0.0, 3 * 3600.0, 9 * 3600.0):
+        wu = both.wait_time(sat, t)
+        for single in (only_a, only_b):
+            ws = single.wait_time(sat, t)
+            if ws is not None:
+                assert wu is not None and wu <= ws + 1e-9
+
+
+def test_multi_gs_first_visible_download_is_true_minimum():
+    """Under a union predictor, overlapping windows from different
+    stations must not mask an earlier-completing transfer: compare
+    against a brute-force scan over ALL windows of every slot."""
+    from repro.comms.link import uplink_time
+    from repro.core.scheduling import _distance_at
+
+    cfg = ConstellationConfig(num_planes=3, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    gss = list(get_ground_stations(["rolla", "awarua"]))
+    pred = VisibilityPredictor(walker, gss, horizon_s=24 * 3600.0)
+    link = LinkConfig()
+    payload = 3.2e7
+
+    for plane in range(cfg.num_planes):
+        for t in (0.0, 3600.0, 6 * 3600.0, 15 * 3600.0):
+            got = first_visible_download(
+                walker=walker, gs=gss, predictor=pred, link=link,
+                plane=plane, t=t, payload_bits=payload,
+            )
+            # brute force: true earliest completion over every window
+            best = None
+            for slot in range(cfg.sats_per_plane):
+                from repro.orbits.constellation import Satellite
+                sat = Satellite(plane, slot)
+                for w in pred.windows_of(sat):
+                    if w.t_end <= t:
+                        continue
+                    t0 = max(w.t_start, t)
+                    d = _distance_at(walker, gss[w.gs_index], sat, t0)
+                    t_ul = uplink_time(link, payload, d)
+                    if w.t_end - t0 < t_ul:
+                        continue
+                    if best is None or t0 + t_ul < best:
+                        best = t0 + t_ul
+            assert (got is None) == (best is None)
+            if got is not None:
+                assert got[1] == pytest.approx(best, abs=1e-6)
+
+
+def test_earliest_transfer_is_true_minimum_multi_gs():
+    """The shared baseline retry helper must return the earliest
+    completion over ALL (possibly overlapping) union windows."""
+    from repro.comms.link import downlink_time
+    from repro.core.scheduling import _distance_at, earliest_transfer
+
+    cfg = ConstellationConfig(num_planes=2, sats_per_plane=5)
+    walker = WalkerDelta(cfg)
+    gss = list(get_ground_stations(["rolla", "awarua"]))
+    pred = VisibilityPredictor(walker, gss, horizon_s=24 * 3600.0)
+    link = LinkConfig()
+    payload = 3.2e7
+
+    def tt(_gi, d):
+        tc = downlink_time(link, payload, d)
+        return tc, tc
+
+    for sat in walker.satellites:
+        for t in (0.0, 2 * 3600.0, 11 * 3600.0):
+            hit = earliest_transfer(walker=walker, predictor=pred,
+                                    sat=sat, t=t, transfer_time=tt)
+            best = None
+            for w in pred.windows_of(sat):
+                if w.t_end <= t:
+                    continue
+                t0 = max(w.t_start, t)
+                tc = downlink_time(
+                    link, payload,
+                    _distance_at(walker, gss[w.gs_index], sat, t0),
+                )
+                if w.t_end - t0 >= tc and (best is None or t0 + tc < best):
+                    best = t0 + tc
+            assert (hit is None) == (best is None)
+            if hit is not None:
+                assert hit[1] == pytest.approx(best, abs=1e-6)
+
+
+def test_presets_registry():
+    assert "starlink-40x22" in CONSTELLATION_PRESETS
+    cfg = get_constellation("starlink-40x22")
+    assert cfg.num_planes == 40 and cfg.sats_per_plane == 22
+    with pytest.raises(ValueError):
+        get_constellation("nope")
+    sim = make_sim_config("paper-5x8", ("rolla", "svalbard"),
+                          horizon_hours=6.0)
+    assert len(sim.all_ground_stations) == 2
+    assert sim.horizon_hours == 6.0
+    # single-station presets keep the plain ground_station field
+    sim1 = make_sim_config("paper-5x8", ("rolla",))
+    assert sim1.ground_stations == ()
+
+
+def test_ideal_baselines_override_multi_gs_list():
+    """FedSat/FedISL ideal setups replace the whole ground segment: a
+    multi-GS SimConfig must not leak past the North-Pole replacement."""
+    from repro.core import FederatedTask, TrainHyperparams
+    from repro.core.baselines import FedISLIdeal, FedSat
+    from repro.data import (
+        make_classification_dataset,
+        partition_noniid_by_orbit,
+    )
+    from repro.models.cnn import apply_cnn, init_cnn
+    from repro.optim import get_optimizer
+
+    ds = make_classification_dataset("mnist-like", num_samples=80, seed=0)
+    test = make_classification_dataset("mnist-like", num_samples=40, seed=1)
+    task = FederatedTask(
+        init_fn=lambda r: init_cnn(r, (28, 28, 1), 10, widths=(4,),
+                                   hidden=8),
+        apply_fn=apply_cnn,
+        clients=partition_noniid_by_orbit(ds, 5, 8),
+        test_set=test,
+        optimizer=get_optimizer("sgd", 0.05),
+        hp=TrainHyperparams(local_epochs=10, batch_size=4),
+        sim_epochs=1,
+    )
+    sim = make_sim_config("paper-5x8", ("rolla", "svalbard"),
+                          horizon_hours=6.0)
+    for cls in (FedSat, FedISLIdeal):
+        strat = cls(task, sim)
+        assert [g.name for g in strat.gs_list] == ["North-Pole"]
+
+
+def test_fedleo_round_on_starlink_preset_two_gs():
+    """Acceptance: a FedLEO round completes end-to-end on the
+    Starlink-scale preset with 2 ground stations."""
+    from repro.core import FedLEO, FederatedTask, TrainHyperparams
+    from repro.data import (
+        make_classification_dataset,
+        partition_noniid_by_orbit,
+    )
+    from repro.models.cnn import apply_cnn, init_cnn
+    from repro.optim import get_optimizer
+
+    # 53-degree shell: pair the paper's mid-latitude GS with a southern
+    # one (a polar site would never see this inclination); 24 h so every
+    # plane's ground track crosses a station
+    sim = make_sim_config(
+        "starlink-40x22", ("rolla", "punta-arenas"), horizon_hours=24.0
+    )
+    L = sim.constellation.num_planes
+    K = sim.constellation.sats_per_plane
+    ds = make_classification_dataset(
+        "mnist-like", num_samples=4 * L * K, seed=0
+    )
+    test = make_classification_dataset("mnist-like", num_samples=64, seed=1)
+    clients = partition_noniid_by_orbit(ds, L, K, seed=0)
+    task = FederatedTask(
+        init_fn=lambda r: init_cnn(r, (28, 28, 1), 10, widths=(4,),
+                                   hidden=8),
+        apply_fn=apply_cnn,
+        clients=clients,
+        test_set=test,
+        optimizer=get_optimizer("sgd", 0.05),
+        hp=TrainHyperparams(local_epochs=10, batch_size=4),
+        sim_epochs=1,
+    )
+    res = FedLEO(task, sim).run(max_rounds=1)
+    assert len(res.history) == 1
+    planes = res.history[0].events["planes"]
+    assert len(planes) == L
+    for ev in planes:
+        assert ev["t_upload_done"] >= ev["t_models_at_sink"]
+    assert np.isfinite(res.final_accuracy)
