@@ -1,26 +1,39 @@
 """Shared benchmark substrate: the paper's simulation setup at a
 CPU-tractable scale (the simulated *clock* keeps Table I fidelity; only
-the executed epoch count and proxy-model size are reduced)."""
+the executed epoch count and proxy-model size are reduced).
+
+Also the single mechanism for the repo's BENCH trajectory: every
+benchmark appends its ``BENCH {json}`` records to the repo-root
+``BENCH_topology.json`` via ``append_bench`` so the per-PR perf history
+lives in one file (ROADMAP: "track BENCH JSON per PR").
+
+The ``repro`` imports are lazy so scheduling-only benchmarks
+(constellation/topology scaling) don't pay the JAX import.
+"""
 from __future__ import annotations
 
+import json
 import os
 import time
 from typing import Callable, Dict, Optional
-
-from repro.core import FederatedTask, SimConfig, TrainHyperparams
-from repro.data import (
-    make_classification_dataset,
-    partition_iid,
-    partition_noniid_by_orbit,
-)
-from repro.models.cnn import apply_cnn, init_cnn
-from repro.optim import get_optimizer
 
 FAST = os.environ.get("BENCH_FAST", "0") == "1"
 
 # the paper's deep CNN is a few M params; charge the comm model for a
 # 4M-param fp32 model (z|N| = 128 Mbit) while training a small proxy.
 PAYLOAD_BITS = int(4e6 * 32)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_TRAJECTORY = os.path.join(REPO_ROOT, "BENCH_topology.json")
+
+
+def append_bench(rec: Dict, path: Optional[str] = None) -> None:
+    """Print a ``BENCH {json}`` line and append it to the repo-root
+    trajectory file (one JSON record per line)."""
+    line = json.dumps(rec)
+    print("BENCH " + line)
+    with open(path or BENCH_TRAJECTORY, "a") as f:
+        f.write(line + "\n")
 
 
 def make_task(
@@ -29,7 +42,16 @@ def make_task(
     num_samples: int = 800 if FAST else 1600,
     sim_epochs: int = 4 if FAST else 8,
     seed: int = 0,
-) -> FederatedTask:
+):
+    from repro.core import FederatedTask, TrainHyperparams
+    from repro.data import (
+        make_classification_dataset,
+        partition_iid,
+        partition_noniid_by_orbit,
+    )
+    from repro.models.cnn import apply_cnn, init_cnn
+    from repro.optim import get_optimizer
+
     ds = make_classification_dataset(dataset, num_samples=num_samples,
                                      seed=seed)
     test = make_classification_dataset(dataset, num_samples=400,

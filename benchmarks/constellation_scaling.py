@@ -12,9 +12,9 @@ Usage: PYTHONPATH=src python -m benchmarks.constellation_scaling
 """
 from __future__ import annotations
 
-import json
 import time
 
+from benchmarks.common import append_bench
 from repro.configs.constellations import (
     get_constellation,
     get_ground_stations,
@@ -118,9 +118,7 @@ def run(fast: bool = False) -> list:
 def main() -> None:
     rows = run()
     for rec in rows:
-        print("BENCH " + json.dumps(rec))
-        with open("constellation_scaling.jsonl", "a") as f:
-            f.write(json.dumps(rec) + "\n")
+        append_bench(rec)
     scale = next(
         r for r in rows if r["constellation"] == "starlink-40x22"
         and r["bench"] == "constellation_scaling"

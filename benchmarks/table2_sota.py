@@ -12,7 +12,8 @@ import os
 from typing import Dict, List
 
 from benchmarks.common import FAST, make_task
-from repro.core import FedLEO, SimConfig
+from repro.configs.constellations import make_sim_config
+from repro.core import FedLEO, FedLEOGrid, SimConfig
 from repro.core.baselines import ALL_BASELINES
 
 # async methods get more (cheaper) server events than sync rounds
@@ -42,6 +43,24 @@ def run(dataset: str = "mnist-like") -> List[Dict]:
         "accuracy": leo.final_accuracy,
         "conv_time_h": conv if conv is not None else leo.final_time_hours,
         "rounds": len(leo.history),
+    })
+
+    # the grid variant: inter-plane ISLs, cluster sinks (same clock,
+    # same dataset/training — only the topology layer differs)
+    sim_grid = make_sim_config(
+        "paper-5x8", topology="grid", horizon_hours=sim.horizon_hours
+    )
+    grid = FedLEOGrid(make_task(dataset), sim_grid).run(
+        max_rounds=ROUNDS["sync"]
+    )
+    conv = grid.convergence_time_hours(target)
+    rows.append({
+        "method": "FedLEO-Grid", "dataset": dataset,
+        "accuracy": grid.final_accuracy,
+        "conv_time_h": conv if conv is not None
+        else grid.final_time_hours,
+        "converged": conv is not None,
+        "rounds": len(grid.history),
     })
 
     for name in METHODS:

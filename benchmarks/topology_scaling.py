@@ -1,0 +1,161 @@
+"""Ring vs +Grid round time at mega-constellation scale.
+
+The ROADMAP's blocker for 40+ plane shells: under the paper's
+intra-plane-only ring, EVERY plane needs its own GS download and sink
+upload per round, so the round is gated by the worst-served plane.  The
+grid topology (inter-plane FSO ISLs) lets one download seed a whole
+cluster of planes and one sink upload collect it — L/cluster GS
+round-trips instead of L.
+
+This benchmark prices a full FedLEO round (download -> flood ->
+training -> relay -> sink upload) with the *pure schedule planners* —
+no JAX training, the simulated clock only — at starlink-40x22 with 1-3
+ground stations, and emits BENCH JSON lines into the repo-root
+trajectory (``BENCH_topology.json``).
+
+Acceptance floor: grid round time <= ring round time with >= 2 planes
+per sink cluster.
+
+Usage: PYTHONPATH=src python -m benchmarks.topology_scaling
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.common import PAYLOAD_BITS, append_bench
+from repro.comms.routing import ISLPlan, RoutingTable
+from repro.configs.constellations import make_sim_config
+from repro.core.fedleo import make_clusters, plan_cluster_round, plan_plane_round
+from repro.orbits.constellation import WalkerDelta
+from repro.orbits.prediction import VisibilityPredictor
+
+CONSTELLATION = "starlink-40x22"
+GS_SETS = (("rolla",), ("rolla", "punta-arenas"),
+           ("rolla", "punta-arenas", "awarua"))
+HORIZON_HOURS = 24.0
+CLUSTER_PLANES = 4
+# eq. (11) with Table I compute parameters and ~50 samples/satellite
+TRAIN_TIME_S = 600.0
+
+
+def _round_time_ring(walker, gs_list, predictor, sim, t=0.0) -> Optional[float]:
+    K = sim.constellation.sats_per_plane
+    train = np.full(K, TRAIN_TIME_S)
+    done = []
+    for plane in range(sim.constellation.num_planes):
+        plan = plan_plane_round(
+            walker=walker, gs_list=gs_list, predictor=predictor,
+            link=sim.link, isl=sim.isl, plane=plane, t=t,
+            payload_bits=PAYLOAD_BITS, train_times=train,
+        )
+        if plan is None:
+            return None            # a plane stalls the whole round
+        done.append(plan.decision.t_upload_done)
+    return max(done)
+
+
+def _round_time_grid(walker, gs_list, predictor, sim, routing,
+                     cluster_planes, t=0.0) -> Optional[float]:
+    K = sim.constellation.sats_per_plane
+    done = []
+    for planes in make_clusters(sim.constellation.num_planes,
+                                cluster_planes):
+        train = np.full(len(planes) * K, TRAIN_TIME_S)
+        plan = plan_cluster_round(
+            walker=walker, gs_list=gs_list, predictor=predictor,
+            link=sim.link, routing=routing, planes=planes, t=t,
+            payload_bits=PAYLOAD_BITS, train_times=train,
+        )
+        if plan is None:
+            return None
+        done.append(plan.decision.t_upload_done)
+    return max(done)
+
+
+def run() -> List[dict]:
+    from repro.orbits.topology import get_isl_topology
+
+    rows = []
+    # the ISL graph is GS-independent: build its routing table once
+    routing = None
+    t_routing = 0.0
+    for gs_names in GS_SETS:
+        sim = make_sim_config(
+            CONSTELLATION, ground_stations=gs_names, topology="grid",
+            horizon_hours=HORIZON_HOURS,
+        )
+        walker = WalkerDelta(sim.constellation)
+        gs_list = list(sim.all_ground_stations)
+        predictor = VisibilityPredictor(
+            walker, gs_list, horizon_s=sim.horizon_hours * 3600.0 * 1.5,
+            coarse_step_s=sim.coarse_step_s,
+        )
+
+        t0 = time.perf_counter()
+        ring = _round_time_ring(walker, gs_list, predictor, sim)
+        t_ring = time.perf_counter() - t0
+
+        if routing is None:
+            t0 = time.perf_counter()
+            topology = get_isl_topology(sim.constellation, sim.topology)
+            routing = RoutingTable(
+                topology, ISLPlan(intra=sim.isl, inter=sim.isl_inter),
+                PAYLOAD_BITS,
+            )
+            t_routing = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        grid = _round_time_grid(
+            walker, gs_list, predictor, sim, routing, CLUSTER_PLANES
+        )
+        t_grid = time.perf_counter() - t0
+
+        rows.append({
+            "bench": "topology_scaling",
+            "constellation": CONSTELLATION,
+            "ground_stations": list(gs_names),
+            "cluster_planes": CLUSTER_PLANES,
+            "train_time_s": TRAIN_TIME_S,
+            "ring_round_s": None if ring is None else round(ring, 1),
+            "grid_round_s": None if grid is None else round(grid, 1),
+            "speedup": (
+                None if ring is None or grid is None or grid == 0
+                else round(ring / grid, 2)
+            ),
+            "gs_trips_ring": sim.constellation.num_planes,
+            "gs_trips_grid": len(
+                make_clusters(sim.constellation.num_planes, CLUSTER_PLANES)
+            ),
+            "plan_wall_ring_s": round(t_ring, 3),
+            "plan_wall_grid_s": round(t_grid, 3),
+            "routing_build_s": round(t_routing, 3),
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    for rec in rows:
+        append_bench(rec)
+    ok = all(
+        r["grid_round_s"] is not None
+        and (r["ring_round_s"] is None
+             or r["grid_round_s"] <= r["ring_round_s"])
+        for r in rows
+    )
+    for r in rows:
+        print(
+            f"# {len(r['ground_stations'])} GS: ring "
+            f"{r['ring_round_s']}s -> grid {r['grid_round_s']}s "
+            f"({r['gs_trips_ring']} -> {r['gs_trips_grid']} GS trips)"
+        )
+    print(f"# grid <= ring at {CLUSTER_PLANES} planes/sink — "
+          f"{'OK' if ok else 'REGRESSION'}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,11 @@ from repro.comms.link import (
     downlink_time,
 )
 from repro.comms.isl import ISLConfig, isl_hop_time, relay_time
+from repro.comms.routing import ISLPlan, RoutingTable
 
 __all__ = [
+    "ISLPlan",
+    "RoutingTable",
     "LinkConfig",
     "free_space_path_loss",
     "snr_linear",

@@ -17,6 +17,13 @@ choice as the default.
 from __future__ import annotations
 
 import dataclasses
+import math
+
+# Inter-plane cross-links are optical (FSO): provision them at 1 Gbps
+# (250 MHz x 4 bit/s/Hz) instead of the paper's deliberately RF-rate
+# intra-plane links — the PHY asymmetry the +Grid topology rides on.
+FSO_HOP_BANDWIDTH_HZ = 250.0e6
+FSO_SPECTRAL_EFFICIENCY = 4.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +35,55 @@ class ISLConfig:
     @property
     def hop_rate_bps(self) -> float:
         return self.hop_bandwidth_hz * self.spectral_efficiency
+
+    @classmethod
+    def from_constellation(
+        cls,
+        constellation,
+        link_type: str = "intra",
+        topology=None,
+        **overrides,
+    ) -> "ISLConfig":
+        """ISLConfig with the real chord/c propagation delay for this
+        constellation's geometry.
+
+        link_type "intra": adjacent same-plane chord 2*R*sin(pi/K), RF
+        provisioning (the paper's Table I rates).  link_type "inter":
+        mean cross-plane link length of the (+Grid by default) topology,
+        FSO provisioning.  ``overrides`` replace any resulting field.
+        """
+        from repro.orbits.constellation import C_LIGHT, R_EARTH
+
+        fields: dict = {}
+        if link_type == "intra":
+            K = constellation.sats_per_plane
+            radius = R_EARTH + constellation.altitude_m
+            chord_m = 2.0 * radius * math.sin(math.pi / K)
+        elif link_type == "inter":
+            from repro.orbits.topology import (
+                INTER,
+                ISLTopology,
+                TopologyConfig,
+                get_isl_topology,
+            )
+
+            topo = (
+                topology
+                if isinstance(topology, ISLTopology)
+                else get_isl_topology(
+                    constellation, topology or TopologyConfig(kind="grid")
+                )
+            )
+            chord_m = topo.mean_link_length_m(INTER)
+            fields.update(
+                hop_bandwidth_hz=FSO_HOP_BANDWIDTH_HZ,
+                spectral_efficiency=FSO_SPECTRAL_EFFICIENCY,
+            )
+        else:
+            raise ValueError(f"unknown link_type {link_type!r}")
+        fields["hop_propagation_s"] = chord_m / C_LIGHT
+        fields.update(overrides)
+        return cls(**fields)
 
 
 def isl_hop_time(cfg: ISLConfig, payload_bits: float) -> float:

@@ -1,0 +1,163 @@
+"""Graph routing over the ISL topology: per-edge link provisioning and
+all-pairs relay latencies.
+
+Physically, intra-plane and inter-plane ISLs are different hardware:
+the paper provisions intra-plane links at RF-comparable rates (so
+FedLEO's gains come from the schedule, not the PHY), while inter-plane
+cross-links are optical (Gbps class).  ``ISLPlan`` carries one
+``ISLConfig`` per edge type; ``RoutingTable`` turns a topology + plan +
+payload into hop/latency matrices that the propagation planner and the
+constellation-wide sink scheduler consume.
+
+Latencies are reconstructed from the topology's hop-count decomposition
+(``h_intra*t_intra + h_inter*t_inter``) rather than accumulated along
+paths, so a topology without inter-plane links yields latencies
+bit-identical to the legacy ring arithmetic ``hops * t_hop``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.comms.isl import ISLConfig, isl_hop_time
+from repro.orbits.topology import ISLTopology, UNREACHABLE
+
+
+@dataclasses.dataclass(frozen=True)
+class ISLPlan:
+    """Per-edge-type link provisioning."""
+
+    intra: ISLConfig = dataclasses.field(default_factory=ISLConfig)
+    inter: Optional[ISLConfig] = None    # None -> same as intra
+
+    @property
+    def inter_cfg(self) -> ISLConfig:
+        return self.inter if self.inter is not None else self.intra
+
+    def hop_times(self, payload_bits: float) -> Tuple[float, float]:
+        """(t_intra, t_inter): single-hop exchange time per edge type."""
+        return (
+            isl_hop_time(self.intra, payload_bits),
+            isl_hop_time(self.inter_cfg, payload_bits),
+        )
+
+
+def flood_times(
+    latency: np.ndarray,
+    sources: Sequence[int],
+    t_source: Sequence[float],
+    cols: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Earliest receipt per destination when the model floods the graph
+    from one or more sources (duplicates dropped — each node keeps the
+    earliest copy, ties to the first listed source).
+
+    The single implementation of the flood arithmetic: the ring
+    ``broadcast_schedule`` (via ``graph_broadcast_schedule``) and the
+    grid ``RoutingTable.broadcast_times`` both consume it.
+
+    Returns (t_recv, pick) over ``cols`` (default: every column of
+    ``latency``); pick[i] indexes ``sources``.
+    """
+    sources = np.asarray(list(sources), dtype=np.intp)
+    t_src = np.asarray(list(t_source), dtype=np.float64)
+    lat = latency[sources, :] if cols is None else latency[np.ix_(sources, cols)]
+    cand = t_src[:, None] + lat                         # (S, n)
+    pick = np.argmin(cand, axis=0)                      # first min wins ties
+    return cand[pick, np.arange(cand.shape[1])], pick
+
+
+def relay_arrivals(
+    latency: np.ndarray,
+    sink: int,
+    t_ready: Sequence[float],
+    rows: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Arrival time of each node's model at the sink (store-and-forward
+    over the min-latency path; every model pays its full path latency —
+    no cut-through)."""
+    t_ready = np.asarray(list(t_ready), dtype=np.float64)
+    col = latency[:, sink] if rows is None else latency[rows, sink]
+    return t_ready + col
+
+
+class RoutingTable:
+    """All-pairs ISL routing metrics for one (topology, plan, payload).
+
+    Attributes:
+      hops:    (N, N) int total hop count on the min-latency path
+               (UNREACHABLE for disconnected pairs).
+      latency: (N, N) float relay seconds along the min-latency path
+               (inf for disconnected pairs).
+    """
+
+    def __init__(
+        self,
+        topology: ISLTopology,
+        plan: ISLPlan,
+        payload_bits: float,
+    ):
+        self.topology = topology
+        self.plan = plan
+        self.payload_bits = float(payload_bits)
+        t_a, t_b = plan.hop_times(payload_bits)
+        self.t_hop_intra, self.t_hop_inter = t_a, t_b
+        h_a, h_b = topology.hop_split(t_a, t_b)
+        self.hops_intra, self.hops_inter = h_a, h_b
+        unreachable = h_a == UNREACHABLE
+        self.hops = np.where(unreachable, UNREACHABLE, h_a + h_b)
+        self.latency = np.where(
+            unreachable, np.inf, h_a * t_a + h_b * t_b
+        )
+
+    @property
+    def num_nodes(self) -> int:
+        return self.topology.num_nodes
+
+    def nodes_of(self, sats: Sequence[Tuple[int, int]]) -> np.ndarray:
+        K = self.topology.sats_per_plane
+        arr = np.asarray(list(sats), dtype=np.intp).reshape(-1, 2)
+        return arr[:, 0] * K + arr[:, 1]
+
+    def submatrix(self, nodes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(hops, latency) restricted to a node subset — paths may still
+        transit nodes outside the subset (ISLs are dedicated links; a
+        relay through a neighboring plane costs nothing extra here)."""
+        ix = np.ix_(nodes, nodes)
+        return self.hops[ix], self.latency[ix]
+
+    # -- flood / relay ---------------------------------------------------------
+    def broadcast_times(
+        self,
+        sources: Sequence[int],
+        t_source: Sequence[float],
+        nodes: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``flood_times`` over this table's latency matrix.
+
+        Returns (t_recv, hops, source_index) arrays over ``nodes``
+        (default: every node).  Unreachable nodes get inf / UNREACHABLE.
+        """
+        sources = np.asarray(list(sources), dtype=np.intp)
+        cols = (
+            np.arange(self.num_nodes) if nodes is None
+            else np.asarray(nodes, dtype=np.intp)
+        )
+        t_recv, pick = flood_times(self.latency, sources, t_source, cols)
+        hops = self.hops[sources[pick], cols]
+        return t_recv, hops, pick
+
+    def relay_times(
+        self,
+        sink: int,
+        t_ready: Sequence[float],
+        nodes: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
+        """``relay_arrivals`` over this table's latency matrix."""
+        rows = (
+            np.arange(self.num_nodes) if nodes is None
+            else np.asarray(nodes, dtype=np.intp)
+        )
+        return relay_arrivals(self.latency, sink, t_ready, rows)

@@ -13,9 +13,10 @@ scheduling scenarios are one call away.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 from repro.orbits.constellation import ConstellationConfig, GroundStation
+from repro.orbits.topology import TopologyConfig, get_topology
 
 CONSTELLATION_PRESETS: Dict[str, ConstellationConfig] = {
     # the paper's §V-A setup: 40 sats, 5 planes, 1500 km, 80 deg
@@ -90,24 +91,60 @@ def get_ground_stations(
     return tuple(out)
 
 
+# Default ISL topology per constellation shell: mega-constellation
+# shells fly optical inter-plane cross-links (+Grid); the paper's small
+# setup and the polar OneWeb-like shell keep the intra-plane ring (the
+# OneWeb-like shell's near-polar seam makes sustained cross-links at
+# the seam infeasible — use "grid-seam-cut" explicitly to model it).
+CONSTELLATION_TOPOLOGY: Dict[str, str] = {
+    "paper-5x8": "ring",
+    "walker-12x12": "grid",
+    "starlink-40x22": "grid",
+    "kuiper-34x34": "grid",
+    "oneweb-12x49": "ring",
+}
+
+
 def make_sim_config(
     constellation: str = "paper-5x8",
     ground_stations: Sequence[str] = ("rolla",),
+    topology: Optional[Union[str, TopologyConfig]] = None,
     **overrides,
 ):
     """SimConfig from presets: FedLEO and every baseline in
     ``core/baselines.py`` run on any constellation/ground-segment pair.
+
+    ``topology`` opts into the ISL graph layer: a preset name ("ring",
+    "grid", "grid-seam-cut", ...), a TopologyConfig, or "auto" for the
+    shell's default (``CONSTELLATION_TOPOLOGY``).  When a topology is
+    requested, intra- and inter-plane ISL configs are derived from the
+    constellation geometry (``ISLConfig.from_constellation``: real
+    chord/c propagation delays; FSO rates on inter-plane links).
+    Omitting it keeps the legacy paper provisioning untouched.
 
     Extra keyword arguments override SimConfig fields (horizon_hours,
     coarse_step_s, ...).
     """
     from repro.core.engine import SimConfig
 
+    cfg = get_constellation(constellation)
     gss = get_ground_stations(ground_stations)
     kwargs = dict(
-        constellation=get_constellation(constellation),
+        constellation=cfg,
         ground_station=gss[0],
         ground_stations=gss if len(gss) > 1 else (),
     )
+    if topology is not None:
+        from repro.comms.isl import ISLConfig
+
+        if topology == "auto":
+            topology = CONSTELLATION_TOPOLOGY[constellation]
+        topo_cfg = get_topology(topology)
+        kwargs["topology"] = topo_cfg
+        kwargs["isl"] = ISLConfig.from_constellation(cfg, "intra")
+        if topo_cfg.has_inter_links:
+            kwargs["isl_inter"] = ISLConfig.from_constellation(
+                cfg, "inter", topology=topo_cfg
+            )
     kwargs.update(overrides)     # explicit overrides win over presets
     return SimConfig(**kwargs)

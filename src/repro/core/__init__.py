@@ -6,12 +6,30 @@ from repro.core.aggregation import (
     weighted_average,
 )
 from repro.core.engine import FLStrategy, RunResult, SimConfig
-from repro.core.fedleo import FedLEO
+from repro.core.fedleo import (
+    FedLEO,
+    FedLEOGrid,
+    make_clusters,
+    plan_cluster_round,
+    plan_plane_round,
+)
 from repro.core.fltask import FederatedTask, TrainHyperparams
-from repro.core.propagation import broadcast_schedule, relay_schedule
-from repro.core.scheduling import select_sink
+from repro.core.propagation import (
+    broadcast_schedule,
+    graph_broadcast_schedule,
+    graph_relay_schedule,
+    relay_schedule,
+)
+from repro.core.scheduling import select_sink, select_sink_cluster
 
 __all__ = [
+    "FedLEOGrid",
+    "make_clusters",
+    "plan_cluster_round",
+    "plan_plane_round",
+    "graph_broadcast_schedule",
+    "graph_relay_schedule",
+    "select_sink_cluster",
     "global_aggregate",
     "noniid_weights",
     "partial_aggregate",

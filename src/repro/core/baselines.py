@@ -34,10 +34,11 @@ import numpy as np
 from repro.core import aggregation
 from repro.core.engine import FLStrategy, SimConfig
 from repro.core.fltask import FederatedTask
-from repro.core.propagation import broadcast_schedule, ring_hops
+from repro.core.propagation import broadcast_schedule, ring_hops_matrix
 from repro.core.scheduling import (
     earliest_transfer,
     first_visible_download,
+    naive_sink_slot,
     symmetric_transfer,
 )
 from repro.comms.isl import isl_hop_time
@@ -245,19 +246,15 @@ class FedISL(FLStrategy, _StarMixin):
                 events[s].t_receive + task.train_time_s(clients[s])
                 for s in range(K)
             ]
-            # naive sink: earliest next visitor after mean completion
+            # naive sink: earliest next visitor after completion (one
+            # batched per-plane window sweep)
             t_ready0 = max(t_done)
-            sink, best_start = None, None
-            for s in range(K):
-                w = self.predictor.next_window(Satellite(plane, s), t_ready0)
-                if w is not None and (best_start is None or
-                                      max(w.t_start, t_ready0) < best_start):
-                    sink, best_start = s, max(w.t_start, t_ready0)
+            sink = naive_sink_slot(self.predictor, plane, t_ready0)
             if sink is None:
                 return None, {"failed_plane": plane}
-            t_ready = max(
-                t_done[s] + ring_hops(K, s, sink) * t_hop for s in range(K)
-            )
+            t_ready = float(np.max(
+                np.asarray(t_done) + ring_hops_matrix(K)[sink] * t_hop
+            ))
             t_ul = self._upload_with_retries(
                 Satellite(plane, sink), t_ready, self.payload_bits
             )
@@ -471,18 +468,12 @@ class AsyncFLEO(FLStrategy, _StarMixin):
         ]
         t_hop = isl_hop_time(sim.isl, self.payload_bits)
         t_ready0 = max(t_done)
-        sink, best_start = None, None
-        for s in range(K):
-            w = self.predictor.next_window(Satellite(plane, s), t_ready0)
-            if w is not None and (
-                best_start is None or max(w.t_start, t_ready0) < best_start
-            ):
-                sink, best_start = s, max(w.t_start, t_ready0)
+        sink = naive_sink_slot(self.predictor, plane, t_ready0)
         if sink is None:
             return
-        t_ready = max(
-            t_done[s] + ring_hops(K, s, sink) * t_hop for s in range(K)
-        )
+        t_ready = float(np.max(
+            np.asarray(t_done) + ring_hops_matrix(K)[sink] * t_hop
+        ))
         # naive upload with retries (window chosen after the fact, not
         # scheduled ahead like FedLEO)
         tt = symmetric_transfer(downlink_time, sim.link, self.payload_bits)

@@ -31,6 +31,7 @@ from repro.orbits.constellation import (
     WalkerDelta,
 )
 from repro.orbits.prediction import VisibilityPredictor
+from repro.orbits.topology import TopologyConfig
 
 PyTree = Any
 
@@ -49,6 +50,13 @@ class SimConfig:
     ground_stations: Tuple[GroundStation, ...] = ()
     link: LinkConfig = dataclasses.field(default_factory=LinkConfig)
     isl: ISLConfig = dataclasses.field(default_factory=ISLConfig)
+    # ISL graph shape (ring = the paper's intra-plane-only topology) and
+    # the optional inter-plane (FSO cross-link) provisioning; intra-
+    # plane links keep using ``isl``.  None falls back to ``isl``.
+    topology: TopologyConfig = dataclasses.field(
+        default_factory=TopologyConfig
+    )
+    isl_inter: Optional[ISLConfig] = None
     horizon_hours: float = 72.0           # paper simulates 3 days
     coarse_step_s: float = 10.0
     noniid_alpha: float = 0.5             # non-IID-aware weighting blend

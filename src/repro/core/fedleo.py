@@ -21,22 +21,286 @@ One synchronous round starting at simulated time t:
   5. When the GS holds all L partials it aggregates them (eq. 4, with
      optional non-IID class-coverage weighting) into w^{t+1}.
 
-The learning (local SGD, partial & global aggregation) is real JAX
-compute; the clock is the Satcom simulation.
+``FedLEOGrid`` extends the same round structure to an inter-plane ISL
+topology (+Grid): planes are grouped into *clusters*, one GS download
+seeds a graph flood across each whole cluster, and sink selection runs
+constellation-wide so a single well-placed sink collects a cluster of
+planes over cross-plane relay and uploads one cluster partial — cutting
+GS round-trips when planes outnumber usable windows.
+
+The scheduling logic is factored into pure *planner* functions
+(``plan_plane_round`` / ``plan_cluster_round``) so benchmarks can price
+round times without running any JAX training; the strategies consume
+the planners and add the real learning (local SGD, partial & global
+aggregation).  The clock is the Satcom simulation.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.comms.isl import ISLConfig, isl_hop_time
+from repro.comms.link import LinkConfig, downlink_time
+from repro.comms.routing import ISLPlan, RoutingTable
 from repro.core import aggregation
-from repro.core.engine import FLStrategy
-from repro.core.propagation import broadcast_schedule
-from repro.core.scheduling import first_visible_download, select_sink
+from repro.core.engine import FLStrategy, SimConfig
+from repro.core.propagation import ring_hops_matrix
+from repro.core.scheduling import (
+    ClusterSinkDecision,
+    SinkDecision,
+    earliest_transfer,
+    first_visible_download,
+    first_visible_download_sats,
+    naive_sink_slot,
+    select_sink,
+    select_sink_cluster,
+    symmetric_transfer,
+)
+from repro.orbits.constellation import Satellite, WalkerDelta
+from repro.orbits.prediction import VisibilityPredictor
+from repro.orbits.topology import get_isl_topology
 
 
-class FedLEO(FLStrategy):
+# --- pure round planners (no learning; benchmarkable stand-alone) -------------
+@dataclasses.dataclass(frozen=True)
+class PlanePlan:
+    """Schedule of one plane's round: source, flood, training, sink."""
+
+    plane: int
+    source_slot: int
+    t_source: float             # download completes; flood starts
+    t_receive: np.ndarray       # (K,) per-slot model receipt
+    t_train_done: np.ndarray    # (K,) per-slot training completion
+    decision: SinkDecision
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterPlan:
+    """Schedule of one cluster's round under the grid topology."""
+
+    planes: Tuple[int, ...]
+    sats: Tuple[Tuple[int, int], ...]   # node order: plane-major, slot
+    source: Tuple[int, int]
+    t_source: float
+    t_receive: np.ndarray       # (n,) per-sat model receipt
+    t_train_done: np.ndarray    # (n,)
+    decision: ClusterSinkDecision
+
+
+def _naive_sink_decision(
+    *,
+    walker: WalkerDelta,
+    predictor: VisibilityPredictor,
+    link: LinkConfig,
+    isl: ISLConfig,
+    plane: int,
+    t_train_done: Sequence[float],
+    payload_bits: float,
+) -> Optional[SinkDecision]:
+    """Ablation sink: first visitor after training, AW duration NOT
+    checked — uploads that do not fit a window retry at the next one
+    (the failure mode the paper's scheduler avoids)."""
+    K = walker.config.sats_per_plane
+    t_hop = isl_hop_time(isl, payload_bits)
+    t_ready0 = max(t_train_done)
+    sink = naive_sink_slot(predictor, plane, t_ready0)
+    if sink is None:
+        return None
+    t_ready = float(np.max(
+        np.asarray(t_train_done, dtype=np.float64)
+        + ring_hops_matrix(K)[sink] * t_hop
+    ))
+    # upload with retries across this sink's windows
+    tt = symmetric_transfer(downlink_time, link, payload_bits)
+    hit = earliest_transfer(
+        walker=walker, predictor=predictor,
+        sat=Satellite(plane, sink), t=t_ready, transfer_time=tt,
+    )
+    if hit is None:
+        return None
+    t0, t_done, w = hit
+    return SinkDecision(
+        plane=plane, sink_slot=sink, window=w,
+        t_models_at_sink=t_ready, t_upload_start=t0,
+        t_upload_done=t_done,
+        t_wait=max(0.0, w.t_start - t_ready),
+        candidates_considered=1,
+    )
+
+
+def plan_plane_round(
+    *,
+    walker: WalkerDelta,
+    gs_list,
+    predictor: VisibilityPredictor,
+    link: LinkConfig,
+    isl: ISLConfig,
+    plane: int,
+    t: float,
+    payload_bits: float,
+    train_times: np.ndarray,
+    sink_policy: str = "scheduled",
+    require_next_download: bool = False,
+) -> Optional[PlanePlan]:
+    """Plan one plane's round (paper §IV steps 1-3) without training:
+    GS download -> ring flood -> concurrent training (simulated via
+    ``train_times``) -> sink selection.  Returns None when no feasible
+    window exists inside the predictor horizon."""
+    K = walker.config.sats_per_plane
+    dl = first_visible_download(
+        walker=walker, gs=gs_list, predictor=predictor, link=link,
+        plane=plane, t=t, payload_bits=payload_bits,
+    )
+    if dl is None:
+        return None
+    src_slot, t_recv = dl
+
+    t_hop = isl_hop_time(isl, payload_bits)
+    t_receive = t_recv + ring_hops_matrix(K)[src_slot] * t_hop
+    t_train_done = t_receive + np.asarray(train_times, dtype=np.float64)
+
+    if sink_policy == "scheduled":
+        decision = select_sink(
+            walker=walker, gs=gs_list, predictor=predictor, link=link,
+            isl=isl, plane=plane, t_train_done=t_train_done,
+            payload_bits=payload_bits,
+            require_next_download=require_next_download,
+        )
+    else:
+        decision = _naive_sink_decision(
+            walker=walker, predictor=predictor, link=link, isl=isl,
+            plane=plane, t_train_done=t_train_done,
+            payload_bits=payload_bits,
+        )
+    if decision is None:
+        return None
+    return PlanePlan(
+        plane=plane, source_slot=src_slot, t_source=t_recv,
+        t_receive=t_receive, t_train_done=t_train_done, decision=decision,
+    )
+
+
+def plan_cluster_round(
+    *,
+    walker: WalkerDelta,
+    gs_list,
+    predictor: VisibilityPredictor,
+    link: LinkConfig,
+    routing: RoutingTable,
+    planes: Sequence[int],
+    t: float,
+    payload_bits: float,
+    train_times: np.ndarray,
+    require_next_download: bool = False,
+) -> Optional[ClusterPlan]:
+    """Plan one cluster's round over the ISL graph: a single GS download
+    seeds a flood across every plane of the cluster, and one
+    constellation-wide sink collects the cluster over cross-plane relay.
+    With a single-plane cluster and a ring topology this degenerates to
+    ``plan_plane_round`` exactly (bit-identical schedules)."""
+    K = walker.config.sats_per_plane
+    sats = [(p, s) for p in planes for s in range(K)]
+    nodes = routing.nodes_of(sats)
+
+    dl = first_visible_download_sats(
+        walker=walker, gs=gs_list, predictor=predictor, link=link,
+        sats=sats, t=t, payload_bits=payload_bits,
+    )
+    if dl is None:
+        return None
+    src_i, t_recv = dl
+
+    t_receive, _, _ = routing.broadcast_times(
+        [nodes[src_i]], [t_recv], nodes=nodes
+    )
+    t_train_done = t_receive + np.asarray(train_times, dtype=np.float64)
+
+    _, relay_latency = routing.submatrix(nodes)
+    decision = select_sink_cluster(
+        walker=walker, gs=gs_list, predictor=predictor, link=link,
+        sats=sats, relay_latency=relay_latency,
+        t_train_done=t_train_done, payload_bits=payload_bits,
+        require_next_download=require_next_download,
+    )
+    if decision is None:
+        return None
+    return ClusterPlan(
+        planes=tuple(planes), sats=tuple(sats), source=sats[src_i],
+        t_source=t_recv, t_receive=t_receive, t_train_done=t_train_done,
+        decision=decision,
+    )
+
+
+def make_clusters(
+    num_planes: int, cluster_planes: int
+) -> List[Tuple[int, ...]]:
+    """Group adjacent planes into clusters of ``cluster_planes``."""
+    return [
+        tuple(range(i, min(i + cluster_planes, num_planes)))
+        for i in range(0, num_planes, cluster_planes)
+    ]
+
+
+# --- strategies ---------------------------------------------------------------
+class _SyncRoundMixin:
+    """Shared synchronous round driver for FedLEO and FedLEOGrid: plan
+    each plane group's schedule, run the real local training, aggregate
+    the group partial at its sink (eq. 9), then the GS global aggregate
+    (eq. 4 + non-IID weighting).  Only the planner and the per-group
+    stats differ between the ring and grid variants."""
+
+    def _sync_round(
+        self,
+        groups: Sequence[Tuple[int, ...]],
+        plan_group,     # (group, clients) -> PlanePlan | ClusterPlan | None
+        fail_event,     # group -> events dict for an infeasible round
+        group_stats,    # plan -> stats dict
+        events_key: str,
+    ) -> Tuple[Optional[float], Dict[str, Any]]:
+        sim, task = self.sim, self.task
+        upload_done: List[float] = []
+        stats: List[Dict[str, Any]] = []
+        partials = []
+        group_counts: List[int] = []
+        group_hists: List[np.ndarray] = []
+
+        for group in groups:
+            # node-ordered client list (plane-major, slot order) so that
+            # client i sits on the group's i-th satellite
+            clients = [c for p in group for c in self.plane_clients(p)]
+            plan = plan_group(group, clients)
+            if plan is None:
+                return None, fail_event(group)
+
+            stacked = task.local_train(
+                self.global_params, clients, self._next_rng()
+            )
+            counts = [task.num_samples(c) for c in clients]
+            partials.append(
+                aggregation.partial_aggregate(
+                    stacked, counts, use_kernel=sim.use_kernel
+                )
+            )
+            group_counts.append(int(np.sum(counts)))
+            group_hists.append(
+                np.sum([task.clients[c].histogram for c in clients], axis=0)
+            )
+            upload_done.append(plan.decision.t_upload_done)
+            stats.append(group_stats(plan))
+
+        self.global_params = aggregation.global_aggregate(
+            aggregation.stack_pytrees(partials),
+            group_counts,
+            histograms=np.stack(group_hists),
+            noniid_alpha=sim.noniid_alpha,
+            use_kernel=sim.use_kernel,
+        )
+        return max(upload_done), {events_key: stats}
+
+
+class FedLEO(_SyncRoundMixin, FLStrategy):
     name = "FedLEO"
 
     def __init__(self, *args, require_next_download: bool = False,
@@ -56,143 +320,112 @@ class FedLEO(FLStrategy):
         if sink_policy != "scheduled":
             self.name = f"FedLEO({sink_policy})"
 
-    def _naive_sink(self, plane: int, t_train_done):
-        """Ablation sink: first visitor after training, AW duration NOT
-        checked — uploads that do not fit a window retry at the next one
-        (the failure mode the paper's scheduler avoids)."""
-        from repro.comms.isl import isl_hop_time
-        from repro.comms.link import downlink_time
-        from repro.core.propagation import ring_hops
-        from repro.core.scheduling import (
-            SinkDecision,
-            earliest_transfer,
-            symmetric_transfer,
-        )
-        from repro.orbits.constellation import Satellite
+    def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        sim, task = self.sim, self.task
 
-        sim = self.sim
-        K = sim.constellation.sats_per_plane
-        t_hop = isl_hop_time(sim.isl, self.payload_bits)
-        t_ready0 = max(t_train_done)
-        sink, best_start, best_w = None, None, None
-        for s in range(K):
-            w = self.predictor.next_window(Satellite(plane, s), t_ready0)
-            if w is not None and (
-                best_start is None or max(w.t_start, t_ready0) < best_start
-            ):
-                sink, best_start, best_w = s, max(w.t_start, t_ready0), w
-        if sink is None:
-            return None
-        t_ready = max(
-            t_train_done[s] + ring_hops(K, s, sink) * t_hop
-            for s in range(K)
+        def plan_group(group, clients):
+            (plane,) = group
+            return plan_plane_round(
+                walker=self.walker, gs_list=self.gs_list,
+                predictor=self.predictor, link=sim.link, isl=sim.isl,
+                plane=plane, t=t, payload_bits=self.payload_bits,
+                train_times=np.array(
+                    [task.train_time_s(c) for c in clients]
+                ),
+                sink_policy=self.sink_policy,
+                require_next_download=self.require_next_download,
+            )
+
+        def group_stats(plan):
+            d = plan.decision
+            return {
+                "plane": plan.plane,
+                "source_slot": plan.source_slot,
+                "t_broadcast_done": plan.t_source,
+                "sink_slot": d.sink_slot,
+                "t_models_at_sink": d.t_models_at_sink,
+                "t_wait_sink": d.t_wait,
+                "t_upload_done": d.t_upload_done,
+            }
+
+        return self._sync_round(
+            [(p,) for p in range(sim.constellation.num_planes)],
+            plan_group,
+            lambda group: {"failed_plane": group[0]},
+            group_stats,
+            "planes",
         )
-        # upload with retries across this sink's windows
-        tt = symmetric_transfer(downlink_time, sim.link, self.payload_bits)
-        hit = earliest_transfer(
-            walker=self.walker, predictor=self.predictor,
-            sat=Satellite(plane, sink), t=t_ready, transfer_time=tt,
+
+
+class FedLEOGrid(_SyncRoundMixin, FLStrategy):
+    """FedLEO over an inter-plane ISL topology (+Grid).
+
+    Planes are grouped into clusters of ``cluster_planes`` adjacent
+    planes; per round each cluster needs only ONE GS download (the
+    flood crosses planes over inter-plane ISLs) and ONE upload (the
+    cluster sink collects every plane via cross-plane relay) — L /
+    cluster_planes GS round-trips instead of L.  With
+    ``cluster_planes=1`` and a ring topology this is bit-identical to
+    ``FedLEO`` (schedules and sink decisions; equivalence-tested).
+    """
+
+    name = "FedLEO-Grid"
+
+    def __init__(self, task, sim: SimConfig, *,
+                 cluster_planes: Optional[int] = None,
+                 require_next_download: bool = False):
+        super().__init__(task, sim)
+        self.require_next_download = require_next_download
+        self.topology = get_isl_topology(sim.constellation, sim.topology)
+        self.routing = RoutingTable(
+            self.topology,
+            ISLPlan(intra=sim.isl, inter=sim.isl_inter),
+            self.payload_bits,
         )
-        if hit is None:
-            return None
-        t0, t_done, w = hit
-        return SinkDecision(
-            plane=plane, sink_slot=sink, window=w,
-            t_models_at_sink=t_ready, t_upload_start=t0,
-            t_upload_done=t_done,
-            t_wait=max(0.0, w.t_start - t_ready),
-            candidates_considered=1,
-        )
+        L = sim.constellation.num_planes
+        if cluster_planes is None:
+            cluster_planes = (
+                min(4, L) if self.topology.config.has_inter_links else 1
+            )
+        if cluster_planes > 1 and not self.topology.config.has_inter_links:
+            raise ValueError(
+                "multi-plane clusters need inter-plane ISLs "
+                f"(topology kind={sim.topology.kind!r} has none)"
+            )
+        self.cluster_planes = cluster_planes
+        self.clusters = make_clusters(L, cluster_planes)
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
         sim, task = self.sim, self.task
-        L = sim.constellation.num_planes
-        K = sim.constellation.sats_per_plane
 
-        plane_upload_done: List[float] = []
-        plane_stats: List[Dict[str, Any]] = []
-        trained_stacks = []
-        plane_counts: List[int] = []
-        plane_hists: List[np.ndarray] = []
-
-        for plane in range(L):
-            clients = self.plane_clients(plane)
-            # 1. GS -> first reachable satellite of the plane
-            dl = first_visible_download(
-                walker=self.walker,
-                gs=self.gs_list,
-                predictor=self.predictor,
-                link=sim.link,
-                plane=plane,
-                t=t,
+        def plan_group(group, clients):
+            return plan_cluster_round(
+                walker=self.walker, gs_list=self.gs_list,
+                predictor=self.predictor, link=sim.link,
+                routing=self.routing, planes=group, t=t,
                 payload_bits=self.payload_bits,
-            )
-            if dl is None:
-                return None, {"failed_plane": plane}
-            src_slot, t_recv = dl
-
-            # 2. flood the ring; train upon receipt (concurrent)
-            events = broadcast_schedule(
-                K, [src_slot], [t_recv], self.payload_bits, sim.isl
-            )
-            t_train_done = [
-                events[s].t_receive + task.train_time_s(clients[s])
-                for s in range(K)
-            ]
-
-            # 3. distributed sink selection (same pure function on every sat)
-            if self.sink_policy == "scheduled":
-                decision = select_sink(
-                    walker=self.walker,
-                    gs=self.gs_list,
-                    predictor=self.predictor,
-                    link=sim.link,
-                    isl=sim.isl,
-                    plane=plane,
-                    t_train_done=t_train_done,
-                    payload_bits=self.payload_bits,
-                    require_next_download=self.require_next_download,
-                )
-            else:
-                decision = self._naive_sink(plane, t_train_done)
-            if decision is None:
-                return None, {"failed_plane": plane}
-
-            # 4. real local training + sink partial aggregation (eq. 9)
-            stacked = task.local_train(
-                self.global_params, clients, self._next_rng()
-            )
-            counts = [task.num_samples(c) for c in clients]
-            partial = aggregation.partial_aggregate(
-                stacked, counts, use_kernel=sim.use_kernel
-            )
-            trained_stacks.append(partial)
-            plane_counts.append(int(np.sum(counts)))
-            plane_hists.append(
-                np.sum([task.clients[c].histogram for c in clients], axis=0)
+                train_times=np.array(
+                    [task.train_time_s(c) for c in clients]
+                ),
+                require_next_download=self.require_next_download,
             )
 
-            plane_upload_done.append(decision.t_upload_done)
-            plane_stats.append(
-                {
-                    "plane": plane,
-                    "source_slot": src_slot,
-                    "t_broadcast_done": t_recv,
-                    "sink_slot": decision.sink_slot,
-                    "t_models_at_sink": decision.t_models_at_sink,
-                    "t_wait_sink": decision.t_wait,
-                    "t_upload_done": decision.t_upload_done,
-                }
-            )
+        def group_stats(plan):
+            d = plan.decision
+            return {
+                "planes": list(plan.planes),
+                "source": plan.source,
+                "t_broadcast_done": plan.t_source,
+                "sink": (d.sink.plane, d.sink.slot),
+                "t_models_at_sink": d.t_models_at_sink,
+                "t_wait_sink": d.t_wait,
+                "t_upload_done": d.t_upload_done,
+            }
 
-        # 5. GS global aggregation (eq. 4 + non-IID weighting)
-        stacked_partials = aggregation.stack_pytrees(trained_stacks)
-        self.global_params = aggregation.global_aggregate(
-            stacked_partials,
-            plane_counts,
-            histograms=np.stack(plane_hists),
-            noniid_alpha=sim.noniid_alpha,
-            use_kernel=sim.use_kernel,
+        return self._sync_round(
+            self.clusters,
+            plan_group,
+            lambda group: {"failed_cluster": group},
+            group_stats,
+            "clusters",
         )
-        t_round_end = max(plane_upload_done)
-        return t_round_end, {"planes": plane_stats}

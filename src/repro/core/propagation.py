@@ -1,9 +1,11 @@
-"""Intra-plane model propagation (paper §IV-A).
+"""Model propagation over the ISL graph (paper §IV-A, generalized).
 
-Given the satellite that first receives the global model from the GS
-(the *source*), the model floods both directions around the plane's
-bidirectional ring; each satellite forwards to its next-hop neighbor.
-Relaying trained models to the sink works the same way in reverse.
+Given the satellite(s) that first receive the global model from the GS
+(the *sources*), the model floods the ISL topology; each satellite
+forwards to its neighbors.  Relaying trained models to the sink works
+the same way in reverse.  The paper's intra-plane bidirectional ring is
+the degenerate (single-plane) case; with inter-plane cross-links the
+same planners flood a whole cluster of planes.
 
 The planner is pure geometry + eq. (20) timing:
 
@@ -15,21 +17,30 @@ The planner is pure geometry + eq. (20) timing:
   * ``relay_schedule``: per-satellite arrival time of its trained model
     at the sink (store-and-forward over `hops` ISL hops, eq. 21); the
     orbit's relay completion is the max arrival.
+  * ``graph_broadcast_schedule`` / ``graph_relay_schedule``: the same
+    semantics over *arbitrary* hop/latency matrices (e.g. a
+    ``RoutingTable`` built from an inter-plane +Grid topology).
+
+All schedules are computed with one batched matrix expression per call
+— no per-slot Python loops.  ``ring_hops_matrix`` remains the single
+vectorized source of the intra-plane hop metric, and the ring
+schedules are exactly the graph schedules evaluated on
+``ring_hops_matrix(K) * t_hop``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
 from repro.comms.isl import ISLConfig, isl_hop_time
-from repro.orbits.constellation import WalkerDelta
+from repro.comms.routing import flood_times, relay_arrivals
 
 
 @dataclasses.dataclass(frozen=True)
 class PropagationEvent:
-    slot: int
+    slot: int               # node: in-plane slot (ring) or graph node id
     t_receive: float
     hops: int
     source_slot: int
@@ -43,13 +54,68 @@ def ring_hops(num_slots: int, a: int, b: int) -> int:
 def ring_hops_matrix(num_slots: int) -> np.ndarray:
     """hops[a, b] = ring_hops(num_slots, a, b) for every slot pair.
 
-    The single source of truth for the ISL hop metric in vectorized
-    code — keep it in lockstep with ``ring_hops`` if the topology ever
-    grows beyond the intra-plane ring.
+    The single source of truth for the intra-plane ISL hop metric in
+    vectorized code; ``repro.orbits.topology.ISLTopology`` reproduces it
+    exactly as the per-plane blocks of the ring topology's hop matrix
+    (equivalence-tested).
     """
     slots = np.arange(num_slots)
     d = np.abs(slots[:, None] - slots[None, :]) % num_slots
     return np.minimum(d, num_slots - d)
+
+
+def graph_broadcast_schedule(
+    hops: np.ndarray,
+    latency: np.ndarray,
+    source_nodes: Sequence[int],
+    t_source: Sequence[float],
+) -> List[PropagationEvent]:
+    """Flood the model over an arbitrary ISL graph from one or more
+    sources; every node keeps its earliest copy (ties resolve to the
+    first listed source).
+
+    Args:
+      hops: (N, N) hop-count matrix (UNREACHABLE/-1 for disconnected).
+      latency: (N, N) relay seconds between node pairs (inf when
+        disconnected).
+      source_nodes / t_source: nodes holding the model and when.
+
+    Returns one event per node; unreachable nodes get t_receive=inf.
+    """
+    src = np.asarray(list(source_nodes), dtype=np.intp)
+    n = latency.shape[0]
+    t_recv, pick = flood_times(latency, src, t_source)
+    h = hops[src[pick], np.arange(n)]
+    return [
+        PropagationEvent(
+            slot=int(k),
+            t_receive=float(t_recv[k]),
+            hops=int(h[k]),
+            source_slot=int(src[pick[k]]),
+        )
+        for k in range(n)
+    ]
+
+
+def graph_relay_schedule(
+    hops: np.ndarray,
+    latency: np.ndarray,
+    sink_node: int,
+    t_ready: Sequence[float],
+) -> List[PropagationEvent]:
+    """Arrival time of each node's trained model at the sink over the
+    graph's min-latency paths (store-and-forward, no cut-through)."""
+    t_ready = np.asarray(list(t_ready), dtype=np.float64)
+    arrive = relay_arrivals(latency, sink_node, t_ready)
+    return [
+        PropagationEvent(
+            slot=int(k),
+            t_receive=float(arrive[k]),
+            hops=int(hops[k, sink_node]),
+            source_slot=int(k),
+        )
+        for k in range(t_ready.size)
+    ]
 
 
 def broadcast_schedule(
@@ -72,16 +138,10 @@ def broadcast_schedule(
       dropped by taking the min over sources/directions).
     """
     t_hop = isl_hop_time(isl, payload_bits)
-    events: Dict[int, PropagationEvent] = {}
-    for src, t0 in zip(source_slots, t_source):
-        for slot in range(num_slots):
-            h = ring_hops(num_slots, src, slot)
-            t_recv = t0 + h * t_hop
-            if slot not in events or t_recv < events[slot].t_receive:
-                events[slot] = PropagationEvent(
-                    slot=slot, t_receive=t_recv, hops=h, source_slot=src
-                )
-    return [events[s] for s in range(num_slots)]
+    hops = ring_hops_matrix(num_slots)
+    return graph_broadcast_schedule(
+        hops, hops * t_hop, source_slots, t_source
+    )
 
 
 def relay_schedule(
@@ -100,18 +160,8 @@ def relay_schedule(
     relaying satellites.
     """
     t_hop = isl_hop_time(isl, payload_bits)
-    out = []
-    for slot in range(num_slots):
-        h = ring_hops(num_slots, slot, sink_slot)
-        out.append(
-            PropagationEvent(
-                slot=slot,
-                t_receive=t_ready[slot] + h * t_hop,
-                hops=h,
-                source_slot=slot,
-            )
-        )
-    return out
+    hops = ring_hops_matrix(num_slots)
+    return graph_relay_schedule(hops, hops * t_hop, sink_slot, t_ready)
 
 
 def relay_completion_time(events: Sequence[PropagationEvent]) -> float:

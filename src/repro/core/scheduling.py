@@ -83,28 +83,18 @@ def _slant_ranges(
     return np.linalg.norm(r_s - r_g, axis=-1)
 
 
-def _ready_times(
-    K: int, t_train_done: Sequence[float], t_hop: float
-) -> np.ndarray:
-    """Eq. 21 for every candidate at once: t_ready[c] = max_s(t_done[s] +
-    ring_hops(s, c) * t_hop)."""
-    hops = ring_hops_matrix(K)                             # (cand, src)
-    return np.max(
-        np.asarray(t_train_done, dtype=np.float64)[None, :] + hops * t_hop,
-        axis=1,
-    )
-
-
 def _first_fit_transfers(
     *,
     walker: WalkerDelta,
     predictor: VisibilityPredictor,
-    plane: int,
+    sats: Sequence[Tuple[int, int]],
     t_ready: np.ndarray,
     transfer_time,  # (gs_index, distance) -> (need_s, done_s)
 ) -> List[Optional[Tuple[float, float, int]]]:
-    """Per slot: (t0, t0 + done_s, window_index) of the earliest-
-    completing window after t_ready[slot] that covers need_s, or None.
+    """Per satellite of ``sats`` (arbitrary (plane, slot) pairs — one
+    plane's slots, or a whole cluster of planes): (t0, t0 + done_s,
+    window_index) of the earliest-completing window after t_ready[i]
+    that covers need_s, or None.
 
     ``need_s`` is the window-feasibility requirement, ``done_s`` the
     offset of the reported completion — they differ when a window must
@@ -125,19 +115,22 @@ def _first_fit_transfers(
     # the predictor assigned every window's gs_index, so it — not the
     # caller — is the authority on which station a window belongs to
     gss = predictor.ground_stations
-    K = walker.config.sats_per_plane
-    recs = [predictor.sat_arrays(plane, s) for s in range(K)]
+    sats = list(sats)
+    n = len(sats)
+    planes_arr = np.array([p for p, _ in sats])
+    slots_arr = np.array([s for _, s in sats])
+    recs = [predictor.sat_arrays(p, s) for p, s in sats]
     ptrs: List[Optional[int]] = []
     for s, rec in enumerate(recs):
-        if rec is None:
+        if rec is None or not np.isfinite(t_ready[s]):
             ptrs.append(None)
             continue
         j = int(np.searchsorted(rec["cummax_end"], t_ready[s], side="right"))
         ptrs.append(j if j < rec["starts"].size else None)
 
-    out: List[Optional[Tuple[float, float, int]]] = [None] * K
-    sweeps: List[Tuple[int, int]] = []     # (slot, overlap-window index)
-    pending = [s for s in range(K) if ptrs[s] is not None]
+    out: List[Optional[Tuple[float, float, int]]] = [None] * n
+    sweeps: List[Tuple[int, int]] = []     # (sat index, overlap-window index)
+    pending = [s for s in range(n) if ptrs[s] is not None]
     while pending:
         t0s = np.array(
             [max(recs[s]["starts"][ptrs[s]], t_ready[s]) for s in pending]
@@ -145,7 +138,7 @@ def _first_fit_transfers(
         gs_idx = np.array([recs[s]["gs_index"][ptrs[s]] for s in pending])
         dists = _slant_ranges(
             walker, gss, gs_idx,
-            np.full(len(pending), plane), np.array(pending), t0s,
+            planes_arr[pending], slots_arr[pending], t0s,
         )
         nxt = []
         for s, t0, d in zip(pending, t0s, dists):
@@ -177,10 +170,10 @@ def _first_fit_transfers(
             [max(recs[s]["starts"][k], t_ready[s]) for s, k in sweeps]
         )
         gs_idx = np.array([recs[s]["gs_index"][k] for s, k in sweeps])
+        sweep_sats = np.array([s for s, _ in sweeps])
         dists = _slant_ranges(
             walker, gss, gs_idx,
-            np.full(len(sweeps), plane),
-            np.array([s for s, _ in sweeps]), t0s,
+            planes_arr[sweep_sats], slots_arr[sweep_sats], t0s,
         )
         for (s, k), t0k, dk in zip(sweeps, t0s, dists):
             rec = recs[s]
@@ -271,58 +264,29 @@ def select_sink(
       The SinkDecision, or None if no feasible window exists in the
       predictor's horizon (caller should extend the horizon).
     """
-    assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
-        "predictor was built over a different ground segment"
     K = walker.config.sats_per_plane
     t_hop = isl_hop_time(isl, payload_bits)
-    t_ready = _ready_times(K, t_train_done, t_hop)        # eq. 21, batched
-
-    def exchange_time(_gi: int, d: float):
-        # completion is the partial-model upload (t_c^D); the optional
-        # next-round download only widens the feasibility requirement
-        t_dl = downlink_time(link, payload_bits, d)
-        need = t_dl
-        if require_next_download:
-            need += uplink_time(link, payload_bits, d)
-        return need, t_dl
-
-    fits = _first_fit_transfers(
-        walker=walker, predictor=predictor, plane=plane,
-        t_ready=t_ready, transfer_time=exchange_time,
+    # the ring is the degenerate graph: eq. 21's hop metric as a relay-
+    # latency matrix, then the one shared cluster scheduler
+    cd = select_sink_cluster(
+        walker=walker, gs=gs, predictor=predictor, link=link,
+        sats=[(plane, s) for s in range(K)],
+        relay_latency=ring_hops_matrix(K) * t_hop,
+        t_train_done=t_train_done, payload_bits=payload_bits,
+        require_next_download=require_next_download,
     )
-
-    best: Optional[SinkDecision] = None
-    considered = 0
-    for cand in range(K):
-        if fits[cand] is None:
-            continue
-        t0, t_done, j = fits[cand]
-        w = predictor.windows_of(Satellite(plane, cand))[j]
-        considered += 1
-        decision = SinkDecision(
-            plane=plane,
-            sink_slot=cand,
-            window=w,
-            t_models_at_sink=float(t_ready[cand]),
-            t_upload_start=t0,
-            t_upload_done=t_done,
-            t_wait=max(0.0, w.t_start - float(t_ready[cand])),
-            candidates_considered=0,
-        )
-        # minimize completion; tie -> earliest window start
-        if (
-            best is None
-            or decision.t_upload_done < best.t_upload_done - 1e-9
-            or (
-                abs(decision.t_upload_done - best.t_upload_done) <= 1e-9
-                and decision.window.t_start < best.window.t_start
-            )
-        ):
-            best = decision
-
-    if best is None:
+    if cd is None:
         return None
-    return dataclasses.replace(best, candidates_considered=considered)
+    return SinkDecision(
+        plane=plane,
+        sink_slot=cd.sink.slot,
+        window=cd.window,
+        t_models_at_sink=cd.t_models_at_sink,
+        t_upload_start=cd.t_upload_start,
+        t_upload_done=cd.t_upload_done,
+        t_wait=cd.t_wait,
+        candidates_considered=cd.candidates_considered,
+    )
 
 
 def first_visible_download(
@@ -344,20 +308,152 @@ def first_visible_download(
     assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
         "predictor was built over a different ground segment"
     K = walker.config.sats_per_plane
+    return first_visible_download_sats(
+        walker=walker, gs=gs, predictor=predictor, link=link,
+        sats=[(plane, s) for s in range(K)], t=t,
+        payload_bits=payload_bits, _skip_gs_check=True,
+    )
 
+
+def first_visible_download_sats(
+    *,
+    walker: WalkerDelta,
+    gs: GroundStations,
+    predictor: VisibilityPredictor,
+    link: LinkConfig,
+    sats: Sequence[Tuple[int, int]],
+    t: float,
+    payload_bits: float,
+    _skip_gs_check: bool = False,
+) -> Optional[tuple]:
+    """Earliest (index into ``sats``, t_received) at which ANY of the
+    listed satellites can finish downloading w^t from the GS after time
+    t — ``first_visible_download`` over an arbitrary satellite set (a
+    cluster of planes under the grid topology)."""
+    if not _skip_gs_check:
+        assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
+            "predictor was built over a different ground segment"
+    sats = list(sats)
     fits = _first_fit_transfers(
-        walker=walker, predictor=predictor, plane=plane,
-        t_ready=np.full(K, float(t)),
+        walker=walker, predictor=predictor, sats=sats,
+        t_ready=np.full(len(sats), float(t)),
         transfer_time=symmetric_transfer(uplink_time, link, payload_bits),
     )
 
-    best_slot, best_done = None, None
-    for slot in range(K):
-        if fits[slot] is None:
+    best_i, best_done = None, None
+    for i in range(len(sats)):
+        if fits[i] is None:
             continue
-        done = fits[slot][1]
+        done = fits[i][1]
         if best_done is None or done < best_done:
-            best_slot, best_done = slot, done
-    if best_slot is None:
+            best_i, best_done = i, done
+    if best_i is None:
         return None
-    return best_slot, best_done
+    return best_i, best_done
+
+
+def naive_sink_slot(
+    predictor: VisibilityPredictor, plane: int, t_ready: float
+) -> Optional[int]:
+    """The naive-sink ablation's slot choice: the plane's next visitor
+    after t_ready, window duration ignored (earliest effective start,
+    ties to the lowest slot).  One batched per-plane sweep instead of K
+    scalar ``next_window`` calls."""
+    starts, _ = predictor.plane_next_window_starts(plane, t_ready)
+    eff = np.maximum(starts, t_ready)
+    if not np.any(np.isfinite(eff)):
+        return None
+    return int(np.argmin(eff))
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSinkDecision:
+    """Sink choice for a *cluster* of planes under the grid topology:
+    one sink satellite collects every plane's trained models over
+    cross-plane ISL relay and uploads the cluster partial in a single
+    GS pass."""
+
+    planes: Tuple[int, ...]
+    sink: Satellite
+    window: VisibilityWindow
+    t_models_at_sink: float     # all cluster models collected
+    t_upload_start: float
+    t_upload_done: float
+    t_wait: float
+    candidates_considered: int
+
+
+def select_sink_cluster(
+    *,
+    walker: WalkerDelta,
+    gs: GroundStations,
+    predictor: VisibilityPredictor,
+    link: LinkConfig,
+    sats: Sequence[Tuple[int, int]],
+    relay_latency: np.ndarray,
+    t_train_done: Sequence[float],
+    payload_bits: float,
+    require_next_download: bool = False,
+) -> Optional[ClusterSinkDecision]:
+    """Constellation-wide sink selection over an arbitrary satellite set.
+
+    The eq. (21)/(22) machinery of ``select_sink`` with the ring hop
+    metric replaced by a graph relay-latency matrix: candidate c's
+    readiness is max_s(t_train_done[s] + relay_latency[c, s]), and the
+    feasibility/completion rules are unchanged.  With ``sats`` = one
+    plane and ``relay_latency = ring_hops_matrix(K) * t_hop`` this is
+    bit-identical to ``select_sink`` (equivalence-tested).
+    """
+    assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
+        "predictor was built over a different ground segment"
+    sats = list(sats)
+    planes = tuple(sorted({p for p, _ in sats}))
+    t_ready = np.max(
+        np.asarray(t_train_done, dtype=np.float64)[None, :] + relay_latency,
+        axis=1,
+    )
+
+    def exchange_time(_gi: int, d: float):
+        t_dl = downlink_time(link, payload_bits, d)
+        need = t_dl
+        if require_next_download:
+            need += uplink_time(link, payload_bits, d)
+        return need, t_dl
+
+    fits = _first_fit_transfers(
+        walker=walker, predictor=predictor, sats=sats,
+        t_ready=t_ready, transfer_time=exchange_time,
+    )
+
+    best: Optional[ClusterSinkDecision] = None
+    considered = 0
+    for cand in range(len(sats)):
+        if fits[cand] is None:
+            continue
+        t0, t_done, j = fits[cand]
+        w = predictor.windows_of(Satellite(*sats[cand]))[j]
+        considered += 1
+        decision = ClusterSinkDecision(
+            planes=planes,
+            sink=Satellite(*sats[cand]),
+            window=w,
+            t_models_at_sink=float(t_ready[cand]),
+            t_upload_start=t0,
+            t_upload_done=t_done,
+            t_wait=max(0.0, w.t_start - float(t_ready[cand])),
+            candidates_considered=0,
+        )
+        # minimize completion; tie -> earliest window start
+        if (
+            best is None
+            or decision.t_upload_done < best.t_upload_done - 1e-9
+            or (
+                abs(decision.t_upload_done - best.t_upload_done) <= 1e-9
+                and decision.window.t_start < best.window.t_start
+            )
+        ):
+            best = decision
+
+    if best is None:
+        return None
+    return dataclasses.replace(best, candidates_considered=considered)

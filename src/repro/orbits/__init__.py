@@ -17,8 +17,26 @@ from repro.orbits.visibility import (
     WindowTable,
 )
 from repro.orbits.prediction import VisibilityPredictor, as_gs_list
+from repro.orbits.topology import (
+    INTER,
+    INTRA,
+    ISLTopology,
+    TOPOLOGY_PRESETS,
+    TopologyConfig,
+    get_isl_topology,
+    get_topology,
+    phased_slot_shift,
+)
 
 __all__ = [
+    "get_isl_topology",
+    "INTER",
+    "INTRA",
+    "ISLTopology",
+    "TOPOLOGY_PRESETS",
+    "TopologyConfig",
+    "get_topology",
+    "phased_slot_shift",
     "ConstellationConfig",
     "GroundStation",
     "Satellite",

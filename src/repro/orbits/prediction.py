@@ -120,6 +120,7 @@ class VisibilityPredictor:
                 "gs_index": self.table.gs_index[idx],
             }
         self._win_cache: Dict[Tuple[int, int], List[VisibilityWindow]] = {}
+        self._plane_pads: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
 
     # -- window access -----------------------------------------------------------
     @property
@@ -204,6 +205,41 @@ class VisibilityPredictor:
             if rec["ends"][i] - effective_start >= min_duration:
                 return wins[i]
         return None
+
+    def _plane_padded(self, plane: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(starts, cummax_end) as (K, W+1) inf-padded matrices — the
+        batch surface for one-sweep per-plane window queries."""
+        if plane not in self._plane_pads:
+            K = self.walker.config.sats_per_plane
+            recs = [self._by_sat.get((plane, s)) for s in range(K)]
+            width = max(
+                (r["starts"].size for r in recs if r is not None), default=0
+            )
+            starts = np.full((K, width + 1), np.inf)
+            cummax = np.full((K, width + 1), np.inf)
+            for s, rec in enumerate(recs):
+                if rec is None:
+                    continue
+                w = rec["starts"].size
+                starts[s, :w] = rec["starts"]
+                cummax[s, :w] = rec["cummax_end"]
+            self._plane_pads[plane] = (starts, cummax)
+        return self._plane_pads[plane]
+
+    def plane_next_window_starts(
+        self, plane: int, t: float
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """For every slot of a plane at once: (t_start, window index) of
+        its first window with t_end > t — the batched equivalent of K
+        ``next_window`` calls (one sweep over inf-padded per-plane
+        arrays instead of K scalar bisections).  Slots with no such
+        window get t_start=inf (their index points at padding).
+        """
+        starts, cummax = self._plane_padded(plane)
+        # cummax_end is non-decreasing per row, so the count of entries
+        # <= t is exactly searchsorted(..., side="right")
+        idx = np.sum(cummax <= t, axis=1)
+        return starts[np.arange(starts.shape[0]), idx], idx
 
     def wait_time(self, sat: Satellite, t: float) -> Optional[float]:
         """t_wait(k): time from t until the satellite is next visible."""
