@@ -29,11 +29,25 @@ BENCH_TRAJECTORY = os.path.join(REPO_ROOT, "BENCH_topology.json")
 
 def append_bench(rec: Dict, path: Optional[str] = None) -> None:
     """Print a ``BENCH {json}`` line and append it to the repo-root
-    trajectory file (one JSON record per line)."""
+    trajectory file (one JSON record per line).
+
+    Tolerant of a corrupt/truncated final line (e.g. a benchmark killed
+    mid-write): the partial line is newline-quarantined so the appended
+    record always starts a fresh, parseable line.
+    """
     line = json.dumps(rec)
     print("BENCH " + line)
-    with open(path or BENCH_TRAJECTORY, "a") as f:
-        f.write(line + "\n")
+    target = path or BENCH_TRAJECTORY
+    prefix = ""
+    try:
+        with open(target, "rb") as f:
+            f.seek(-1, os.SEEK_END)
+            if f.read(1) not in (b"\n", b""):
+                prefix = "\n"
+    except (FileNotFoundError, OSError):
+        pass                    # missing or empty file: nothing to fix
+    with open(target, "a") as f:
+        f.write(prefix + line + "\n")
 
 
 def make_task(
@@ -79,3 +93,82 @@ def timed(fn: Callable) -> tuple:
     t0 = time.time()
     out = fn()
     return out, (time.time() - t0) * 1e6
+
+
+def price_ring_round(
+    walker, gs_list, predictor, sim, *,
+    payload_bits: float = PAYLOAD_BITS,
+    train_time_s: float = 600.0,
+    ledger=None,
+    t: float = 0.0,
+):
+    """Full FedLEO ring round time via the pure plane planners (no JAX
+    training): every plane needs its own GS download and sink upload.
+    With a ``ledger`` each chosen upload is booked so later planes are
+    priced against residual station capacity (``ledger=None`` is the
+    pre-ledger contention-free pricing).  None if any plane stalls."""
+    import numpy as np
+
+    from repro.core.fedleo import plan_plane_round
+    from repro.core.scheduling import reserve_decision
+
+    K = sim.constellation.sats_per_plane
+    train = np.full(K, train_time_s)
+    done = []
+    for plane in range(sim.constellation.num_planes):
+        plan = plan_plane_round(
+            walker=walker, gs_list=gs_list, predictor=predictor,
+            link=sim.link, isl=sim.isl, plane=plane, t=t,
+            payload_bits=payload_bits, train_times=train, ledger=ledger,
+        )
+        if plan is None:
+            return None            # a plane stalls the whole round
+        reserve_decision(ledger, plan.decision)
+        done.append(plan.decision.t_upload_done)
+    return max(done)
+
+
+def price_grid_round(
+    walker, gs_list, predictor, sim, routing, *,
+    cluster_planes: int,
+    payload_bits: float = PAYLOAD_BITS,
+    train_time_s: float = 600.0,
+    ledger=None,
+    dynamic: bool = False,
+    t: float = 0.0,
+):
+    """Full FedLEOGrid round time via the pure cluster planners: one
+    download + one sink upload per cluster.  ``dynamic=True`` re-forms
+    clusters from predicted window supply (the strategy default);
+    ``False`` keeps the static adjacent-plane grouping.  Ledger
+    semantics as in ``price_ring_round``."""
+    import numpy as np
+
+    from repro.core.fedleo import (
+        make_clusters,
+        plan_cluster_round,
+        supply_driven_clusters,
+    )
+    from repro.core.scheduling import reserve_decision
+
+    K = sim.constellation.sats_per_plane
+    L = sim.constellation.num_planes
+    if dynamic:
+        clusters = supply_driven_clusters(
+            predictor, routing.topology, cluster_planes, t
+        )
+    else:
+        clusters = make_clusters(L, cluster_planes)
+    done = []
+    for planes in clusters:
+        train = np.full(len(planes) * K, train_time_s)
+        plan = plan_cluster_round(
+            walker=walker, gs_list=gs_list, predictor=predictor,
+            link=sim.link, routing=routing, planes=planes, t=t,
+            payload_bits=payload_bits, train_times=train, ledger=ledger,
+        )
+        if plan is None:
+            return None
+        reserve_decision(ledger, plan.decision)
+        done.append(plan.decision.t_upload_done)
+    return max(done)

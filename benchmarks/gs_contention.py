@@ -1,0 +1,160 @@
+"""Honest round times under per-station downlink RB contention.
+
+The PR 2 topology benchmark priced every sink upload as if its ground
+station were private — ``FedLEOGrid`` cluster sinks can land several
+uploads on one station's window with zero resource-block competition,
+overstating the grid speedup.  This benchmark re-prices a full FedLEO
+round (download -> flood -> training -> relay -> sink upload) with the
+shared ``GSResourceLedger``: each station has ``N`` downlink RBs
+(Table I: 8) and every upload books one for its transfer, so later
+sinks pay for residual capacity.
+
+Ring (40 uploads/round) and +Grid (10 cluster uploads/round) are both
+priced contention-free AND contended at starlink-40x22 with 1-3 ground
+stations; the grid's fewer/larger uploads should keep it at or below
+the ring under contention (acceptance floor).  Records append to the
+repo-root ``BENCH_topology.json`` trajectory.
+
+Usage: PYTHONPATH=src python -m benchmarks.gs_contention [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, Optional
+
+from benchmarks.common import (
+    PAYLOAD_BITS,
+    append_bench,
+    price_grid_round,
+    price_ring_round,
+)
+from repro.comms.ledger import GSResourceLedger
+from repro.comms.routing import ISLPlan, RoutingTable
+from repro.configs.constellations import make_sim_config
+from repro.orbits.constellation import WalkerDelta
+from repro.orbits.prediction import VisibilityPredictor
+
+CONSTELLATION = "starlink-40x22"
+GS_SETS = (("rolla",), ("rolla", "punta-arenas"),
+           ("rolla", "punta-arenas", "awarua"))
+HORIZON_HOURS = 24.0
+CLUSTER_PLANES = 4
+TRAIN_TIME_S = 600.0
+
+
+def _make_ledger(gs_list, capacity) -> Optional[GSResourceLedger]:
+    if capacity is None:
+        return None
+    return GSResourceLedger(len(gs_list), capacity)
+
+
+def run(gs_sets=GS_SETS) -> List[dict]:
+    from repro.orbits.topology import get_isl_topology
+
+    rows = []
+    routing = None
+    for gs_names in gs_sets:
+        sim = make_sim_config(
+            CONSTELLATION, ground_stations=gs_names, topology="grid",
+            horizon_hours=HORIZON_HOURS,
+        )
+        walker = WalkerDelta(sim.constellation)
+        gs_list = list(sim.all_ground_stations)
+        predictor = VisibilityPredictor(
+            walker, gs_list, horizon_s=sim.horizon_hours * 3600.0 * 1.5,
+            coarse_step_s=sim.coarse_step_s,
+        )
+        if routing is None:
+            topology = get_isl_topology(sim.constellation, sim.topology)
+            routing = RoutingTable(
+                topology, ISLPlan(intra=sim.isl, inter=sim.isl_inter),
+                PAYLOAD_BITS,
+            )
+
+        t0 = time.perf_counter()
+        out = {}
+        modes = (
+            ("free", None),                             # pre-ledger pricing
+            ("contended", sim.link.num_resource_blocks),  # Table I: N RBs
+            ("scarce", 1),                              # one RB per station
+        )
+        for label, capacity in modes:
+            out[f"ring_{label}"] = price_ring_round(
+                walker, gs_list, predictor, sim,
+                train_time_s=TRAIN_TIME_S,
+                ledger=_make_ledger(gs_list, capacity),
+            )
+            out[f"grid_{label}"] = price_grid_round(
+                walker, gs_list, predictor, sim, routing,
+                cluster_planes=CLUSTER_PLANES,
+                train_time_s=TRAIN_TIME_S, dynamic=True,
+                ledger=_make_ledger(gs_list, capacity),
+            )
+        wall = time.perf_counter() - t0
+
+        def _r(x):
+            return None if x is None else round(x, 1)
+
+        ring_c, grid_c = out["ring_contended"], out["grid_contended"]
+        rows.append({
+            "bench": "gs_contention",
+            "constellation": CONSTELLATION,
+            "ground_stations": list(gs_names),
+            "cluster_planes": CLUSTER_PLANES,
+            "rb_capacity": sim.link.num_resource_blocks,
+            "train_time_s": TRAIN_TIME_S,
+            "ring_free_s": _r(out["ring_free"]),
+            "ring_contended_s": _r(ring_c),
+            "ring_scarce_s": _r(out["ring_scarce"]),
+            "grid_free_s": _r(out["grid_free"]),
+            "grid_contended_s": _r(grid_c),
+            "grid_scarce_s": _r(out["grid_scarce"]),
+            "speedup_contended": (
+                None if ring_c is None or not grid_c
+                else round(ring_c / grid_c, 2)
+            ),
+            "ring_contention_penalty_s": (
+                None if ring_c is None or out["ring_free"] is None
+                else _r(ring_c - out["ring_free"])
+            ),
+            "grid_contention_penalty_s": (
+                None if grid_c is None or out["grid_free"] is None
+                else _r(grid_c - out["grid_free"])
+            ),
+            "plan_wall_s": round(wall, 3),
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single ground-station set (CI smoke)")
+    args = ap.parse_args()
+    rows = run(GS_SETS[:1] if args.quick else GS_SETS)
+    for rec in rows:
+        append_bench(rec)
+    ok = all(
+        r["grid_contended_s"] is not None
+        and (r["ring_contended_s"] is None
+             or r["grid_contended_s"] <= r["ring_contended_s"])
+        for r in rows
+    )
+    for r in rows:
+        print(
+            f"# {len(r['ground_stations'])} GS @ {r['rb_capacity']} RB: "
+            f"ring {r['ring_free_s']}s -> {r['ring_contended_s']}s "
+            f"(1 RB: {r['ring_scarce_s']}s) | "
+            f"grid {r['grid_free_s']}s -> {r['grid_contended_s']}s "
+            f"(1 RB: {r['grid_scarce_s']}s; "
+            f"contended speedup {r['speedup_contended']}x)"
+        )
+    print(f"# grid <= ring under contention — "
+          f"{'OK' if ok else 'REGRESSION'}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

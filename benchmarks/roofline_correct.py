@@ -19,7 +19,7 @@ os.environ["XLA_FLAGS"] = (
 # Collective bytes parsed from the HLO get the same correction (the
 # layer-body collectives are likewise counted once inside the loop).
 #
-# Usage: python -m benchmarks.roofline_correct --out dryrun_corrected.jsonl
+# Usage: python -m benchmarks.roofline_correct --out benchmarks/dryrun_corrected.jsonl
 import argparse
 import dataclasses
 import json
@@ -101,7 +101,8 @@ def main():
                     default="all")
     ap.add_argument("--shape", choices=list(INPUT_SHAPES) + ["all"],
                     default="all")
-    ap.add_argument("--out", default="dryrun_corrected.jsonl")
+    ap.add_argument("--out",
+                    default="benchmarks/dryrun_corrected.jsonl")
     ap.add_argument("--sharding", choices=["fsdp2d", "zero1"],
                     default="fsdp2d")
     ap.add_argument("--skip-existing", action="store_true")

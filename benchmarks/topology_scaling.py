@@ -16,19 +16,25 @@ trajectory (``BENCH_topology.json``).
 Acceptance floor: grid round time <= ring round time with >= 2 planes
 per sink cluster.
 
-Usage: PYTHONPATH=src python -m benchmarks.topology_scaling
+Usage: PYTHONPATH=src python -m benchmarks.topology_scaling [--quick]
+(``--quick`` prices only the first ground-station set — the CI smoke
+configuration.)
 """
 from __future__ import annotations
 
+import argparse
 import time
-from typing import List, Optional
+from typing import List
 
-import numpy as np
-
-from benchmarks.common import PAYLOAD_BITS, append_bench
+from benchmarks.common import (
+    PAYLOAD_BITS,
+    append_bench,
+    price_grid_round,
+    price_ring_round,
+)
 from repro.comms.routing import ISLPlan, RoutingTable
 from repro.configs.constellations import make_sim_config
-from repro.core.fedleo import make_clusters, plan_cluster_round, plan_plane_round
+from repro.core.fedleo import make_clusters
 from repro.orbits.constellation import WalkerDelta
 from repro.orbits.prediction import VisibilityPredictor
 
@@ -41,48 +47,14 @@ CLUSTER_PLANES = 4
 TRAIN_TIME_S = 600.0
 
 
-def _round_time_ring(walker, gs_list, predictor, sim, t=0.0) -> Optional[float]:
-    K = sim.constellation.sats_per_plane
-    train = np.full(K, TRAIN_TIME_S)
-    done = []
-    for plane in range(sim.constellation.num_planes):
-        plan = plan_plane_round(
-            walker=walker, gs_list=gs_list, predictor=predictor,
-            link=sim.link, isl=sim.isl, plane=plane, t=t,
-            payload_bits=PAYLOAD_BITS, train_times=train,
-        )
-        if plan is None:
-            return None            # a plane stalls the whole round
-        done.append(plan.decision.t_upload_done)
-    return max(done)
-
-
-def _round_time_grid(walker, gs_list, predictor, sim, routing,
-                     cluster_planes, t=0.0) -> Optional[float]:
-    K = sim.constellation.sats_per_plane
-    done = []
-    for planes in make_clusters(sim.constellation.num_planes,
-                                cluster_planes):
-        train = np.full(len(planes) * K, TRAIN_TIME_S)
-        plan = plan_cluster_round(
-            walker=walker, gs_list=gs_list, predictor=predictor,
-            link=sim.link, routing=routing, planes=planes, t=t,
-            payload_bits=PAYLOAD_BITS, train_times=train,
-        )
-        if plan is None:
-            return None
-        done.append(plan.decision.t_upload_done)
-    return max(done)
-
-
-def run() -> List[dict]:
+def run(gs_sets=GS_SETS) -> List[dict]:
     from repro.orbits.topology import get_isl_topology
 
     rows = []
     # the ISL graph is GS-independent: build its routing table once
     routing = None
     t_routing = 0.0
-    for gs_names in GS_SETS:
+    for gs_names in gs_sets:
         sim = make_sim_config(
             CONSTELLATION, ground_stations=gs_names, topology="grid",
             horizon_hours=HORIZON_HOURS,
@@ -95,7 +67,8 @@ def run() -> List[dict]:
         )
 
         t0 = time.perf_counter()
-        ring = _round_time_ring(walker, gs_list, predictor, sim)
+        ring = price_ring_round(walker, gs_list, predictor, sim,
+                                train_time_s=TRAIN_TIME_S)
         t_ring = time.perf_counter() - t0
 
         if routing is None:
@@ -107,8 +80,10 @@ def run() -> List[dict]:
             )
             t_routing = time.perf_counter() - t0
         t0 = time.perf_counter()
-        grid = _round_time_grid(
-            walker, gs_list, predictor, sim, routing, CLUSTER_PLANES
+        # static clusters: this benchmark tracks the PR 2 floor
+        grid = price_grid_round(
+            walker, gs_list, predictor, sim, routing,
+            cluster_planes=CLUSTER_PLANES, train_time_s=TRAIN_TIME_S,
         )
         t_grid = time.perf_counter() - t0
 
@@ -136,7 +111,11 @@ def run() -> List[dict]:
 
 
 def main() -> None:
-    rows = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single ground-station set (CI smoke)")
+    args = ap.parse_args()
+    rows = run(GS_SETS[:1] if args.quick else GS_SETS)
     for rec in rows:
         append_bench(rec)
     ok = all(

@@ -12,9 +12,11 @@ from repro.comms.link import (
     downlink_time,
 )
 from repro.comms.isl import ISLConfig, isl_hop_time, relay_time
+from repro.comms.ledger import GSResourceLedger
 from repro.comms.routing import ISLPlan, RoutingTable
 
 __all__ = [
+    "GSResourceLedger",
     "ISLPlan",
     "RoutingTable",
     "LinkConfig",

@@ -109,6 +109,7 @@ def make_sim_config(
     constellation: str = "paper-5x8",
     ground_stations: Sequence[str] = ("rolla",),
     topology: Optional[Union[str, TopologyConfig]] = None,
+    rb_contention: bool = False,
     **overrides,
 ):
     """SimConfig from presets: FedLEO and every baseline in
@@ -122,8 +123,19 @@ def make_sim_config(
     chord/c propagation delays; FSO rates on inter-plane links).
     Omitting it keeps the legacy paper provisioning untouched.
 
+    ``rb_contention=True`` opts into honest per-station downlink
+    resource-block accounting: ``SimConfig.gs_rb_capacity`` is set to
+    the link's RB count (eq. 13's N, Table I default 8) so concurrent
+    sink uploads on one station compete for its RB pool via the shared
+    ``GSResourceLedger``.  The default keeps the contention-free
+    degenerate case (``gs_rb_capacity=None`` — bit-identical to the
+    pre-ledger scheduler).  Pass ``gs_rb_capacity=...`` directly for a
+    non-default cap, or ``rolling_horizon_hours=...`` to grow the
+    visibility table incrementally instead of prebuilding 1.5x the
+    horizon.
+
     Extra keyword arguments override SimConfig fields (horizon_hours,
-    coarse_step_s, ...).
+    coarse_step_s, gs_rb_capacity, rolling_horizon_hours, ...).
     """
     from repro.core.engine import SimConfig
 
@@ -147,4 +159,9 @@ def make_sim_config(
                 cfg, "inter", topology=topo_cfg
             )
     kwargs.update(overrides)     # explicit overrides win over presets
+    if rb_contention and kwargs.get("gs_rb_capacity") is None:
+        from repro.comms.link import LinkConfig
+
+        link = kwargs.get("link") or LinkConfig()
+        kwargs["gs_rb_capacity"] = link.num_resource_blocks
     return SimConfig(**kwargs)

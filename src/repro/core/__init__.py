@@ -9,6 +9,7 @@ from repro.core.engine import FLStrategy, RunResult, SimConfig
 from repro.core.fedleo import (
     FedLEO,
     FedLEOGrid,
+    form_clusters,
     make_clusters,
     plan_cluster_round,
     plan_plane_round,
@@ -20,11 +21,17 @@ from repro.core.propagation import (
     graph_relay_schedule,
     relay_schedule,
 )
-from repro.core.scheduling import select_sink, select_sink_cluster
+from repro.core.scheduling import (
+    reserve_decision,
+    select_sink,
+    select_sink_cluster,
+)
 
 __all__ = [
     "FedLEOGrid",
+    "form_clusters",
     "make_clusters",
+    "reserve_decision",
     "plan_cluster_round",
     "plan_plane_round",
     "graph_broadcast_schedule",

@@ -49,6 +49,9 @@ from repro.orbits.prediction import VisibilityPredictor
 
 
 # --- shared helpers -------------------------------------------------------------
+_SELF_LEDGER = object()     # sentinel: use the strategy's own ledger
+
+
 class _StarMixin:
     """Window-search helpers shared by star-topology strategies."""
 
@@ -57,6 +60,7 @@ class _StarMixin:
         predictor: Optional[VisibilityPredictor] = None,
         gs: Optional[GroundStation] = None,
         same_window: bool = True,
+        ledger=_SELF_LEDGER,
     ) -> Optional[float]:
         """Completion time of the earliest feasible transfer after t.
 
@@ -67,6 +71,13 @@ class _StarMixin:
         ``same_window=False`` forces the transfer to start at a window
         *after* t (the naive FedAvg behaviour of eq. (10) case 2: wait
         for the next visit).
+
+        Uploads (``downlink=True``) are priced against the strategy's
+        resource ledger when one is active and the chosen transfer is
+        booked on it; downloads are full-band broadcasts of the shared
+        global model (eq. 15) and never contend.  ``ledger`` overrides
+        the default when a strategy pairs its own predictor/station
+        sets (FedHAP).
         """
         predictor = predictor or self.predictor
         if gs is not None:
@@ -74,6 +85,10 @@ class _StarMixin:
             # an explicit gs must match it (FedHAP's per-server pairs)
             assert (gs,) == predictor.ground_stations, \
                 "gs does not match the predictor's ground segment"
+        if ledger is _SELF_LEDGER:
+            ledger = getattr(self, "ledger", None)
+        if not downlink:
+            ledger = None                  # broadcasts never contend
 
         tt = symmetric_transfer(
             downlink_time if downlink else uplink_time,
@@ -87,9 +102,14 @@ class _StarMixin:
 
         hit = earliest_transfer(
             walker=self.walker, predictor=predictor, sat=sat,
-            t=t, transfer_time=tt, skip_window=skip,
+            t=t, transfer_time=tt, skip_window=skip, ledger=ledger,
         )
-        return None if hit is None else hit[1]
+        if hit is None:
+            return None
+        t0, t_done, w = hit
+        if ledger is not None:
+            ledger.reserve(w.gs_index, t0, t_done)
+        return t_done
 
 
 # --- synchronous star baselines ----------------------------------------------------
@@ -160,11 +180,12 @@ class FedHAP(FLStrategy, _StarMixin):
             (hap_b, VisibilityPredictor(self.walker, hap_b, horizon,
                                         coarse_step_s=sim.coarse_step_s)),
         ]
-
     def _best_tx(self, sat, t, payload_bits, downlink):
+        # HAP servers are the paper's extra-dedicated-hardware baseline:
+        # modeled with private capacity, never RB-contended
         outs = [
             self._first_tx(sat, t, payload_bits, downlink,
-                           predictor=pred, gs=gs)
+                           predictor=pred, gs=gs, ledger=None)
             for gs, pred in self.servers
         ]
         outs = [o for o in outs if o is not None]
@@ -214,14 +235,10 @@ class FedISL(FLStrategy, _StarMixin):
 
     def _upload_with_retries(self, sat: Satellite, t_ready: float,
                              payload_bits: float) -> Optional[float]:
-        # windows too short are skipped: the naive sink retries at its
-        # next window
-        tt = symmetric_transfer(downlink_time, self.sim.link, payload_bits)
-        hit = earliest_transfer(
-            walker=self.walker, predictor=self.predictor,
-            sat=sat, t=t_ready, transfer_time=tt,
-        )
-        return None if hit is None else hit[1]
+        # windows too short (or with no free RB) are skipped: the naive
+        # sink retries at its next window — exactly _first_tx's
+        # earliest-feasible upload (ledger booking included)
+        return self._first_tx(sat, t_ready, payload_bits, downlink=True)
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
         task, sim = self.task, self.sim
@@ -475,15 +492,14 @@ class AsyncFLEO(FLStrategy, _StarMixin):
             np.asarray(t_done) + ring_hops_matrix(K)[sink] * t_hop
         ))
         # naive upload with retries (window chosen after the fact, not
-        # scheduled ahead like FedLEO)
-        tt = symmetric_transfer(downlink_time, sim.link, self.payload_bits)
-        hit = earliest_transfer(
-            walker=self.walker, predictor=self.predictor,
-            sat=Satellite(plane, sink), t=t_ready, transfer_time=tt,
+        # scheduled ahead like FedLEO); the booked RB makes later plane
+        # schedules compete for residual station capacity
+        t_ul = self._first_tx(
+            Satellite(plane, sink), t_ready, self.payload_bits,
+            downlink=True,
         )
-        if hit is None:
+        if t_ul is None:
             return
-        t_ul = hit[1]
         heapq.heappush(self._queue, (t_ul, plane, t_recv))
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:

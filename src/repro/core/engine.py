@@ -23,6 +23,7 @@ import jax
 import numpy as np
 
 from repro.comms.isl import ISLConfig
+from repro.comms.ledger import GSResourceLedger
 from repro.comms.link import LinkConfig
 from repro.core.fltask import FederatedTask
 from repro.orbits.constellation import (
@@ -59,6 +60,16 @@ class SimConfig:
     isl_inter: Optional[ISLConfig] = None
     horizon_hours: float = 72.0           # paper simulates 3 days
     coarse_step_s: float = 10.0
+    # Per-station downlink resource-block cap (eq. 13-16: N RBs of B_D
+    # each).  None = contention-free (the pre-ledger degenerate case:
+    # concurrent sink uploads never compete); an int enables the shared
+    # GSResourceLedger so uploads are priced against residual capacity.
+    gs_rb_capacity: Optional[int] = None
+    # Rolling-horizon visibility prediction: chunk length in hours, or
+    # None for the legacy prebuilt table over 1.5x horizon_hours.  The
+    # rolling table grows on demand (capped at 1.5x horizon_hours) and
+    # is bit-identical to the prebuilt one on overlapping ranges.
+    rolling_horizon_hours: Optional[float] = None
     noniid_alpha: float = 0.5             # non-IID-aware weighting blend
     use_kernel: bool = False              # Pallas aggregation path (TPU)
     seed: int = 0
@@ -114,11 +125,27 @@ class FLStrategy:
         self.walker = WalkerDelta(sim.constellation)
         self.gs_list = list(sim.all_ground_stations)
         self.gs = self.gs_list[0]
-        self.predictor = VisibilityPredictor(
-            self.walker,
-            self.gs_list,
-            horizon_s=sim.horizon_hours * 3600.0 * 1.5,
-            coarse_step_s=sim.coarse_step_s,
+        max_horizon_s = sim.horizon_hours * 3600.0 * 1.5
+        if sim.rolling_horizon_hours is not None:
+            self.predictor = VisibilityPredictor(
+                self.walker,
+                self.gs_list,
+                horizon_s=sim.rolling_horizon_hours * 3600.0,
+                coarse_step_s=sim.coarse_step_s,
+                rolling=True,
+                max_horizon_s=max_horizon_s,
+            )
+        else:
+            self.predictor = VisibilityPredictor(
+                self.walker,
+                self.gs_list,
+                horizon_s=max_horizon_s,
+                coarse_step_s=sim.coarse_step_s,
+            )
+        # shared per-station RB capacity view; None = contention-free
+        self.ledger = (
+            GSResourceLedger(len(self.gs_list), sim.gs_rb_capacity)
+            if sim.gs_rb_capacity is not None else None
         )
         self.global_params = task.global_params
         self.rng = jax.random.PRNGKey(sim.seed)
@@ -150,6 +177,10 @@ class FLStrategy:
         history: List[HistoryPoint] = []
         t = 0.0
         while t < max_s and (max_rounds is None or self.round_index < max_rounds):
+            if self.ledger is not None:
+                # simulated time is monotone: bookings that ended before
+                # this round can never affect another fit
+                self.ledger.release_before(t)
             t_next, events = self.step(t)
             if t_next is None or t_next <= t:
                 break  # no feasible progress inside the horizon

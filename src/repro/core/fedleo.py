@@ -42,6 +42,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.comms.isl import ISLConfig, isl_hop_time
+from repro.comms.ledger import GSResourceLedger
 from repro.comms.link import LinkConfig, downlink_time
 from repro.comms.routing import ISLPlan, RoutingTable
 from repro.core import aggregation
@@ -54,6 +55,7 @@ from repro.core.scheduling import (
     first_visible_download,
     first_visible_download_sats,
     naive_sink_slot,
+    reserve_decision,
     select_sink,
     select_sink_cluster,
     symmetric_transfer,
@@ -98,6 +100,7 @@ def _naive_sink_decision(
     plane: int,
     t_train_done: Sequence[float],
     payload_bits: float,
+    ledger: Optional[GSResourceLedger] = None,
 ) -> Optional[SinkDecision]:
     """Ablation sink: first visitor after training, AW duration NOT
     checked — uploads that do not fit a window retry at the next one
@@ -117,6 +120,7 @@ def _naive_sink_decision(
     hit = earliest_transfer(
         walker=walker, predictor=predictor,
         sat=Satellite(plane, sink), t=t_ready, transfer_time=tt,
+        ledger=ledger,
     )
     if hit is None:
         return None
@@ -143,11 +147,18 @@ def plan_plane_round(
     train_times: np.ndarray,
     sink_policy: str = "scheduled",
     require_next_download: bool = False,
+    ledger: Optional[GSResourceLedger] = None,
 ) -> Optional[PlanePlan]:
     """Plan one plane's round (paper §IV steps 1-3) without training:
     GS download -> ring flood -> concurrent training (simulated via
     ``train_times``) -> sink selection.  Returns None when no feasible
-    window exists inside the predictor horizon."""
+    window exists inside the predictor horizon.
+
+    With a ``ledger`` the sink upload is priced against the residual
+    per-station RB capacity; the caller books the returned plan
+    (``reserve_decision(ledger, plan.decision)``) before planning the
+    next group.  The GS download is a full-band broadcast of the same
+    global model (eq. 15) and is not RB-contended."""
     K = walker.config.sats_per_plane
     dl = first_visible_download(
         walker=walker, gs=gs_list, predictor=predictor, link=link,
@@ -166,13 +177,13 @@ def plan_plane_round(
             walker=walker, gs=gs_list, predictor=predictor, link=link,
             isl=isl, plane=plane, t_train_done=t_train_done,
             payload_bits=payload_bits,
-            require_next_download=require_next_download,
+            require_next_download=require_next_download, ledger=ledger,
         )
     else:
         decision = _naive_sink_decision(
             walker=walker, predictor=predictor, link=link, isl=isl,
             plane=plane, t_train_done=t_train_done,
-            payload_bits=payload_bits,
+            payload_bits=payload_bits, ledger=ledger,
         )
     if decision is None:
         return None
@@ -194,12 +205,15 @@ def plan_cluster_round(
     payload_bits: float,
     train_times: np.ndarray,
     require_next_download: bool = False,
+    ledger: Optional[GSResourceLedger] = None,
 ) -> Optional[ClusterPlan]:
     """Plan one cluster's round over the ISL graph: a single GS download
     seeds a flood across every plane of the cluster, and one
     constellation-wide sink collects the cluster over cross-plane relay.
     With a single-plane cluster and a ring topology this degenerates to
-    ``plan_plane_round`` exactly (bit-identical schedules)."""
+    ``plan_plane_round`` exactly (bit-identical schedules).  Ledger
+    semantics as in ``plan_plane_round``: candidate sinks are priced
+    against residual station capacity, the caller reserves."""
     K = walker.config.sats_per_plane
     sats = [(p, s) for p in planes for s in range(K)]
     nodes = routing.nodes_of(sats)
@@ -222,7 +236,7 @@ def plan_cluster_round(
         walker=walker, gs=gs_list, predictor=predictor, link=link,
         sats=sats, relay_latency=relay_latency,
         t_train_done=t_train_done, payload_bits=payload_bits,
-        require_next_download=require_next_download,
+        require_next_download=require_next_download, ledger=ledger,
     )
     if decision is None:
         return None
@@ -236,11 +250,114 @@ def plan_cluster_round(
 def make_clusters(
     num_planes: int, cluster_planes: int
 ) -> List[Tuple[int, ...]]:
-    """Group adjacent planes into clusters of ``cluster_planes``."""
+    """Group adjacent planes into clusters of ``cluster_planes`` —
+    the *static* grouping (rotation 0), kept as the degenerate case of
+    ``form_clusters``."""
     return [
         tuple(range(i, min(i + cluster_planes, num_planes)))
         for i in range(0, num_planes, cluster_planes)
     ]
+
+
+def _split_connected(
+    planes: Sequence[int], adjacency: np.ndarray
+) -> List[Tuple[int, ...]]:
+    """Split a plane group into its connected components under the
+    inter-plane adjacency (a cluster must be able to flood/relay
+    internally; a seam-cut or ring topology may disconnect a run)."""
+    remaining = sorted(planes)
+    comps: List[Tuple[int, ...]] = []
+    while remaining:
+        seed = remaining.pop(0)
+        comp = {seed}
+        frontier = [seed]
+        while frontier:
+            p = frontier.pop()
+            linked = [q for q in remaining if adjacency[p, q]]
+            for q in linked:
+                remaining.remove(q)
+                comp.add(q)
+                frontier.append(q)
+        comps.append(tuple(sorted(comp)))
+    return comps
+
+
+def form_clusters(
+    supply: np.ndarray,
+    cluster_planes: int,
+    *,
+    seam_cut: bool = False,
+    adjacency: Optional[np.ndarray] = None,
+) -> List[Tuple[int, ...]]:
+    """Per-round dynamic cluster formation from predicted window supply.
+
+    Planes are partitioned into contiguous runs of at most
+    ``cluster_planes``; among the candidate rotations the one whose
+    clusters contain the best-served anchor planes wins:
+
+      score(r) = sum over clusters of max(plane supply in cluster),
+
+    i.e. every cluster should hold at least one plane with rich
+    upcoming GS-window supply (the cluster sink will sit there).
+    Rotations that need more clusters (more GS round-trips) are never
+    preferred; ties resolve to the smallest rotation, which makes
+    rotation 0 — the static ``make_clusters`` grouping — the
+    deterministic fallback under uniform supply.
+
+    ``seam_cut`` forbids runs that wrap the plane L-1 / plane 0 seam
+    (clusters are never formed across a cut polar seam).  With an
+    ``adjacency`` matrix every run is additionally split into its
+    connected components, so a topology without inter-plane links
+    (ring) degenerates to single-plane clusters exactly.
+
+    Returns clusters as ascending plane tuples, ordered by first plane.
+    """
+    supply = np.asarray(supply, dtype=np.float64)
+    L = supply.size
+    c = max(1, min(int(cluster_planes), L))
+    best: Optional[Tuple[Tuple[int, float, int], List[Tuple[int, ...]]]] = None
+    for r in range(c if c > 1 else 1):
+        if seam_cut:
+            seq = list(range(L))
+            runs = ([tuple(seq[:r])] if r else []) + [
+                tuple(seq[i:i + c]) for i in range(r, L, c)
+            ]
+        else:
+            seq = [(r + i) % L for i in range(L)]
+            runs = [tuple(seq[i:i + c]) for i in range(0, L, c)]
+        score = float(sum(supply[list(g)].max() for g in runs))
+        key = (len(runs), -score, r)
+        if best is None or key < best[0]:
+            best = (key, runs)
+    groups = best[1]
+    if adjacency is not None:
+        groups = [
+            comp for g in groups for comp in _split_connected(g, adjacency)
+        ]
+    groups = [tuple(sorted(g)) for g in groups]
+    groups.sort(key=lambda g: g[0])
+    return groups
+
+
+def supply_driven_clusters(
+    predictor: VisibilityPredictor,
+    topology,                       # ISLTopology
+    cluster_planes: int,
+    t: float,
+    lookahead_s: Optional[float] = None,
+) -> List[Tuple[int, ...]]:
+    """One round's plane grouping from predicted window supply — THE
+    dynamic-formation recipe (``FedLEOGrid``'s default and what the
+    contention benchmark prices): supply over the next orbital period,
+    ``form_clusters`` with the topology's seam/connectivity."""
+    if lookahead_s is None:
+        lookahead_s = topology.constellation.period_s
+    supply = predictor.plane_window_supply(t, t + lookahead_s)
+    return form_clusters(
+        supply.sum(axis=1), cluster_planes,
+        seam_cut=topology.config.seam_cut,
+        adjacency=topology.plane_adjacency(),
+    )
 
 
 # --- strategies ---------------------------------------------------------------
@@ -249,7 +366,13 @@ class _SyncRoundMixin:
     each plane group's schedule, run the real local training, aggregate
     the group partial at its sink (eq. 9), then the GS global aggregate
     (eq. 4 + non-IID weighting).  Only the planner and the per-group
-    stats differ between the ring and grid variants."""
+    stats differ between the ring and grid variants.
+
+    Groups are planned in order and every chosen sink upload is BOOKED
+    on the strategy's resource ledger before the next group plans, so
+    later sinks are priced against the residual station capacity —
+    several sinks landing on one station's window now compete for its
+    resource blocks instead of overlapping for free."""
 
     def _sync_round(
         self,
@@ -273,6 +396,7 @@ class _SyncRoundMixin:
             plan = plan_group(group, clients)
             if plan is None:
                 return None, fail_event(group)
+            reserve_decision(self.ledger, plan.decision)
 
             stacked = task.local_train(
                 self.global_params, clients, self._next_rng()
@@ -334,6 +458,7 @@ class FedLEO(_SyncRoundMixin, FLStrategy):
                 ),
                 sink_policy=self.sink_policy,
                 require_next_download=self.require_next_download,
+                ledger=self.ledger,
             )
 
         def group_stats(plan):
@@ -360,20 +485,32 @@ class FedLEO(_SyncRoundMixin, FLStrategy):
 class FedLEOGrid(_SyncRoundMixin, FLStrategy):
     """FedLEO over an inter-plane ISL topology (+Grid).
 
-    Planes are grouped into clusters of ``cluster_planes`` adjacent
-    planes; per round each cluster needs only ONE GS download (the
-    flood crosses planes over inter-plane ISLs) and ONE upload (the
-    cluster sink collects every plane via cross-plane relay) — L /
+    Planes are grouped into clusters of up to ``cluster_planes``
+    adjacent planes — by default re-formed *every round* from the
+    predicted window supply (``form_clusters``; seam cuts respected);
+    per round each cluster needs only ONE GS download (the flood
+    crosses planes over inter-plane ISLs) and ONE upload (the cluster
+    sink collects every plane via cross-plane relay) — L /
     cluster_planes GS round-trips instead of L.  With
     ``cluster_planes=1`` and a ring topology this is bit-identical to
     ``FedLEO`` (schedules and sink decisions; equivalence-tested).
+    With a resource ledger (``SimConfig.gs_rb_capacity``) cluster sinks
+    compete for per-station RBs, which load-balances them across the
+    ground segment.
     """
 
     name = "FedLEO-Grid"
 
     def __init__(self, task, sim: SimConfig, *,
                  cluster_planes: Optional[int] = None,
+                 dynamic_clusters: bool = True,
                  require_next_download: bool = False):
+        """``dynamic_clusters`` (default): re-form the plane clusters
+        every round from the predicted window supply over the next
+        orbital period (``form_clusters``) — clusters are contiguous,
+        never cross a cut polar seam, and each contains a well-served
+        anchor plane for its sink.  ``False`` keeps the static
+        adjacent-plane grouping for every round."""
         super().__init__(task, sim)
         self.require_next_download = require_next_download
         self.topology = get_isl_topology(sim.constellation, sim.topology)
@@ -393,7 +530,17 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
                 f"(topology kind={sim.topology.kind!r} has none)"
             )
         self.cluster_planes = cluster_planes
+        self.dynamic_clusters = dynamic_clusters
         self.clusters = make_clusters(L, cluster_planes)
+
+    def round_clusters(self, t: float) -> List[Tuple[int, ...]]:
+        """This round's plane grouping: the supply-driven dynamic
+        partition, or the static one when ``dynamic_clusters=False``."""
+        if not self.dynamic_clusters:
+            return self.clusters
+        return supply_driven_clusters(
+            self.predictor, self.topology, self.cluster_planes, t
+        )
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
         sim, task = self.sim, self.task
@@ -408,6 +555,7 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
                     [task.train_time_s(c) for c in clients]
                 ),
                 require_next_download=self.require_next_download,
+                ledger=self.ledger,
             )
 
         def group_stats(plan):
@@ -423,7 +571,7 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
             }
 
         return self._sync_round(
-            self.clusters,
+            self.round_clusters(t),
             plan_group,
             lambda group: {"failed_cluster": group},
             group_stats,

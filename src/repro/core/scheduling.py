@@ -25,6 +25,22 @@ the slant range is computed against the window's own station).  Slant
 ranges are evaluated in batch — one ``walker.positions_batch`` call per
 resolution round covering every candidate of the plane — instead of the
 seed's per-candidate-per-window scalar ``position_of`` calls.
+
+Contention (``GSResourceLedger``): every transfer-planning entry point
+takes an optional ``ledger`` carrying the per-station resource-block
+timeline.  A candidate window is then priced against the *residual*
+station capacity — the effective start is pushed past saturated
+stretches (``ledger.earliest_fit``) and a window with no free RB room
+left is skipped entirely.  The planners only *read* the ledger; the
+caller books the chosen transfer with ``reserve_decision`` (or
+``ledger.reserve``) so subsequent decisions see it.  ``ledger=None``
+(and unlimited capacity) is the degenerate contention-free case,
+bit-identical to the pre-ledger planner.
+
+Rolling horizon: when the predictor was built with ``rolling=True``
+and a satellite set has NO feasible window inside the built horizon,
+the planners extend the horizon chunk-by-chunk and retry instead of
+returning None (up to the predictor's ``max_horizon_s``).
 """
 from __future__ import annotations
 
@@ -34,6 +50,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.comms.isl import ISLConfig, isl_hop_time
+from repro.comms.ledger import GSResourceLedger
 from repro.comms.link import LinkConfig, downlink_time, uplink_time
 from repro.core.propagation import ring_hops_matrix
 from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
@@ -83,6 +100,67 @@ def _slant_ranges(
     return np.linalg.norm(r_s - r_g, axis=-1)
 
 
+def _ledger_fit(
+    ledger: Optional[GSResourceLedger],
+    gs_index: int,
+    t0: float,
+    window_end: float,
+    need: float,
+    occupy: float,
+) -> Optional[float]:
+    """Effective transfer start inside one window: ``t0`` when the
+    window's remaining duration covers ``need`` and no ledger is in
+    play; otherwise the earliest start with a free RB for the
+    ``occupy``-long transmission (still leaving ``need`` of window)."""
+    if window_end - t0 < need:
+        return None
+    if ledger is None:
+        return t0
+    return ledger.earliest_fit(gs_index, t0, window_end - need, occupy)
+
+
+def _repriced_fit(
+    ledger: Optional[GSResourceLedger],
+    walker: WalkerDelta,
+    gs: GroundStation,
+    sat: Satellite,
+    gs_index: int,
+    t0: float,
+    window_end: float,
+    transfer_time,
+    need: float,
+    done: float,
+    max_iters: int = 8,
+) -> Tuple[Optional[float], float]:
+    """(effective start, completion offset) of one window's transfer.
+
+    The contention-free path prices the transfer once, at the
+    window-feasible start ``t0`` (the planner's one-evaluation
+    convention).  When the ledger pushes the start later, the slant
+    range — and with it the transfer duration — changes, so the
+    duration is re-evaluated at the pushed start and the fit re-run
+    until it stabilizes (starts move monotonically later, so the loop
+    terminates; bounded as a guard).  Without this, a push toward the
+    window edge could book a duration computed at a nearer slant range
+    and physically overrun the window.
+    """
+    t_fit = _ledger_fit(ledger, gs_index, t0, window_end, need, done)
+    if t_fit is None or t_fit == t0:
+        return t_fit, done
+    for _ in range(max_iters):
+        d = _distance_at(walker, gs, sat, t_fit)
+        need, done = transfer_time(gs_index, d)
+        if window_end - t_fit < need:
+            return None, done       # true duration no longer fits
+        nxt = ledger.earliest_fit(
+            gs_index, t_fit, window_end - need, done
+        )
+        if nxt is None or nxt == t_fit:
+            return nxt, done
+        t_fit = nxt
+    return t_fit, done
+
+
 def _first_fit_transfers(
     *,
     walker: WalkerDelta,
@@ -90,6 +168,7 @@ def _first_fit_transfers(
     sats: Sequence[Tuple[int, int]],
     t_ready: np.ndarray,
     transfer_time,  # (gs_index, distance) -> (need_s, done_s)
+    ledger: Optional[GSResourceLedger] = None,
 ) -> List[Optional[Tuple[float, float, int]]]:
     """Per satellite of ``sats`` (arbitrary (plane, slot) pairs — one
     plane's slots, or a whole cluster of planes): (t0, t0 + done_s,
@@ -99,23 +178,62 @@ def _first_fit_transfers(
     ``need_s`` is the window-feasibility requirement, ``done_s`` the
     offset of the reported completion — they differ when a window must
     also leave room for a follow-up transfer (eq. 22's next-round
-    download) that does not delay the completion itself.
+    download) that does not delay the completion itself.  With a
+    ``ledger``, the start may additionally be pushed past saturated
+    stretches of the window's station (residual-capacity pricing), and
+    a pushed transfer is re-priced at its actual start
+    (``_repriced_fit`` — the slant range moved with the delay).
+
+    When the predictor is rolling-horizon, the horizon is extended
+    chunk-by-chunk and resolution retried whenever (a) NO satellite of
+    the set has a feasible window, or (b) a window still *clipped at
+    the built boundary* was rejected — its true end lies in the next
+    chunk, so the rejection cannot be trusted.  Accepted fits are safe
+    as-is (a longer window end changes neither the start nor the
+    completion), which keeps rolling schedules identical to schedules
+    against a prebuilt table.
+    """
+    sats = list(sats)
+    while True:
+        out, clipped_reject = _resolve_first_fits(
+            walker=walker, predictor=predictor, sats=sats,
+            t_ready=t_ready, transfer_time=transfer_time, ledger=ledger,
+        )
+        retry = clipped_reject or (sats and all(o is None for o in out))
+        if not retry or not predictor.extend_once():
+            return out
+
+
+def _resolve_first_fits(
+    *,
+    walker: WalkerDelta,
+    predictor: VisibilityPredictor,
+    sats: List[Tuple[int, int]],
+    t_ready: np.ndarray,
+    transfer_time,
+    ledger: Optional[GSResourceLedger],
+) -> Tuple[List[Optional[Tuple[float, float, int]]], bool]:
+    """One batched resolution pass of ``_first_fit_transfers`` against
+    the predictor's currently built window table.  Returns (fits,
+    clipped_reject) — the flag marks a rejected boundary-clipped window
+    (grounds for a rolling-horizon retry).
 
     Resolution proceeds in rounds: every still-pending slot contributes
     its current candidate window, ALL slant ranges of the round are
     evaluated with one batched positions call, and slots whose window is
-    too short advance to their next window.  With a single station the
-    first fitting window in start order is the answer (disjoint windows:
-    any later window starts after this one ends).  Under a multi-GS
-    union, windows of the same satellite may OVERLAP, so after the first
-    fit every window starting before that completion is also evaluated
-    (a nearer station's overlapping pass can finish earlier); windows
-    starting at or after an achieved completion can never beat it.
+    too short (or fully booked) advance to their next window.  With a
+    single station the first fitting window in start order is the answer
+    (disjoint windows: any later window starts after this one ends, and
+    a ledger-delayed start still completes inside the window).  Under a
+    multi-GS union, windows of the same satellite may OVERLAP, so after
+    the first fit every window starting before that completion is also
+    evaluated (a nearer station's overlapping pass can finish earlier);
+    windows starting at or after an achieved completion can never beat
+    it.
     """
     # the predictor assigned every window's gs_index, so it — not the
     # caller — is the authority on which station a window belongs to
     gss = predictor.ground_stations
-    sats = list(sats)
     n = len(sats)
     planes_arr = np.array([p for p, _ in sats])
     slots_arr = np.array([s for _, s in sats])
@@ -130,6 +248,8 @@ def _first_fit_transfers(
 
     out: List[Optional[Tuple[float, float, int]]] = [None] * n
     sweeps: List[Tuple[int, int]] = []     # (sat index, overlap-window index)
+    built_end = predictor.built_end if predictor.rolling else np.inf
+    clipped_reject = False
     pending = [s for s in range(n) if ptrs[s] is not None]
     while pending:
         t0s = np.array(
@@ -143,9 +263,15 @@ def _first_fit_transfers(
         nxt = []
         for s, t0, d in zip(pending, t0s, dists):
             rec, j = recs[s], ptrs[s]
-            need, done = transfer_time(int(rec["gs_index"][j]), float(d))
-            if rec["ends"][j] - t0 >= need:
-                out[s] = (float(t0), float(t0 + done), j)
+            gi = int(rec["gs_index"][j])
+            need, done = transfer_time(gi, float(d))
+            t_fit, done = _repriced_fit(
+                ledger, walker, gss[gi], Satellite(*sats[s]), gi,
+                float(t0), float(rec["ends"][j]), transfer_time,
+                need, done,
+            )
+            if t_fit is not None:
+                out[s] = (t_fit, t_fit + done, j)
                 # multi-GS overlap sweep candidates: any window starting
                 # before the achieved completion may still finish earlier
                 for k in range(j + 1, rec["starts"].size):
@@ -154,7 +280,10 @@ def _first_fit_transfers(
                     if rec["ends"][k] > t_ready[s]:
                         sweeps.append((s, k))
                 continue
-            # window too short — advance past windows already over
+            # window too short (or fully booked) — advance past windows
+            # already over
+            if rec["ends"][j] == built_end:
+                clipped_reject = True
             j += 1
             while j < rec["ends"].size and rec["ends"][j] <= t_ready[s]:
                 j += 1
@@ -177,12 +306,19 @@ def _first_fit_transfers(
         )
         for (s, k), t0k, dk in zip(sweeps, t0s, dists):
             rec = recs[s]
-            need_k, done_k = transfer_time(int(rec["gs_index"][k]),
-                                           float(dk))
-            if rec["ends"][k] - t0k >= need_k \
-                    and t0k + done_k < out[s][1]:
-                out[s] = (float(t0k), float(t0k + done_k), k)
-    return out
+            gi = int(rec["gs_index"][k])
+            need_k, done_k = transfer_time(gi, float(dk))
+            t_fit, done_k = _repriced_fit(
+                ledger, walker, gss[gi], Satellite(*sats[s]), gi,
+                float(t0k), float(rec["ends"][k]), transfer_time,
+                need_k, done_k,
+            )
+            if t_fit is None:
+                if rec["ends"][k] == built_end:
+                    clipped_reject = True
+            elif t_fit + done_k < out[s][1]:
+                out[s] = (t_fit, t_fit + done_k, k)
+    return out, clipped_reject
 
 
 def symmetric_transfer(time_fn, link: LinkConfig, payload_bits: float):
@@ -203,6 +339,7 @@ def earliest_transfer(
     t: float,
     transfer_time,  # (gs_index, distance) -> (need_s, done_s)
     skip_window=None,
+    ledger: Optional[GSResourceLedger] = None,
 ) -> Optional[Tuple[float, float, VisibilityWindow]]:
     """Earliest-completing feasible transfer of one satellite after t:
     (t0, t_done, window), or None.
@@ -213,25 +350,58 @@ def earliest_transfer(
     windows) and agree with ``select_sink`` on earliest-completion
     semantics under multi-GS union windows (where overlapping windows
     mean the first fit in start order is not necessarily the earliest
-    completion).
+    completion).  Ledger and rolling-horizon semantics match
+    ``_first_fit_transfers``: windows are priced against residual
+    station capacity, and an empty result extends a rolling predictor
+    and retries.
     """
     gss = predictor.ground_stations
-    best: Optional[Tuple[float, float, VisibilityWindow]] = None
-    for w in predictor.windows_of(sat):
-        if w.t_end <= t:
-            continue
-        if best is not None and w.t_start >= best[1]:
-            break           # can no longer beat the achieved completion
-        if skip_window is not None and skip_window(w):
-            continue
-        t0 = max(w.t_start, t)
-        d = _distance_at(walker, gss[w.gs_index], sat, t0)
-        need, done = transfer_time(w.gs_index, d)
-        if w.t_end - t0 < need:
-            continue
-        if best is None or t0 + done < best[1]:
-            best = (t0, t0 + done, w)
-    return best
+    while True:
+        built_end = predictor.built_end if predictor.rolling else np.inf
+        best: Optional[Tuple[float, float, VisibilityWindow]] = None
+        clipped_reject = False
+        for w in predictor.windows_of(sat):
+            if w.t_end <= t:
+                continue
+            if best is not None and w.t_start >= best[1]:
+                break       # can no longer beat the achieved completion
+            if skip_window is not None and skip_window(w):
+                continue
+            t0 = max(w.t_start, t)
+            d = _distance_at(walker, gss[w.gs_index], sat, t0)
+            need, done = transfer_time(w.gs_index, d)
+            t_fit, done = _repriced_fit(
+                ledger, walker, gss[w.gs_index], sat, w.gs_index,
+                t0, w.t_end, transfer_time, need, done,
+            )
+            if t_fit is None:
+                if w.t_end == built_end:
+                    clipped_reject = True  # true end lies past the horizon
+                continue
+            if best is None or t_fit + done < best[1]:
+                best = (t_fit, t_fit + done, w)
+        if best is not None and not clipped_reject:
+            # complete a chosen window still clipped at the built
+            # boundary (its true end lies in the next chunk) so the
+            # reported window matches a prebuilt table's
+            if best[2].t_end == built_end and predictor.extend_once():
+                continue
+            return best
+        if not predictor.extend_once():
+            return best
+
+
+def reserve_decision(ledger: Optional[GSResourceLedger], decision) -> None:
+    """Book a chosen sink upload (``SinkDecision`` or
+    ``ClusterSinkDecision``) on the ledger so later transfer decisions
+    are priced against the residual station capacity.  No-op without a
+    ledger (the contention-free degenerate case)."""
+    if ledger is not None:
+        ledger.reserve(
+            decision.window.gs_index,
+            decision.t_upload_start,
+            decision.t_upload_done,
+        )
 
 
 def select_sink(
@@ -245,6 +415,7 @@ def select_sink(
     t_train_done: Sequence[float],
     payload_bits: float,
     require_next_download: bool = False,
+    ledger: Optional[GSResourceLedger] = None,
 ) -> Optional[SinkDecision]:
     """Deterministic sink selection for one orbital plane.
 
@@ -259,10 +430,14 @@ def select_sink(
       payload_bits: model size z|N|.
       require_next_download: also require room for the next global-model
         download inside the same window (t_c^U + t_c^D).
+      ledger: optional shared RB-capacity view; candidate uploads are
+        priced against the residual capacity of each window's station.
+        The caller books the returned decision (``reserve_decision``).
 
     Returns:
       The SinkDecision, or None if no feasible window exists in the
-      predictor's horizon (caller should extend the horizon).
+      predictor's horizon (a rolling predictor extends and retries
+      before giving up).
     """
     K = walker.config.sats_per_plane
     t_hop = isl_hop_time(isl, payload_bits)
@@ -273,7 +448,7 @@ def select_sink(
         sats=[(plane, s) for s in range(K)],
         relay_latency=ring_hops_matrix(K) * t_hop,
         t_train_done=t_train_done, payload_bits=payload_bits,
-        require_next_download=require_next_download,
+        require_next_download=require_next_download, ledger=ledger,
     )
     if cd is None:
         return None
@@ -358,12 +533,20 @@ def naive_sink_slot(
     """The naive-sink ablation's slot choice: the plane's next visitor
     after t_ready, window duration ignored (earliest effective start,
     ties to the lowest slot).  One batched per-plane sweep instead of K
-    scalar ``next_window`` calls."""
-    starts, _ = predictor.plane_next_window_starts(plane, t_ready)
-    eff = np.maximum(starts, t_ready)
-    if not np.any(np.isfinite(eff)):
-        return None
-    return int(np.argmin(eff))
+    scalar ``next_window`` calls.
+
+    A plane with no window left inside the built horizon extends a
+    rolling predictor and retries (near the horizon end the plane would
+    otherwise silently drop out of the round); only when the horizon
+    cannot grow further does it return None.
+    """
+    while True:
+        starts, _ = predictor.plane_next_window_starts(plane, t_ready)
+        eff = np.maximum(starts, t_ready)
+        if np.any(np.isfinite(eff)):
+            return int(np.argmin(eff))
+        if not predictor.extend_once():
+            return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -394,6 +577,7 @@ def select_sink_cluster(
     t_train_done: Sequence[float],
     payload_bits: float,
     require_next_download: bool = False,
+    ledger: Optional[GSResourceLedger] = None,
 ) -> Optional[ClusterSinkDecision]:
     """Constellation-wide sink selection over an arbitrary satellite set.
 
@@ -402,7 +586,11 @@ def select_sink_cluster(
     readiness is max_s(t_train_done[s] + relay_latency[c, s]), and the
     feasibility/completion rules are unchanged.  With ``sats`` = one
     plane and ``relay_latency = ring_hops_matrix(K) * t_hop`` this is
-    bit-identical to ``select_sink`` (equivalence-tested).
+    bit-identical to ``select_sink`` (equivalence-tested).  With a
+    ``ledger``, every candidate's upload is priced against the residual
+    RB capacity of its window's station, so a saturated station loses
+    the eq. (22) completion race to a station with free capacity — this
+    is what load-balances cluster sinks across stations.
     """
     assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
         "predictor was built over a different ground segment"
@@ -420,40 +608,50 @@ def select_sink_cluster(
             need += uplink_time(link, payload_bits, d)
         return need, t_dl
 
-    fits = _first_fit_transfers(
-        walker=walker, predictor=predictor, sats=sats,
-        t_ready=t_ready, transfer_time=exchange_time,
-    )
-
-    best: Optional[ClusterSinkDecision] = None
-    considered = 0
-    for cand in range(len(sats)):
-        if fits[cand] is None:
-            continue
-        t0, t_done, j = fits[cand]
-        w = predictor.windows_of(Satellite(*sats[cand]))[j]
-        considered += 1
-        decision = ClusterSinkDecision(
-            planes=planes,
-            sink=Satellite(*sats[cand]),
-            window=w,
-            t_models_at_sink=float(t_ready[cand]),
-            t_upload_start=t0,
-            t_upload_done=t_done,
-            t_wait=max(0.0, w.t_start - float(t_ready[cand])),
-            candidates_considered=0,
+    while True:
+        fits = _first_fit_transfers(
+            walker=walker, predictor=predictor, sats=sats,
+            t_ready=t_ready, transfer_time=exchange_time, ledger=ledger,
         )
-        # minimize completion; tie -> earliest window start
-        if (
-            best is None
-            or decision.t_upload_done < best.t_upload_done - 1e-9
-            or (
-                abs(decision.t_upload_done - best.t_upload_done) <= 1e-9
-                and decision.window.t_start < best.window.t_start
-            )
-        ):
-            best = decision
 
-    if best is None:
-        return None
-    return dataclasses.replace(best, candidates_considered=considered)
+        best: Optional[ClusterSinkDecision] = None
+        considered = 0
+        for cand in range(len(sats)):
+            if fits[cand] is None:
+                continue
+            t0, t_done, j = fits[cand]
+            w = predictor.windows_of(Satellite(*sats[cand]))[j]
+            considered += 1
+            decision = ClusterSinkDecision(
+                planes=planes,
+                sink=Satellite(*sats[cand]),
+                window=w,
+                t_models_at_sink=float(t_ready[cand]),
+                t_upload_start=t0,
+                t_upload_done=t_done,
+                t_wait=max(0.0, w.t_start - float(t_ready[cand])),
+                candidates_considered=0,
+            )
+            # minimize completion; tie -> earliest window start
+            if (
+                best is None
+                or decision.t_upload_done < best.t_upload_done - 1e-9
+                or (
+                    abs(decision.t_upload_done - best.t_upload_done) <= 1e-9
+                    and decision.window.t_start < best.window.t_start
+                )
+            ):
+                best = decision
+
+        if best is None:
+            return None
+        # the chosen window may still be clipped at a rolling horizon's
+        # built boundary — complete it so the reported window carries
+        # its true end (the schedule itself is already final)
+        if (
+            predictor.rolling
+            and best.window.t_end == predictor.built_end
+            and predictor.extend_once()
+        ):
+            continue
+        return dataclasses.replace(best, candidates_considered=considered)

@@ -20,9 +20,23 @@ holds the union of every station's windows (each tagged with its
 ``gs_index``) — a satellite is schedulable whenever ANY station sees it.
 Queries are O(log W) via per-satellite sorted start/cummax-end arrays
 instead of the seed's linear scans.
+
+Rolling horizon (``rolling=True``): instead of prebuilding the full
+window table over ``1.5x`` the simulation horizon, the predictor builds
+an initial chunk of ``horizon_s`` seconds and *extends* it
+chunk-by-chunk (``extend_once`` / ``ensure_horizon``) as simulated time
+advances — long multi-round runs pay for visibility prediction
+incrementally, and the transfer planner extends-and-retries instead of
+silently dropping a plane whose next window falls past the built
+horizon.  Chunk boundaries are snapped to the coarse scan grid and
+boundary-straddling windows are merged, so the incrementally grown
+table is *identical* to a prebuilt table over the same range
+(equivalence-tested).  ``max_horizon_s`` bounds the growth (a satellite
+that never sees any station must not extend forever).
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -44,6 +58,42 @@ def as_gs_list(gs: GroundStations) -> List[GroundStation]:
     return list(gs)
 
 
+def _merge_at_boundary(
+    old: WindowTable, new: WindowTable, t_b: float, K: int
+) -> WindowTable:
+    """Stitch an extension chunk onto a station's table.
+
+    A satellite visible at the chunk boundary produces a window clipped
+    at ``t_b`` in the old table AND a window opening at ``t_b`` in the
+    new chunk — the same physical pass.  Both chunks sample the exact
+    boundary grid point, so the halves are matched by float equality
+    and fused into the single window a prebuilt table would contain
+    (this is what keeps the rolling table bit-identical to a prebuilt
+    one).  Unmatched rows pass through untouched.
+    """
+    old_clip = np.flatnonzero(old.t_end == t_b)
+    new_open = np.flatnonzero(new.t_start == t_b)
+    if old_clip.size == 0 or new_open.size == 0:
+        return WindowTable.concatenate([old, new]).sorted_by_start()
+    by_sat = {
+        int(old.plane[i]) * K + int(old.slot[i]): i for i in old_clip
+    }
+    t_end = old.t_end.copy()
+    drop = np.zeros(len(new), dtype=bool)
+    for j in new_open:
+        i = by_sat.get(int(new.plane[j]) * K + int(new.slot[j]))
+        if i is not None:
+            t_end[i] = new.t_end[j]        # fuse the two halves
+            drop[j] = True
+    merged_old = WindowTable(
+        plane=old.plane, slot=old.slot, t_start=old.t_start,
+        t_end=t_end, gs_index=old.gs_index,
+    )
+    return WindowTable.concatenate(
+        [merged_old, new.take(np.flatnonzero(~drop))]
+    ).sorted_by_start()
+
+
 class VisibilityPredictor:
     def __init__(
         self,
@@ -53,12 +103,21 @@ class VisibilityPredictor:
         t0: float = 0.0,
         coarse_step_s: float = 10.0,
         engine: str = "vectorized",
+        rolling: bool = False,
+        max_horizon_s: Optional[float] = None,
     ):
         """Args:
           gs: one ground station, or a sequence for union-of-windows
             multi-GS scheduling.
           engine: "vectorized" (default) or "reference" — the scalar
             oracle, kept selectable for equivalence tests and benchmarks.
+          rolling: build only an initial ``horizon_s`` chunk and let the
+            table grow on demand (``extend_once``/``ensure_horizon``);
+            requires the vectorized engine and a finite
+            ``max_horizon_s`` (a never-visible satellite must not
+            trigger unbounded extension).
+          max_horizon_s: hard cap on the built horizon, measured from
+            ``t0``; only meaningful with ``rolling=True``.
         """
         self.walker = walker
         gss = as_gs_list(gs)
@@ -66,16 +125,40 @@ class VisibilityPredictor:
         self.gs = gss[0]                       # primary station (back-compat)
         self.t0 = t0
         self.horizon_s = horizon_s
+        self.coarse_step_s = coarse_step_s
+        self.rolling = bool(rolling)
+        if self.rolling:
+            if engine != "vectorized":
+                raise ValueError("rolling horizon needs the vectorized engine")
+            if max_horizon_s is None or not np.isfinite(max_horizon_s):
+                raise ValueError("rolling horizon needs a finite max_horizon_s")
+            # chunk boundaries sit on the coarse scan grid, so every
+            # incremental chunk samples exactly the grid points a
+            # prebuilt table would — extension preserves bit-identity
+            n = max(1, int(math.ceil(horizon_s / coarse_step_s - 1e-9)))
+            self.chunk_s = n * coarse_step_s
+            self.max_horizon_s = float(max_horizon_s)
+        else:
+            self.chunk_s = None
+            self.max_horizon_s = None
+        self._station_tables: List[WindowTable] = []
 
         if engine == "vectorized":
-            tables = [
+            end0 = (
+                min(t0 + self.chunk_s, t0 + self.max_horizon_s)
+                if self.rolling else t0 + horizon_s
+            )
+            self._station_tables = [
                 visibility_table(
-                    walker, g, t0, t0 + horizon_s,
+                    walker, g, t0, end0,
                     coarse_step_s=coarse_step_s, gs_index=i,
                 )
                 for i, g in enumerate(gss)
             ]
-            self.table = WindowTable.concatenate(tables).sorted_by_start()
+            self._built_end = end0
+            self.table = WindowTable.concatenate(
+                self._station_tables
+            ).sorted_by_start()
         elif engine == "reference":
             from repro.orbits.visibility import visibility_windows_reference
 
@@ -87,6 +170,7 @@ class VisibilityPredictor:
                 ):
                     rows.append((w.plane, w.slot, w.t_start, w.t_end, i))
             arr = np.asarray(rows, dtype=np.float64).reshape(-1, 5)
+            self._built_end = t0 + horizon_s
             self.table = WindowTable(
                 plane=arr[:, 0].astype(np.int32),
                 slot=arr[:, 1].astype(np.int32),
@@ -96,13 +180,17 @@ class VisibilityPredictor:
             ).sorted_by_start()
         else:
             raise ValueError(f"unknown engine {engine!r}")
+        self._reindex()
 
+    def _reindex(self) -> None:
+        """(Re)build the per-satellite query indexes from ``self.table``
+        — called at construction and after every horizon extension."""
         # Per-satellite start-sorted slices of the table.  ``_cummax_end``
         # (running max of t_end in start order) makes "first window with
         # t_end > t" a single searchsorted even when multi-GS windows of
         # the same satellite overlap.
         self._by_sat: Dict[Tuple[int, int], Dict[str, np.ndarray]] = {}
-        K = walker.config.sats_per_plane
+        K = self.walker.config.sats_per_plane
         sat_ids = self.table.plane.astype(np.int64) * K + self.table.slot
         order = np.lexsort((self.table.t_start, sat_ids))
         sat_sorted = sat_ids[order]
@@ -121,6 +209,65 @@ class VisibilityPredictor:
             }
         self._win_cache: Dict[Tuple[int, int], List[VisibilityWindow]] = {}
         self._plane_pads: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    # -- rolling horizon ---------------------------------------------------------
+    @property
+    def built_end(self) -> float:
+        """End of the currently built window table (absolute seconds)."""
+        return self._built_end
+
+    def extend_once(self) -> bool:
+        """Grow the window table by one chunk.  Returns False when the
+        predictor is not rolling or ``max_horizon_s`` is reached —
+        callers use the return value as their retry guard."""
+        if not self.rolling:
+            return False
+        limit = self.t0 + self.max_horizon_s
+        if self._built_end >= limit - 1e-6:
+            return False
+        new_end = min(self._built_end + self.chunk_s, limit)
+        for i, g in enumerate(self.ground_stations):
+            chunk = visibility_table(
+                self.walker, g, self._built_end, new_end,
+                coarse_step_s=self.coarse_step_s, gs_index=i,
+            )
+            self._station_tables[i] = _merge_at_boundary(
+                self._station_tables[i], chunk, self._built_end,
+                self.walker.config.sats_per_plane,
+            )
+        self._built_end = new_end
+        self.table = WindowTable.concatenate(
+            self._station_tables
+        ).sorted_by_start()
+        self._reindex()
+        return True
+
+    def ensure_horizon(self, t_abs: float) -> bool:
+        """Extend until the table covers ``t_abs`` (absolute seconds).
+        Returns False if the cap stops growth short of ``t_abs``."""
+        while self._built_end < t_abs:
+            if not self.extend_once():
+                return False
+        return True
+
+    def plane_window_supply(
+        self, t0: float, t1: float
+    ) -> np.ndarray:
+        """(L, num_stations) seconds of predicted access-window overlap
+        with ``[t0, t1]`` per (plane, station) — the window-supply
+        signal that drives per-round dynamic cluster formation and
+        station load-balancing."""
+        if self.rolling:
+            self.ensure_horizon(t1)        # best effort, capped
+        L = self.walker.config.num_planes
+        out = np.zeros((L, len(self.ground_stations)))
+        ov = (
+            np.minimum(self.table.t_end, t1)
+            - np.maximum(self.table.t_start, t0)
+        )
+        m = ov > 0
+        np.add.at(out, (self.table.plane[m], self.table.gs_index[m]), ov[m])
+        return out
 
     # -- window access -----------------------------------------------------------
     @property
@@ -177,11 +324,22 @@ class VisibilityPredictor:
     def next_window(
         self, sat: Satellite, t: float
     ) -> Optional[VisibilityWindow]:
-        """First window with t_end > t (possibly the one containing t)."""
-        j = self._first_index_ending_after((sat.plane, sat.slot), t)
-        if j is None:
-            return None
-        return self.windows_of(sat)[j]
+        """First window with t_end > t (possibly the one containing t).
+
+        A rolling predictor with no such window inside the built
+        horizon extends and retries before giving up (None only once
+        ``max_horizon_s`` is exhausted).  A window still clipped at the
+        built boundary is completed first — its true end lies in the
+        next chunk — so the result matches a prebuilt table."""
+        while True:
+            j = self._first_index_ending_after((sat.plane, sat.slot), t)
+            if j is not None:
+                w = self.windows_of(sat)[j]
+                if w.t_end == self._built_end and self.extend_once():
+                    continue               # boundary-clipped: complete it
+                return w
+            if not self.extend_once():
+                return None
 
     def next_window_with_duration(
         self, sat: Satellite, t: float, min_duration: float
@@ -190,21 +348,30 @@ class VisibilityPredictor:
 
         This is the paper's sink feasibility constraint
         ``AW(c_opt, GS) >= T*_sum``: the access window must be long enough
-        to exchange the partial global model with the GS.
+        to exchange the partial global model with the GS.  Extends a
+        rolling predictor when nothing fits inside the built horizon.
         """
         key = (sat.plane, sat.slot)
-        j = self._first_index_ending_after(key, t)
-        if j is None:
-            return None
-        rec = self._by_sat[key]
-        wins = self.windows_of(sat)
-        for i in range(j, len(wins)):
-            if rec["ends"][i] <= t:
+        while True:
+            j = self._first_index_ending_after(key, t)
+            if j is not None:
+                rec = self._by_sat[key]
+                wins = self.windows_of(sat)
+                for i in range(j, len(wins)):
+                    if rec["ends"][i] <= t:
+                        continue
+                    effective_start = max(rec["starts"][i], t)
+                    if rec["ends"][i] - effective_start >= min_duration:
+                        w = wins[i]
+                        if w.t_end == self._built_end and self.extend_once():
+                            break          # clipped: complete it first
+                        return w
+                else:
+                    if not self.extend_once():
+                        return None
                 continue
-            effective_start = max(rec["starts"][i], t)
-            if rec["ends"][i] - effective_start >= min_duration:
-                return wins[i]
-        return None
+            if not self.extend_once():
+                return None
 
     def _plane_padded(self, plane: int) -> Tuple[np.ndarray, np.ndarray]:
         """(starts, cummax_end) as (K, W+1) inf-padded matrices — the

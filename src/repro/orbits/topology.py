@@ -318,6 +318,19 @@ class ISLTopology:
 
         return h_a, h_b
 
+    def plane_adjacency(self) -> np.ndarray:
+        """(L, L) bool: planes joined by at least one inter-plane ISL,
+        derived from the built edge set — the single source of the
+        offset/seam semantics (cluster formation consumes this, so it
+        can never desynchronize from routing)."""
+        i, j = self.edges(INTER)
+        K = self.sats_per_plane
+        adj = np.zeros((self.num_planes, self.num_planes), dtype=bool)
+        adj[i // K, j // K] = True
+        adj[j // K, i // K] = True
+        np.fill_diagonal(adj, False)
+        return adj
+
     def hop_matrix(self) -> np.ndarray:
         """All-pairs ISL hop counts (unit edge weights); UNREACHABLE for
         disconnected pairs.  The ring topology's per-plane blocks equal

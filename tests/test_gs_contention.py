@@ -1,0 +1,373 @@
+"""GS resource-block contention, rolling horizon, dynamic clusters.
+
+The load-bearing guarantees of the contention-aware scheduling stack:
+  * ``GSResourceLedger`` interval bookkeeping is exact (capacity,
+    half-open intervals, earliest feasible fit);
+  * with unlimited (or unreached) capacity the ledger-aware planner is
+    BIT-IDENTICAL to the contention-free one — today's behavior is the
+    degenerate case;
+  * under scarce capacity, concurrent uploads on one station serialize
+    (never double-book) and completion is monotonically delayed;
+  * a rolling-horizon predictor grows its window table chunk-by-chunk
+    into exactly the prebuilt table, and scheduling queries
+    extend-and-retry instead of silently returning None;
+  * dynamic cluster formation covers every plane exactly once, respects
+    seam cuts and inter-plane connectivity, and degenerates to static
+    single-plane clusters on a ring.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.comms import GSResourceLedger, ISLConfig, LinkConfig
+from repro.core.fedleo import (
+    form_clusters,
+    make_clusters,
+    plan_plane_round,
+)
+from repro.core.scheduling import (
+    reserve_decision,
+    select_sink,
+    select_sink_cluster,
+)
+from repro.orbits import (
+    ConstellationConfig,
+    GroundStation,
+    TopologyConfig,
+    VisibilityPredictor,
+    WalkerDelta,
+)
+from repro.orbits.constellation import Satellite
+
+PAYLOAD = 3.2e7
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = ConstellationConfig(num_planes=3, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    from repro.configs.constellations import GROUND_STATION_PRESETS
+
+    gss = [GroundStation(), GROUND_STATION_PRESETS["punta-arenas"]]
+    pred = VisibilityPredictor(walker, gss, horizon_s=24 * 3600)
+    return cfg, walker, gss, pred
+
+
+# --- ledger bookkeeping -------------------------------------------------------
+def test_ledger_earliest_fit_capacity_one():
+    led = GSResourceLedger(2, 1)
+    led.reserve(0, 10.0, 20.0)
+    assert led.earliest_fit(0, 0.0, 100.0, 5.0) == 0.0
+    assert led.earliest_fit(0, 8.0, 100.0, 5.0) == 20.0      # pushed past
+    assert led.earliest_fit(0, 12.0, 100.0, 3.0) == 20.0
+    assert led.earliest_fit(0, 8.0, 15.0, 5.0) is None       # window too short
+    assert led.earliest_fit(1, 8.0, 100.0, 5.0) == 8.0       # other station
+
+
+def test_ledger_capacity_counts_concurrency():
+    led = GSResourceLedger(1, 2)
+    led.reserve(0, 10.0, 20.0)
+    assert led.earliest_fit(0, 8.0, 100.0, 5.0) == 8.0       # one RB free
+    led.reserve(0, 12.0, 30.0)
+    # [12, 20) saturated: earliest feasible start is the first release
+    assert led.earliest_fit(0, 8.0, 100.0, 5.0) == 20.0
+    assert led.earliest_fit(0, 0.0, 100.0, 2.0) == 0.0       # fits before
+
+
+def test_ledger_half_open_intervals_and_release():
+    led = GSResourceLedger(1, 1)
+    led.reserve(0, 0.0, 10.0)
+    led.reserve(0, 10.0, 20.0)          # back-to-back is legal
+    assert led.occupancy(0, 10.0) == 1
+    assert led.earliest_fit(0, 0.0, 100.0, 1.0) == 20.0
+    led.release_before(10.0)
+    a, b = led.busy_intervals(0)
+    assert list(a) == [10.0] and list(b) == [20.0]
+
+
+def test_ledger_unlimited_is_identity():
+    led = GSResourceLedger(1, None)
+    for _ in range(64):
+        led.reserve(0, 0.0, 1e9)
+    assert led.earliest_fit(0, 3.0, 4.0, 1e6) == 3.0
+    with pytest.raises(ValueError):
+        GSResourceLedger(1, 0)
+
+
+# --- degenerate-case equivalence ----------------------------------------------
+def test_unreached_capacity_bit_identical_to_no_ledger(world):
+    """Pre-booked capacity below the cap must not perturb a single
+    decision — the ledger-aware planner IS the old planner until a
+    station saturates."""
+    cfg, walker, gss, pred = world
+    link, isl = LinkConfig(), ISLConfig()
+    K = cfg.sats_per_plane
+    t_done = [3600.0 + 60.0 * s for s in range(K)]
+    led = GSResourceLedger(len(gss), 4)
+    led.reserve(0, 0.0, 1e6)            # 1 of 4 RBs busy all day
+    led.reserve(1, 0.0, 1e6)
+    for plane in range(cfg.num_planes):
+        a = select_sink(walker=walker, gs=gss, predictor=pred, link=link,
+                        isl=isl, plane=plane, t_train_done=t_done,
+                        payload_bits=PAYLOAD)
+        b = select_sink(walker=walker, gs=gss, predictor=pred, link=link,
+                        isl=isl, plane=plane, t_train_done=t_done,
+                        payload_bits=PAYLOAD, ledger=led)
+        assert a is not None and a == b
+
+
+def test_scarce_capacity_serializes_same_station(world):
+    """Two identical plane rounds against a 1-RB ledger: the second
+    upload must not overlap the first on the same station, and its
+    completion can only move later."""
+    cfg, walker, gss, pred = world
+    link, isl = LinkConfig(), ISLConfig()
+    K = cfg.sats_per_plane
+    t_done = [3600.0] * K
+    led = GSResourceLedger(len(gss), 1)
+
+    free = select_sink(walker=walker, gs=gss, predictor=pred, link=link,
+                       isl=isl, plane=0, t_train_done=t_done,
+                       payload_bits=PAYLOAD)
+    first = select_sink(walker=walker, gs=gss, predictor=pred, link=link,
+                        isl=isl, plane=0, t_train_done=t_done,
+                        payload_bits=PAYLOAD, ledger=led)
+    assert first == free                # empty ledger: degenerate case
+    reserve_decision(led, first)
+    second = select_sink(walker=walker, gs=gss, predictor=pred, link=link,
+                         isl=isl, plane=0, t_train_done=t_done,
+                         payload_bits=PAYLOAD, ledger=led)
+    assert second is not None
+    assert second.t_upload_done >= first.t_upload_done
+    if second.window.gs_index == first.window.gs_index:
+        # same station: the occupied stretch may not overlap
+        assert (second.t_upload_start >= first.t_upload_done
+                or second.t_upload_done <= first.t_upload_start)
+    reserve_decision(led, second)
+    # the ledger never over-books: max concurrency <= capacity
+    for gi in range(len(gss)):
+        s, e = led.reservations(gi)
+        for t in np.concatenate([s, e - 1e-9]):
+            assert led.occupancy(gi, float(t)) <= 1
+
+
+def test_fedleo_strategy_unlimited_capacity_bit_identical():
+    """End-to-end engine guard: FedLEO with a huge-but-finite RB cap
+    reproduces the contention-free run exactly (schedules, times,
+    metrics)."""
+    from repro.core import FedLEO, SimConfig
+    from tests.test_topology_routing import _tiny_task
+
+    cfg = ConstellationConfig(num_planes=3, sats_per_plane=6)
+    sim_free = SimConfig(constellation=cfg, horizon_hours=48.0)
+    sim_cap = SimConfig(constellation=cfg, horizon_hours=48.0,
+                        gs_rb_capacity=10_000)
+    ra = FedLEO(_tiny_task(3, 6), sim_free).run(max_rounds=2)
+    rb = FedLEO(_tiny_task(3, 6), sim_cap).run(max_rounds=2)
+    assert len(ra.history) == len(rb.history) == 2
+    for ha, hb in zip(ra.history, rb.history):
+        assert ha.t_hours == hb.t_hours
+        assert ha.events == hb.events
+        assert ha.metrics == hb.metrics
+
+
+def test_fedleo_grid_contended_round_runs():
+    """FedLEOGrid with a 1-RB ledger and rolling horizon completes
+    rounds; uploads on any one station never overlap."""
+    from repro.core import FedLEOGrid, SimConfig
+    from tests.test_topology_routing import _tiny_task
+
+    cfg = ConstellationConfig(num_planes=4, sats_per_plane=6)
+    sim = SimConfig(constellation=cfg, horizon_hours=48.0,
+                    topology=TopologyConfig(kind="grid"),
+                    gs_rb_capacity=1, rolling_horizon_hours=12.0)
+    strat = FedLEOGrid(_tiny_task(4, 6), sim, cluster_planes=2)
+    res = strat.run(max_rounds=2)
+    assert len(res.history) == 2
+    assert np.isfinite(res.final_accuracy)
+    s, e = strat.ledger.reservations(0)
+    order = np.argsort(s)
+    assert np.all(s[order][1:] >= e[order][:-1] - 1e-9)   # serialized
+
+
+# --- rolling horizon ----------------------------------------------------------
+def test_rolling_table_identical_to_prebuilt(world):
+    cfg, walker, gss, _ = world
+    H = 12 * 3600.0
+    pre = VisibilityPredictor(walker, gss, horizon_s=H)
+    roll = VisibilityPredictor(walker, gss, horizon_s=3 * 3600.0,
+                               rolling=True, max_horizon_s=H)
+    assert roll.built_end == 3 * 3600.0
+    assert roll.ensure_horizon(H)
+    assert roll.built_end == H
+    for f in ("plane", "slot", "t_start", "t_end", "gs_index"):
+        assert np.array_equal(getattr(pre.table, f)[: len(roll.table)],
+                              getattr(roll.table, f))
+    # prebuilt covers 24 h here? no — both capped at 12 h: same length
+    assert len(pre.table) == len(roll.table)
+    assert not roll.extend_once()       # cap reached
+    assert not pre.extend_once()        # non-rolling never extends
+
+
+def test_rolling_queries_match_prebuilt(world):
+    cfg, walker, gss, pred24 = world
+    H = 24 * 3600.0
+    roll = VisibilityPredictor(walker, gss, horizon_s=1800.0,
+                               rolling=True, max_horizon_s=H)
+    for p in range(cfg.num_planes):
+        for s in range(cfg.sats_per_plane):
+            for t in (0.0, 4000.0, 11 * 3600.0):
+                assert (roll.next_window(Satellite(p, s), t)
+                        == pred24.next_window(Satellite(p, s), t))
+
+
+def test_rolling_select_sink_matches_prebuilt(world):
+    cfg, walker, gss, pred24 = world
+    link, isl = LinkConfig(), ISLConfig()
+    K = cfg.sats_per_plane
+    roll = VisibilityPredictor(walker, gss, horizon_s=600.0,
+                               rolling=True, max_horizon_s=24 * 3600.0)
+    t_done = [3600.0 + 60.0 * s for s in range(K)]
+    for plane in range(cfg.num_planes):
+        a = select_sink(walker=walker, gs=gss, predictor=pred24, link=link,
+                        isl=isl, plane=plane, t_train_done=t_done,
+                        payload_bits=PAYLOAD)
+        b = select_sink(walker=walker, gs=gss, predictor=roll, link=link,
+                        isl=isl, plane=plane, t_train_done=t_done,
+                        payload_bits=PAYLOAD)
+        assert a is not None and b is not None
+        assert (a.sink_slot, a.t_upload_start, a.t_upload_done,
+                a.t_wait, a.window) == \
+               (b.sink_slot, b.t_upload_start, b.t_upload_done,
+                b.t_wait, b.window)
+
+
+def test_naive_sink_slot_extends_instead_of_none(world):
+    """Satellite task: near the horizon end a plane used to silently
+    drop out (next_window -> None).  The rolling predictor must extend
+    and answer what a longer prebuilt table would."""
+    from repro.core.scheduling import naive_sink_slot
+
+    cfg, walker, gss, pred24 = world
+    t_late = 2 * 3600.0                 # past the short initial chunk
+    short = VisibilityPredictor(walker, gss, horizon_s=600.0)
+    roll = VisibilityPredictor(walker, gss, horizon_s=600.0,
+                               rolling=True, max_horizon_s=24 * 3600.0)
+    for plane in range(cfg.num_planes):
+        assert naive_sink_slot(short, plane, t_late) is None    # old symptom
+        assert (naive_sink_slot(roll, plane, t_late)
+                == naive_sink_slot(pred24, plane, t_late))
+
+
+def test_rolling_predictor_guards():
+    cfg = ConstellationConfig(num_planes=2, sats_per_plane=4)
+    walker = WalkerDelta(cfg)
+    with pytest.raises(ValueError):
+        VisibilityPredictor(walker, GroundStation(), horizon_s=600.0,
+                            rolling=True)                # no max_horizon_s
+    with pytest.raises(ValueError):
+        VisibilityPredictor(walker, GroundStation(), horizon_s=600.0,
+                            rolling=True, max_horizon_s=3600.0,
+                            engine="reference")
+
+
+# --- dynamic cluster formation ------------------------------------------------
+def test_form_clusters_partition_and_sizes():
+    supply = np.arange(12, dtype=float)
+    for c in (1, 2, 3, 4, 5):
+        groups = form_clusters(supply, c)
+        flat = sorted(p for g in groups for p in g)
+        assert flat == list(range(12))                  # exact cover
+        assert all(len(g) <= c for g in groups)
+        assert groups == sorted(groups, key=lambda g: g[0])
+
+
+def test_form_clusters_uniform_supply_is_static():
+    """Ties resolve to rotation 0 — the static make_clusters grouping."""
+    for L, c in ((12, 4), (8, 2), (5, 8)):
+        assert form_clusters(np.ones(L), c) == make_clusters(L, c)
+
+
+def test_form_clusters_rotation_follows_supply():
+    # adjacent anchors 0 and 1 are the only well-served planes; with
+    # L=8, c=4 rotation 0 buries both in one cluster (score 5) while
+    # rotation 1 gives each cluster its own anchor (score 10) — the
+    # anchor-separating rotation must win
+    supply = np.array([5.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+    groups = form_clusters(supply, 4)
+    per_cluster = [max(supply[list(g)]) for g in groups]
+    assert sorted(per_cluster, reverse=True)[:2] == [5.0, 5.0]
+
+
+def test_form_clusters_never_cross_cut_seam():
+    """Clusters must never be formed across a cut polar seam."""
+    L, c = 10, 4
+    for supply in (np.ones(L), np.arange(L, dtype=float),
+                   np.arange(L, 0, -1, dtype=float)):
+        groups = form_clusters(supply, c, seam_cut=True)
+        for g in groups:
+            assert max(g) - min(g) == len(g) - 1        # linear contiguity
+        flat = sorted(p for g in groups for p in g)
+        assert flat == list(range(L))
+
+
+def test_form_clusters_splits_disconnected_runs():
+    """A topology without usable inter-plane links degenerates to
+    single-plane clusters; partially connected runs split into their
+    components."""
+    from repro.orbits import ISLTopology
+
+    L = 6
+    cfg = ConstellationConfig(num_planes=L, sats_per_plane=4)
+    ring_adj = ISLTopology(cfg, TopologyConfig(kind="ring")).plane_adjacency()
+    groups = form_clusters(np.ones(L), 3, adjacency=ring_adj)
+    assert groups == [(p,) for p in range(L)]
+    # offset-2 seam-cut grid: components {0,2,4} and {1,3,5}
+    adj = ISLTopology(
+        cfg,
+        TopologyConfig(kind="motif", inter_plane_offsets=(2,),
+                       seam_cut=True),
+    ).plane_adjacency()
+    groups = form_clusters(np.ones(L), 2, seam_cut=True, adjacency=adj)
+    flat = sorted(p for g in groups for p in g)
+    assert flat == list(range(L))
+    for g in groups:
+        assert all(adj[a, b] for a in g for b in g if a != b) or len(g) == 1
+
+
+def test_fedleo_grid_dynamic_clusters_respond_to_supply():
+    """The strategy's per-round grouping is a valid partition sized by
+    cluster_planes and differs across rounds only through supply."""
+    from repro.core import FedLEOGrid, SimConfig
+    from tests.test_topology_routing import _tiny_task
+
+    cfg = ConstellationConfig(num_planes=6, sats_per_plane=4)
+    sim = SimConfig(constellation=cfg, horizon_hours=48.0,
+                    topology=TopologyConfig(kind="grid"))
+    strat = FedLEOGrid(_tiny_task(6, 4), sim, cluster_planes=3)
+    for t in (0.0, 3 * 3600.0, 9 * 3600.0):
+        groups = strat.round_clusters(t)
+        flat = sorted(p for g in groups for p in g)
+        assert flat == list(range(6))
+        assert all(len(g) <= 3 for g in groups)
+    static = FedLEOGrid(_tiny_task(6, 4), sim, cluster_planes=3,
+                        dynamic_clusters=False)
+    assert static.round_clusters(0.0) == static.clusters
+
+
+# --- benchmark substrate ------------------------------------------------------
+def test_append_bench_tolerates_truncated_last_line(tmp_path):
+    from benchmarks.common import append_bench
+
+    path = tmp_path / "BENCH.json"
+    path.write_text('{"bench": "old", "ok": true}\n{"bench": "trunc')
+    rec = {"bench": "new", "x": 1}
+    append_bench(rec, str(path))
+    lines = path.read_text().splitlines()
+    assert json.loads(lines[0]) == {"bench": "old", "ok": True}
+    assert json.loads(lines[-1]) == rec                 # parseable append
+    assert len(lines) == 3                              # partial quarantined
+    # healthy files are appended without extra separators
+    append_bench(rec, str(path))
+    assert len(path.read_text().splitlines()) == 4

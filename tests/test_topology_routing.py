@@ -211,6 +211,67 @@ def test_seam_cut_is_offset_sign_independent():
     assert np.array_equal(east.adjacency, west.adjacency)
 
 
+def test_seam_cut_degenerate_disjoint_rings_routing():
+    """When a seam-cut grid degenerates to disjoint components, the
+    hop/latency matrices must stay consistent: intra-plane blocks keep
+    the exact ring metric, cross-component pairs are UNREACHABLE/inf,
+    and floods never leak across components."""
+    cfg = ConstellationConfig(num_planes=4, sats_per_plane=6)
+    K = cfg.sats_per_plane
+    isl = ISLConfig()
+    t_hop = isl_hop_time(isl, PAYLOAD)
+    # offset-2 cross-links + seam cut -> components {0,2} and {1,3}
+    topo = ISLTopology(
+        cfg,
+        TopologyConfig(kind="motif", inter_plane_offsets=(2,),
+                       seam_cut=True),
+    )
+    assert not topo.is_connected()
+    rt = RoutingTable(topo, ISLPlan(intra=isl), PAYLOAD)
+    hops = topo.hop_matrix()
+    ring = ring_hops_matrix(K)
+    for p in range(cfg.num_planes):
+        blk = slice(p * K, (p + 1) * K)
+        assert np.array_equal(hops[blk, blk], ring)
+        assert np.array_equal(rt.latency[blk, blk], ring * t_hop)
+    for p, q in ((0, 1), (0, 3), (2, 1), (2, 3)):
+        bp, bq = slice(p * K, (p + 1) * K), slice(q * K, (q + 1) * K)
+        assert np.all(hops[bp, bq] == -1)
+        assert np.all(rt.hops[bp, bq] == -1)
+        assert np.all(np.isinf(rt.latency[bp, bq]))
+    for p, q in ((0, 2), (1, 3)):
+        bp, bq = slice(p * K, (p + 1) * K), slice(q * K, (q + 1) * K)
+        assert np.all(hops[bp, bq] >= 1)
+        assert np.all(np.isfinite(rt.latency[bp, bq]))
+    # a flood from component {0,2} must never reach component {1,3}
+    t_recv, fhops, _ = rt.broadcast_times([topo.node(0, 0)], [100.0])
+    reach = np.isfinite(t_recv).reshape(cfg.num_planes, K)
+    assert np.all(reach[[0, 2]]) and not np.any(reach[[1, 3]])
+    assert np.all(fhops.reshape(cfg.num_planes, K)[[1, 3]] == -1)
+
+
+def test_seam_cut_clusters_respect_components():
+    """Cluster formation must never group planes across a cut seam or
+    across disconnected components (a cluster floods/relays
+    internally)."""
+    from repro.core.fedleo import form_clusters
+
+    L = 6
+    cfg = ConstellationConfig(num_planes=L, sats_per_plane=4)
+    adj = ISLTopology(
+        cfg, TopologyConfig(kind="grid", seam_cut=True)
+    ).plane_adjacency()
+    assert not adj[0, L - 1]            # the seam is cut
+    for supply in (np.ones(L), np.arange(L, dtype=float)):
+        for c in (2, 3, 4):
+            groups = form_clusters(supply, c, seam_cut=True,
+                                   adjacency=adj)
+            assert sorted(p for g in groups for p in g) == list(range(L))
+            for g in groups:
+                # contiguous linear runs only: no {0, L-1} wrap group
+                assert max(g) - min(g) == len(g) - 1
+
+
 def test_sweep_fallback_matches_dijkstra(small_cfg):
     """The pure-numpy label-correcting solver (used when scipy is
     absent) must agree with the scipy fast path on every topology kind
