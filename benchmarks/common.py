@@ -100,13 +100,16 @@ def price_ring_round(
     payload_bits: float = PAYLOAD_BITS,
     train_time_s: float = 600.0,
     ledger=None,
+    handover: bool = False,
     t: float = 0.0,
 ):
     """Full FedLEO ring round time via the pure plane planners (no JAX
     training): every plane needs its own GS download and sink upload.
     With a ``ledger`` each chosen upload is booked so later planes are
     priced against residual station capacity (``ledger=None`` is the
-    pre-ledger contention-free pricing).  None if any plane stalls."""
+    pre-ledger contention-free pricing); ``handover=True`` lets each
+    upload split into station-handover segments.  None if any plane
+    stalls."""
     import numpy as np
 
     from repro.core.fedleo import plan_plane_round
@@ -120,6 +123,7 @@ def price_ring_round(
             walker=walker, gs_list=gs_list, predictor=predictor,
             link=sim.link, isl=sim.isl, plane=plane, t=t,
             payload_bits=payload_bits, train_times=train, ledger=ledger,
+            handover=handover,
         )
         if plan is None:
             return None            # a plane stalls the whole round
@@ -135,13 +139,16 @@ def price_grid_round(
     train_time_s: float = 600.0,
     ledger=None,
     dynamic: bool = False,
+    handover: bool = False,
     t: float = 0.0,
 ):
     """Full FedLEOGrid round time via the pure cluster planners: one
     download + one sink upload per cluster.  ``dynamic=True`` re-forms
-    clusters from predicted window supply (the strategy default);
-    ``False`` keeps the static adjacent-plane grouping.  Ledger
-    semantics as in ``price_ring_round``."""
+    clusters from predicted window supply (the strategy default) —
+    discounted by the ledger's residual station capacity when one is
+    given (formation feedback); ``False`` keeps the static
+    adjacent-plane grouping.  Ledger and ``handover`` semantics as in
+    ``price_ring_round``."""
     import numpy as np
 
     from repro.core.fedleo import (
@@ -155,7 +162,7 @@ def price_grid_round(
     L = sim.constellation.num_planes
     if dynamic:
         clusters = supply_driven_clusters(
-            predictor, routing.topology, cluster_planes, t
+            predictor, routing.topology, cluster_planes, t, ledger=ledger
         )
     else:
         clusters = make_clusters(L, cluster_planes)
@@ -166,6 +173,7 @@ def price_grid_round(
             walker=walker, gs_list=gs_list, predictor=predictor,
             link=sim.link, routing=routing, planes=planes, t=t,
             payload_bits=payload_bits, train_times=train, ledger=ledger,
+            handover=handover,
         )
         if plan is None:
             return None

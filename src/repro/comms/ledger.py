@@ -153,6 +153,64 @@ class GSResourceLedger:
         keep = b > a                        # drop zero-length runs
         return a[keep], b[keep]
 
+    def free_runs(
+        self, gs_index: int, lo: float, hi: float
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Maximal ``[a, b)`` sub-intervals of ``[lo, hi)`` where at
+        least one RB of the station is free (occupancy < capacity), in
+        time order — the complement of ``busy_intervals`` clipped to
+        the query range.  The segmented (handover) transfer planner
+        prices candidate upload legs against these stretches.
+
+        Unlimited capacity returns the whole ``[lo, hi)`` untouched
+        (the contention-free degenerate case).
+        """
+        if hi <= lo:
+            z = np.zeros(0)
+            return z, z.copy()
+        a, b = self.busy_intervals(gs_index)
+        starts: List[float] = [float(lo)]
+        ends: List[float] = []
+        for ba, bb in zip(a, b):        # busy runs are sorted, disjoint
+            if bb <= lo or ba >= hi:
+                continue
+            ends.append(float(max(lo, ba)))
+            starts.append(float(min(hi, bb)))
+        ends.append(float(hi))
+        s = np.asarray(starts, dtype=np.float64)
+        e = np.asarray(ends, dtype=np.float64)
+        keep = e > s
+        return s[keep], e[keep]
+
+    def booked_seconds(self, gs_index: int, t0: float, t1: float) -> float:
+        """Total reserved RB-seconds of the station overlapping
+        ``[t0, t1]`` (concurrent reservations count multiply)."""
+        s, e = self.reservations(gs_index)
+        if s.size == 0:
+            return 0.0
+        ov = np.minimum(e, t1) - np.maximum(s, t0)
+        return float(np.sum(ov[ov > 0]))
+
+    def residual_fraction(self, t0: float, t1: float) -> np.ndarray:
+        """Per-station fraction of RB capacity still unbooked over
+        ``[t0, t1]`` — 1.0 for unlimited stations and empty ledgers
+        (the degenerate cases), falling toward 0.0 as a station's RB
+        pool saturates.  Cluster formation uses this to discount the
+        predicted window supply of stations already loaded this round
+        (contention-aware formation feedback)."""
+        out = np.ones(self.num_stations, dtype=np.float64)
+        span = t1 - t0
+        if span <= 0:
+            return out
+        for i in range(self.num_stations):
+            cap = self.capacity[i]
+            if not np.isfinite(cap):
+                continue
+            out[i] = max(
+                0.0, 1.0 - self.booked_seconds(i, t0, t1) / (cap * span)
+            )
+        return out
+
     def earliest_fit(
         self,
         gs_index: int,

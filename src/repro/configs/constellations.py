@@ -110,6 +110,7 @@ def make_sim_config(
     ground_stations: Sequence[str] = ("rolla",),
     topology: Optional[Union[str, TopologyConfig]] = None,
     rb_contention: bool = False,
+    handover: bool = False,
     **overrides,
 ):
     """SimConfig from presets: FedLEO and every baseline in
@@ -134,8 +135,16 @@ def make_sim_config(
     visibility table incrementally instead of prebuilding 1.5x the
     horizon.
 
+    ``handover=True`` opts into mid-window station handover
+    (``SimConfig.gs_handover``): sink uploads may split into segments
+    across different stations' overlapping windows instead of pinning
+    the whole transfer to one station — meaningful with a multi-GS
+    ground segment; with a single station it is bit-identical to the
+    unsegmented scheduler.
+
     Extra keyword arguments override SimConfig fields (horizon_hours,
-    coarse_step_s, gs_rb_capacity, rolling_horizon_hours, ...).
+    coarse_step_s, gs_rb_capacity, rolling_horizon_hours,
+    gs_handover, ...).
     """
     from repro.core.engine import SimConfig
 
@@ -164,4 +173,6 @@ def make_sim_config(
 
         link = kwargs.get("link") or LinkConfig()
         kwargs["gs_rb_capacity"] = link.num_resource_blocks
+    if handover:
+        kwargs.setdefault("gs_handover", True)
     return SimConfig(**kwargs)

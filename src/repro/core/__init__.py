@@ -22,6 +22,10 @@ from repro.core.propagation import (
     relay_schedule,
 )
 from repro.core.scheduling import (
+    HandoverSpec,
+    SegmentedPlan,
+    TransferSegment,
+    plan_segmented_transfer,
     reserve_decision,
     select_sink,
     select_sink_cluster,
@@ -29,8 +33,12 @@ from repro.core.scheduling import (
 
 __all__ = [
     "FedLEOGrid",
+    "HandoverSpec",
+    "SegmentedPlan",
+    "TransferSegment",
     "form_clusters",
     "make_clusters",
+    "plan_segmented_transfer",
     "reserve_decision",
     "plan_cluster_round",
     "plan_plane_round",

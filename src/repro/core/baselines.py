@@ -36,9 +36,11 @@ from repro.core.engine import FLStrategy, SimConfig
 from repro.core.fltask import FederatedTask
 from repro.core.propagation import broadcast_schedule, ring_hops_matrix
 from repro.core.scheduling import (
+    HandoverSpec,
     earliest_transfer,
     first_visible_download,
     naive_sink_slot,
+    reserve_transfer,
     symmetric_transfer,
 )
 from repro.comms.isl import isl_hop_time
@@ -77,7 +79,9 @@ class _StarMixin:
         booked on it; downloads are full-band broadcasts of the shared
         global model (eq. 15) and never contend.  ``ledger`` overrides
         the default when a strategy pairs its own predictor/station
-        sets (FedHAP).
+        sets (FedHAP).  With ``SimConfig.gs_handover`` an upload may
+        split into station-handover segments (each leg booked on its
+        own station); downloads never segment.
         """
         predictor = predictor or self.predictor
         if gs is not None:
@@ -100,15 +104,23 @@ class _StarMixin:
             def skip(w):      # skip the in-progress window
                 return w.contains(t) and w.t_start < t
 
+        spec = (
+            HandoverSpec(self.sim.link, payload_bits)
+            if downlink and self.sim.gs_handover else None
+        )
         hit = earliest_transfer(
             walker=self.walker, predictor=predictor, sat=sat,
             t=t, transfer_time=tt, skip_window=skip, ledger=ledger,
+            handover=spec,
         )
         if hit is None:
             return None
-        t0, t_done, w = hit
-        if ledger is not None:
-            ledger.reserve(w.gs_index, t0, t_done)
+        if spec is not None:
+            t0, t_done, w, segments = hit
+        else:
+            t0, t_done, w = hit
+            segments = ()
+        reserve_transfer(ledger, w.gs_index, t0, t_done, segments)
         return t_done
 
 

@@ -65,6 +65,14 @@ class SimConfig:
     # concurrent sink uploads never compete); an int enables the shared
     # GSResourceLedger so uploads are priced against residual capacity.
     gs_rb_capacity: Optional[int] = None
+    # Mid-window station handover: allow a sink upload to split into
+    # segments across *different* stations' access windows
+    # (plan_segmented_transfer) instead of pinning the whole transfer
+    # to one station.  A segmented plan is adopted only when it
+    # strictly beats the single-window completion, so False — and any
+    # single-station ground segment — is bit-identical to the
+    # unsegmented scheduler.
+    gs_handover: bool = False
     # Rolling-horizon visibility prediction: chunk length in hours, or
     # None for the legacy prebuilt table over 1.5x horizon_hours.  The
     # rolling table grows on demand (capped at 1.5x horizon_hours) and

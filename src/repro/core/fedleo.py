@@ -50,6 +50,7 @@ from repro.core.engine import FLStrategy, SimConfig
 from repro.core.propagation import ring_hops_matrix
 from repro.core.scheduling import (
     ClusterSinkDecision,
+    HandoverSpec,
     SinkDecision,
     earliest_transfer,
     first_visible_download,
@@ -101,6 +102,7 @@ def _naive_sink_decision(
     t_train_done: Sequence[float],
     payload_bits: float,
     ledger: Optional[GSResourceLedger] = None,
+    handover: bool = False,
 ) -> Optional[SinkDecision]:
     """Ablation sink: first visitor after training, AW duration NOT
     checked — uploads that do not fit a window retry at the next one
@@ -115,22 +117,29 @@ def _naive_sink_decision(
         np.asarray(t_train_done, dtype=np.float64)
         + ring_hops_matrix(K)[sink] * t_hop
     ))
-    # upload with retries across this sink's windows
+    # upload with retries across this sink's windows (with handover,
+    # raced against a segmented station-switching plan)
     tt = symmetric_transfer(downlink_time, link, payload_bits)
     hit = earliest_transfer(
         walker=walker, predictor=predictor,
         sat=Satellite(plane, sink), t=t_ready, transfer_time=tt,
         ledger=ledger,
+        handover=HandoverSpec(link, payload_bits) if handover else None,
     )
     if hit is None:
         return None
-    t0, t_done, w = hit
+    if handover:
+        t0, t_done, w, segments = hit
+    else:
+        t0, t_done, w = hit
+        segments = ()
     return SinkDecision(
         plane=plane, sink_slot=sink, window=w,
         t_models_at_sink=t_ready, t_upload_start=t0,
         t_upload_done=t_done,
         t_wait=max(0.0, w.t_start - t_ready),
         candidates_considered=1,
+        segments=segments,
     )
 
 
@@ -148,6 +157,7 @@ def plan_plane_round(
     sink_policy: str = "scheduled",
     require_next_download: bool = False,
     ledger: Optional[GSResourceLedger] = None,
+    handover: bool = False,
 ) -> Optional[PlanePlan]:
     """Plan one plane's round (paper §IV steps 1-3) without training:
     GS download -> ring flood -> concurrent training (simulated via
@@ -158,7 +168,9 @@ def plan_plane_round(
     per-station RB capacity; the caller books the returned plan
     (``reserve_decision(ledger, plan.decision)``) before planning the
     next group.  The GS download is a full-band broadcast of the same
-    global model (eq. 15) and is not RB-contended."""
+    global model (eq. 15) and is not RB-contended.  ``handover``
+    additionally lets the upload split into station-handover segments
+    (``SimConfig.gs_handover``)."""
     K = walker.config.sats_per_plane
     dl = first_visible_download(
         walker=walker, gs=gs_list, predictor=predictor, link=link,
@@ -178,12 +190,13 @@ def plan_plane_round(
             isl=isl, plane=plane, t_train_done=t_train_done,
             payload_bits=payload_bits,
             require_next_download=require_next_download, ledger=ledger,
+            handover=handover,
         )
     else:
         decision = _naive_sink_decision(
             walker=walker, predictor=predictor, link=link, isl=isl,
             plane=plane, t_train_done=t_train_done,
-            payload_bits=payload_bits, ledger=ledger,
+            payload_bits=payload_bits, ledger=ledger, handover=handover,
         )
     if decision is None:
         return None
@@ -206,14 +219,16 @@ def plan_cluster_round(
     train_times: np.ndarray,
     require_next_download: bool = False,
     ledger: Optional[GSResourceLedger] = None,
+    handover: bool = False,
 ) -> Optional[ClusterPlan]:
     """Plan one cluster's round over the ISL graph: a single GS download
     seeds a flood across every plane of the cluster, and one
     constellation-wide sink collects the cluster over cross-plane relay.
     With a single-plane cluster and a ring topology this degenerates to
-    ``plan_plane_round`` exactly (bit-identical schedules).  Ledger
-    semantics as in ``plan_plane_round``: candidate sinks are priced
-    against residual station capacity, the caller reserves."""
+    ``plan_plane_round`` exactly (bit-identical schedules).  Ledger and
+    ``handover`` semantics as in ``plan_plane_round``: candidate sinks
+    are priced against residual station capacity (and may split their
+    upload across stations), the caller reserves."""
     K = walker.config.sats_per_plane
     sats = [(p, s) for p in planes for s in range(K)]
     nodes = routing.nodes_of(sats)
@@ -237,6 +252,7 @@ def plan_cluster_round(
         sats=sats, relay_latency=relay_latency,
         t_train_done=t_train_done, payload_bits=payload_bits,
         require_next_download=require_next_download, ledger=ledger,
+        handover=handover,
     )
     if decision is None:
         return None
@@ -345,14 +361,25 @@ def supply_driven_clusters(
     cluster_planes: int,
     t: float,
     lookahead_s: Optional[float] = None,
+    ledger: Optional[GSResourceLedger] = None,
 ) -> List[Tuple[int, ...]]:
     """One round's plane grouping from predicted window supply — THE
     dynamic-formation recipe (``FedLEOGrid``'s default and what the
     contention benchmark prices): supply over the next orbital period,
-    ``form_clusters`` with the topology's seam/connectivity."""
+    ``form_clusters`` with the topology's seam/connectivity.
+
+    With a ``ledger`` the per-station supply is discounted by the
+    station's *residual* RB fraction over the lookahead
+    (contention-aware formation feedback): window seconds on a station
+    already saturated by booked uploads are worth proportionally less,
+    so cluster anchors steer toward stations with free capacity.  An
+    empty or unlimited ledger leaves the supply untouched — the
+    degenerate case is the plain window-supply grouping."""
     if lookahead_s is None:
         lookahead_s = topology.constellation.period_s
     supply = predictor.plane_window_supply(t, t + lookahead_s)
+    if ledger is not None:
+        supply = supply * ledger.residual_fraction(t, t + lookahead_s)[None, :]
     return form_clusters(
         supply.sum(axis=1), cluster_planes,
         seam_cut=topology.config.seam_cut,
@@ -459,6 +486,7 @@ class FedLEO(_SyncRoundMixin, FLStrategy):
                 sink_policy=self.sink_policy,
                 require_next_download=self.require_next_download,
                 ledger=self.ledger,
+                handover=sim.gs_handover,
             )
 
         def group_stats(plan):
@@ -471,6 +499,7 @@ class FedLEO(_SyncRoundMixin, FLStrategy):
                 "t_models_at_sink": d.t_models_at_sink,
                 "t_wait_sink": d.t_wait,
                 "t_upload_done": d.t_upload_done,
+                "handover_legs": len(d.segments),
             }
 
         return self._sync_round(
@@ -535,11 +564,14 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
 
     def round_clusters(self, t: float) -> List[Tuple[int, ...]]:
         """This round's plane grouping: the supply-driven dynamic
-        partition, or the static one when ``dynamic_clusters=False``."""
+        partition (discounted by the ledger's residual station
+        capacity when contention accounting is on), or the static one
+        when ``dynamic_clusters=False``."""
         if not self.dynamic_clusters:
             return self.clusters
         return supply_driven_clusters(
-            self.predictor, self.topology, self.cluster_planes, t
+            self.predictor, self.topology, self.cluster_planes, t,
+            ledger=self.ledger,
         )
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
@@ -556,6 +588,7 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
                 ),
                 require_next_download=self.require_next_download,
                 ledger=self.ledger,
+                handover=sim.gs_handover,
             )
 
         def group_stats(plan):
@@ -568,6 +601,7 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
                 "t_models_at_sink": d.t_models_at_sink,
                 "t_wait_sink": d.t_wait,
                 "t_upload_done": d.t_upload_done,
+                "handover_legs": len(d.segments),
             }
 
         return self._sync_round(

@@ -41,6 +41,17 @@ Rolling horizon: when the predictor was built with ``rolling=True``
 and a satellite set has NO feasible window inside the built horizon,
 the planners extend the horizon chunk-by-chunk and retry instead of
 returning None (up to the predictor's ``max_horizon_s``).
+
+Mid-window station handover (``SimConfig.gs_handover``): a sink upload
+no longer has to sit on one station for its whole transfer —
+``plan_segmented_transfer`` assembles it from capacity-priced legs
+across different stations' windows (Razmi et al. 2109.01348 / FedSpace
+2202.01267 exploit exactly this overlap), and every upload-pricing
+entry point races the segmented plan against the single-window fit.
+Consecutive legs must switch stations, and a segmented plan is adopted
+only when it strictly beats the single-window completion — so
+handover-off, single-GS, and never-splitting runs stay bit-identical
+to the unsegmented scheduler.
 """
 from __future__ import annotations
 
@@ -51,7 +62,14 @@ import numpy as np
 
 from repro.comms.isl import ISLConfig, isl_hop_time
 from repro.comms.ledger import GSResourceLedger
-from repro.comms.link import LinkConfig, downlink_time, uplink_time
+from repro.comms.link import (
+    LinkConfig,
+    downlink_time,
+    model_exchange_time,
+    propagation_time,
+    shannon_rate,
+    uplink_time,
+)
 from repro.core.propagation import ring_hops_matrix
 from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
 from repro.orbits.prediction import (
@@ -66,12 +84,15 @@ from repro.orbits.visibility import VisibilityWindow
 class SinkDecision:
     plane: int
     sink_slot: int
-    window: VisibilityWindow
+    window: VisibilityWindow    # single-window upload, or the first leg's
     t_models_at_sink: float     # all trained models collected (eq. 21)
     t_upload_start: float       # max(window start, models ready)
     t_upload_done: float        # + t_c^D
     t_wait: float               # t*_wait
     candidates_considered: int
+    # mid-window station handover: the upload's legs when it was split
+    # across stations (empty = the classic single-window transfer)
+    segments: Tuple["TransferSegment", ...] = ()
 
 
 def _distance_at(
@@ -161,6 +182,218 @@ def _repriced_fit(
     return t_fit, done
 
 
+# --- segmented (handover) transfer planning -----------------------------------
+@dataclasses.dataclass(frozen=True)
+class TransferSegment:
+    """One leg of a segmented sink upload: ``bits`` payload bits
+    delivered to station ``gs_index`` over ``[t_start, t_end)`` (one
+    RB booked for exactly that span), inside the leg's access window
+    ``[window_start, window_end]``."""
+
+    gs_index: int
+    t_start: float
+    t_end: float
+    bits: float
+    window_start: float
+    window_end: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentedPlan:
+    """A sink upload split across station handovers: consecutive legs
+    always land on *different* stations (resuming the same station's
+    next pass is a retry, not a handover), and the payload bits are
+    conserved across legs."""
+
+    segments: Tuple[TransferSegment, ...]
+
+    @property
+    def t_start(self) -> float:
+        return self.segments[0].t_start
+
+    @property
+    def t_done(self) -> float:
+        return self.segments[-1].t_end
+
+    @property
+    def total_bits(self) -> float:
+        return float(sum(s.bits for s in self.segments))
+
+    @property
+    def stations(self) -> Tuple[int, ...]:
+        return tuple(s.gs_index for s in self.segments)
+
+
+@dataclasses.dataclass(frozen=True)
+class HandoverSpec:
+    """What the segmented planner needs to price a sink upload (one RB
+    of ``link``, eq. 16) when mid-window station handover is enabled
+    (``SimConfig.gs_handover``)."""
+
+    link: LinkConfig
+    payload_bits: float
+    require_next_download: bool = False
+
+
+def plan_segmented_transfer(
+    *,
+    walker: WalkerDelta,
+    predictor: VisibilityPredictor,
+    sat: Satellite,
+    t_ready: float,
+    link: LinkConfig,
+    payload_bits: float,
+    ledger: Optional[GSResourceLedger] = None,
+    require_next_download: bool = False,
+    skip_window=None,
+    max_segments: int = 16,
+) -> Optional[SegmentedPlan]:
+    """Greedy segmented (handover) plan for one sink upload.
+
+    Instead of pinning the transfer to a single station for its whole
+    duration, the upload is assembled from capacity-priced legs across
+    *all* stations' windows: each leg transmits from the earliest free
+    RB stretch still open (ledger residual capacity, window bounds),
+    at the Shannon rate of its own slant range (re-priced per leg, at
+    the leg start), paying the per-leg link overhead (propagation +
+    processing — a handover re-acquires the link).  A leg that cannot
+    finish the payload transmits until its stretch closes and hands
+    the remainder over; consecutive legs must switch stations, so with
+    a single ground station no multi-leg plan exists and the planner
+    degenerates to the single-window transfer (bit-identical
+    handover-off behavior).
+
+    Ledger semantics match the single-window planner: the plan only
+    *reads* residual capacity; the caller books every leg
+    (``reserve_decision``).  ``require_next_download`` demands the
+    final leg's window leave room for the next global-model download
+    after the upload completes (eq. 22's exchange feasibility).
+
+    Rolling horizon: a plan that ran dry inside the built table, or
+    whose legs used a window still clipped at the built boundary (a
+    segment straddling the horizon edge), extends the predictor and
+    replans rather than silently truncating
+    (``VisibilityPredictor.retry_extending``).
+
+    Returns None when no complete plan exists within the horizon (the
+    caller falls back to the single-window transfer).
+    """
+    gss = predictor.ground_stations
+
+    def free_runs(gi: int, lo: float, hi: float):
+        if hi <= lo:
+            return ()
+        if ledger is None:
+            return ((lo, hi),)
+        a, b = ledger.free_runs(gi, lo, hi)
+        return tuple(zip(a, b))
+
+    def attempt():
+        rec = predictor.sat_arrays(sat.plane, sat.slot)
+        if rec is None:
+            return None, True               # nothing built for this sat yet
+        built_end = predictor.built_end if predictor.rolling else np.inf
+        starts, ends, gs_idx = rec["starts"], rec["ends"], rec["gs_index"]
+
+        def candidate(t: float, last_gs: Optional[int], excl: set):
+            """Earliest usable free stretch over all windows after t:
+            (fa, fb, ws, we, gi, j, d, t_over, rate), ties resolved to
+            the faster station then window order."""
+            best, best_key = None, None
+            for j in range(starts.size):
+                ws, we = float(starts[j]), float(ends[j])
+                gi = int(gs_idx[j])
+                if we <= t or j in excl:
+                    continue
+                if best_key is not None and ws > best_key[0]:
+                    break       # start-ordered: strictly-later windows
+                                # cannot improve; same-start windows can
+                                # still win the faster-station tie-break
+                if last_gs is not None and gi == last_gs:
+                    continue                # a handover must switch stations
+                if skip_window is not None and skip_window(
+                    VisibilityWindow(sat.plane, sat.slot, ws, we, gi)
+                ):
+                    continue
+                for fa, fb in free_runs(gi, max(ws, t), we):
+                    d = _distance_at(walker, gss[gi], sat, fa)
+                    t_over = propagation_time(d) + link.processing_delay_s
+                    if fb - fa <= t_over:
+                        continue            # too short to deliver any bits
+                    rate = shannon_rate(link, d, link.rb_bandwidth_hz)
+                    key = (fa, -rate, gi, j)
+                    if best_key is None or key < best_key:
+                        best_key, best = key, (
+                            fa, fb, ws, we, gi, j, d, t_over, rate
+                        )
+                    break                   # later stretches start later
+            return best
+
+        segments = []
+        bits_rem = float(payload_bits)
+        t = float(t_ready)
+        boundary = False
+        while bits_rem > 0 and len(segments) < max_segments:
+            excl: set = set()
+            last_gs = segments[-1].gs_index if segments else None
+            while True:
+                best = candidate(t, last_gs, excl)
+                if best is None:
+                    return None, True       # ran dry: a longer table may help
+                fa, fb, ws, we, gi, j, d, t_over, rate = best
+                t_done = fa + model_exchange_time(
+                    link, bits_rem, d, link.rb_bandwidth_hz
+                )
+                if t_done <= fb:
+                    if (
+                        require_next_download
+                        and t_done + uplink_time(link, payload_bits, d) > we
+                    ):
+                        # the payload would finish here but the window
+                        # cannot also host the next download: the final
+                        # leg must land elsewhere.  A boundary-clipped
+                        # window may only LOOK too short — its true end
+                        # lies in the next chunk, so the rejection must
+                        # force an extension retry (like
+                        # _resolve_first_fits' clipped_reject)
+                        if we >= built_end:
+                            boundary = True
+                        excl.add(j)
+                        continue
+                    segments.append(TransferSegment(gi, fa, t_done, bits_rem,
+                                                    ws, we))
+                    bits_rem = 0.0
+                else:
+                    bits = (fb - fa - t_over) * rate
+                    segments.append(TransferSegment(gi, fa, fb, bits, ws, we))
+                    bits_rem -= bits
+                    t = fb
+                if we >= built_end:
+                    boundary = True         # leg used a boundary-clipped window
+                break
+        if bits_rem > 0:
+            # leg-count cap: more horizon cannot reduce the leg count
+            # unless a clipped window truncated a leg
+            return None, boundary
+        return SegmentedPlan(tuple(segments)), boundary
+
+    return predictor.retry_extending(attempt)
+
+
+def _better_segmented(
+    seg: Optional[SegmentedPlan],
+    base_done: Optional[float],
+) -> bool:
+    """Adopt a segmented plan only when it is a TRUE handover (>= 2
+    legs — single-leg plans are by construction never better than the
+    single-window search) that strictly beats the single-window
+    completion.  Keeps handover-off, single-GS, and contention-free
+    runs bit-identical to the unsegmented planner."""
+    if seg is None or len(seg.segments) < 2:
+        return False
+    return base_done is None or seg.t_done < base_done - 1e-9
+
+
 def _first_fit_transfers(
     *,
     walker: WalkerDelta,
@@ -169,7 +402,8 @@ def _first_fit_transfers(
     t_ready: np.ndarray,
     transfer_time,  # (gs_index, distance) -> (need_s, done_s)
     ledger: Optional[GSResourceLedger] = None,
-) -> List[Optional[Tuple[float, float, int]]]:
+    handover: Optional[HandoverSpec] = None,
+) -> List[Optional[Tuple]]:
     """Per satellite of ``sats`` (arbitrary (plane, slot) pairs — one
     plane's slots, or a whole cluster of planes): (t0, t0 + done_s,
     window_index) of the earliest-completing window after t_ready[i]
@@ -184,6 +418,15 @@ def _first_fit_transfers(
     a pushed transfer is re-priced at its actual start
     (``_repriced_fit`` — the slant range moved with the delay).
 
+    With a ``handover`` spec the single-window fits are additionally
+    raced against segmented (station-handover) plans
+    (``plan_segmented_transfer``) per satellite, and entries become
+    4-tuples ``(t0, t_done, VisibilityWindow, segments)`` — the window
+    of the first leg, and the leg tuple (empty when the single-window
+    transfer won).  A satellite with NO single window long enough may
+    still get a segmented plan — that is the infeasible-upload case
+    handover rescues.
+
     When the predictor is rolling-horizon, the horizon is extended
     chunk-by-chunk and resolution retried whenever (a) NO satellite of
     the set has a feasible window, or (b) a window still *clipped at
@@ -194,14 +437,52 @@ def _first_fit_transfers(
     against a prebuilt table.
     """
     sats = list(sats)
-    while True:
+
+    def attempt():
         out, clipped_reject = _resolve_first_fits(
             walker=walker, predictor=predictor, sats=sats,
             t_ready=t_ready, transfer_time=transfer_time, ledger=ledger,
         )
-        retry = clipped_reject or (sats and all(o is None for o in out))
-        if not retry or not predictor.extend_once():
-            return out
+        return out, clipped_reject or (sats and all(o is None for o in out))
+
+    out = predictor.retry_extending(attempt)
+    if handover is None:
+        return out
+    # segmented planning may grow a rolling horizon; the single-window
+    # fits must then be re-resolved against the SAME (grown) table or
+    # a candidate whose only window lay past the old boundary would
+    # stay None while its segmented plan exists — re-race until the
+    # built horizon is stable so rolling matches a prebuilt table
+    while True:
+        built_before = predictor.built_end
+        segs = [
+            plan_segmented_transfer(
+                walker=walker, predictor=predictor, sat=Satellite(p, s),
+                t_ready=float(t_ready[i]), link=handover.link,
+                payload_bits=handover.payload_bits, ledger=ledger,
+                require_next_download=handover.require_next_download,
+            ) if np.isfinite(t_ready[i]) else None
+            for i, (p, s) in enumerate(sats)
+        ]
+        if predictor.built_end == built_before:
+            break
+        out = predictor.retry_extending(attempt)
+    merged: List[Optional[Tuple]] = []
+    for i, (p, s) in enumerate(sats):
+        sat = Satellite(p, s)
+        base = out[i]
+        seg = segs[i]
+        if _better_segmented(seg, base[1] if base is not None else None):
+            lead = seg.segments[0]
+            w = VisibilityWindow(p, s, lead.window_start, lead.window_end,
+                                 lead.gs_index)
+            merged.append((seg.t_start, seg.t_done, w, seg.segments))
+        elif base is not None:
+            merged.append((base[0], base[1],
+                           predictor.windows_of(sat)[base[2]], ()))
+        else:
+            merged.append(None)
+    return merged
 
 
 def _resolve_first_fits(
@@ -340,7 +621,8 @@ def earliest_transfer(
     transfer_time,  # (gs_index, distance) -> (need_s, done_s)
     skip_window=None,
     ledger: Optional[GSResourceLedger] = None,
-) -> Optional[Tuple[float, float, VisibilityWindow]]:
+    handover: Optional[HandoverSpec] = None,
+) -> Optional[Tuple]:
     """Earliest-completing feasible transfer of one satellite after t:
     (t0, t_done, window), or None.
 
@@ -354,7 +636,55 @@ def earliest_transfer(
     ``_first_fit_transfers``: windows are priced against residual
     station capacity, and an empty result extends a rolling predictor
     and retries.
+
+    With a ``handover`` spec the single-window search is raced against
+    a segmented station-handover plan and the result becomes the
+    4-tuple ``(t0, t_done, window, segments)`` (first-leg window;
+    ``segments`` empty when the single-window transfer won) — same
+    contract as ``_first_fit_transfers``.
     """
+    # re-race after any horizon growth: both searches must price the
+    # same (final) window table, or a stale single-window miss could
+    # hide a transfer the grown table affords (and vice versa)
+    while True:
+        best = _earliest_single_transfer(
+            walker=walker, predictor=predictor, sat=sat, t=t,
+            transfer_time=transfer_time, skip_window=skip_window,
+            ledger=ledger,
+        )
+        if handover is None:
+            return best
+        built_before = predictor.built_end
+        seg = plan_segmented_transfer(
+            walker=walker, predictor=predictor, sat=sat, t_ready=t,
+            link=handover.link, payload_bits=handover.payload_bits,
+            ledger=ledger,
+            require_next_download=handover.require_next_download,
+            skip_window=skip_window,
+        )
+        if predictor.built_end == built_before:
+            break
+    if _better_segmented(seg, best[1] if best is not None else None):
+        lead = seg.segments[0]
+        w = VisibilityWindow(sat.plane, sat.slot, lead.window_start,
+                             lead.window_end, lead.gs_index)
+        return (seg.t_start, seg.t_done, w, seg.segments)
+    if best is None:
+        return None
+    return (best[0], best[1], best[2], ())
+
+
+def _earliest_single_transfer(
+    *,
+    walker: WalkerDelta,
+    predictor: VisibilityPredictor,
+    sat: Satellite,
+    t: float,
+    transfer_time,
+    skip_window=None,
+    ledger: Optional[GSResourceLedger] = None,
+) -> Optional[Tuple[float, float, VisibilityWindow]]:
+    """The unsegmented single-window search of ``earliest_transfer``."""
     gss = predictor.ground_stations
     while True:
         built_end = predictor.built_end if predictor.rolling else np.inf
@@ -391,17 +721,40 @@ def earliest_transfer(
             return best
 
 
+def reserve_transfer(
+    ledger: Optional[GSResourceLedger],
+    gs_index: int,
+    t0: float,
+    t_done: float,
+    segments: Tuple[TransferSegment, ...] = (),
+) -> None:
+    """Book one chosen upload on the ledger: each handover leg on its
+    own station for exactly the leg span (the in-between gaps and the
+    other stations' RBs stay free for other uploads), or the single
+    ``[t0, t_done)`` interval when the transfer was not segmented.
+    THE one booking rule — every strategy and planner routes through
+    it.  No-op without a ledger (the contention-free degenerate
+    case)."""
+    if ledger is None:
+        return
+    if segments:
+        for leg in segments:
+            ledger.reserve(leg.gs_index, leg.t_start, leg.t_end)
+    else:
+        ledger.reserve(gs_index, t0, t_done)
+
+
 def reserve_decision(ledger: Optional[GSResourceLedger], decision) -> None:
     """Book a chosen sink upload (``SinkDecision`` or
     ``ClusterSinkDecision``) on the ledger so later transfer decisions
-    are priced against the residual station capacity.  No-op without a
-    ledger (the contention-free degenerate case)."""
-    if ledger is not None:
-        ledger.reserve(
-            decision.window.gs_index,
-            decision.t_upload_start,
-            decision.t_upload_done,
-        )
+    are priced against the residual station capacity."""
+    reserve_transfer(
+        ledger,
+        decision.window.gs_index,
+        decision.t_upload_start,
+        decision.t_upload_done,
+        getattr(decision, "segments", ()),
+    )
 
 
 def select_sink(
@@ -416,6 +769,7 @@ def select_sink(
     payload_bits: float,
     require_next_download: bool = False,
     ledger: Optional[GSResourceLedger] = None,
+    handover: bool = False,
 ) -> Optional[SinkDecision]:
     """Deterministic sink selection for one orbital plane.
 
@@ -433,6 +787,11 @@ def select_sink(
       ledger: optional shared RB-capacity view; candidate uploads are
         priced against the residual capacity of each window's station.
         The caller books the returned decision (``reserve_decision``).
+      handover: allow mid-window station handover — candidate uploads
+        may be split into segments across different stations' windows
+        (``plan_segmented_transfer``) and eq. 22's completion race runs
+        over the segmented plans.  ``False`` (default) is bit-identical
+        to the single-window scheduler.
 
     Returns:
       The SinkDecision, or None if no feasible window exists in the
@@ -449,6 +808,7 @@ def select_sink(
         relay_latency=ring_hops_matrix(K) * t_hop,
         t_train_done=t_train_done, payload_bits=payload_bits,
         require_next_download=require_next_download, ledger=ledger,
+        handover=handover,
     )
     if cd is None:
         return None
@@ -461,6 +821,7 @@ def select_sink(
         t_upload_done=cd.t_upload_done,
         t_wait=cd.t_wait,
         candidates_considered=cd.candidates_considered,
+        segments=cd.segments,
     )
 
 
@@ -540,13 +901,14 @@ def naive_sink_slot(
     otherwise silently drop out of the round); only when the horizon
     cannot grow further does it return None.
     """
-    while True:
+    def attempt():
         starts, _ = predictor.plane_next_window_starts(plane, t_ready)
         eff = np.maximum(starts, t_ready)
         if np.any(np.isfinite(eff)):
-            return int(np.argmin(eff))
-        if not predictor.extend_once():
-            return None
+            return int(np.argmin(eff)), False
+        return None, True
+
+    return predictor.retry_extending(attempt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -558,12 +920,14 @@ class ClusterSinkDecision:
 
     planes: Tuple[int, ...]
     sink: Satellite
-    window: VisibilityWindow
+    window: VisibilityWindow    # single-window upload, or the first leg's
     t_models_at_sink: float     # all cluster models collected
     t_upload_start: float
     t_upload_done: float
     t_wait: float
     candidates_considered: int
+    # mid-window station handover legs (empty = single-window upload)
+    segments: Tuple[TransferSegment, ...] = ()
 
 
 def select_sink_cluster(
@@ -578,6 +942,7 @@ def select_sink_cluster(
     payload_bits: float,
     require_next_download: bool = False,
     ledger: Optional[GSResourceLedger] = None,
+    handover: bool = False,
 ) -> Optional[ClusterSinkDecision]:
     """Constellation-wide sink selection over an arbitrary satellite set.
 
@@ -590,7 +955,11 @@ def select_sink_cluster(
     ``ledger``, every candidate's upload is priced against the residual
     RB capacity of its window's station, so a saturated station loses
     the eq. (22) completion race to a station with free capacity — this
-    is what load-balances cluster sinks across stations.
+    is what load-balances cluster sinks across stations.  With
+    ``handover`` every candidate may also split its upload into
+    station-handover segments, so the completion race is priced over
+    segmented plans (a candidate with no single long-enough window can
+    still win through a split upload).
     """
     assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
         "predictor was built over a different ground segment"
@@ -599,6 +968,10 @@ def select_sink_cluster(
     t_ready = np.max(
         np.asarray(t_train_done, dtype=np.float64)[None, :] + relay_latency,
         axis=1,
+    )
+    spec = (
+        HandoverSpec(link, payload_bits, require_next_download)
+        if handover else None
     )
 
     def exchange_time(_gi: int, d: float):
@@ -612,6 +985,7 @@ def select_sink_cluster(
         fits = _first_fit_transfers(
             walker=walker, predictor=predictor, sats=sats,
             t_ready=t_ready, transfer_time=exchange_time, ledger=ledger,
+            handover=spec,
         )
 
         best: Optional[ClusterSinkDecision] = None
@@ -619,8 +993,12 @@ def select_sink_cluster(
         for cand in range(len(sats)):
             if fits[cand] is None:
                 continue
-            t0, t_done, j = fits[cand]
-            w = predictor.windows_of(Satellite(*sats[cand]))[j]
+            if spec is not None:
+                t0, t_done, w, segments = fits[cand]
+            else:
+                t0, t_done, j = fits[cand]
+                w = predictor.windows_of(Satellite(*sats[cand]))[j]
+                segments = ()
             considered += 1
             decision = ClusterSinkDecision(
                 planes=planes,
@@ -631,6 +1009,7 @@ def select_sink_cluster(
                 t_upload_done=t_done,
                 t_wait=max(0.0, w.t_start - float(t_ready[cand])),
                 candidates_considered=0,
+                segments=segments,
             )
             # minimize completion; tie -> earliest window start
             if (

@@ -250,6 +250,22 @@ class VisibilityPredictor:
                 return False
         return True
 
+    def retry_extending(self, attempt):
+        """Run ``attempt() -> (result, retry)`` against the currently
+        built table, growing the horizon one chunk and re-running while
+        ``retry`` is truthy — the shared extend-and-retry discipline of
+        every scheduling query near the rolling-horizon edge.  A
+        planner signals ``retry`` whenever its answer depended on a
+        window (or transfer *segment*) clipped at the built boundary —
+        the true window end lies in the next chunk, so neither a
+        rejection nor a boundary-truncated plan can be trusted.
+        Returns the last attempt's result once it is stable or the
+        horizon cannot grow (non-rolling predictors never extend)."""
+        while True:
+            result, retry = attempt()
+            if not retry or not self.extend_once():
+                return result
+
     def plane_window_supply(
         self, t0: float, t1: float
     ) -> np.ndarray:

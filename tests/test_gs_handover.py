@@ -1,0 +1,436 @@
+"""Mid-window station handover: segmented sink uploads.
+
+Load-bearing guarantees of the handover layer:
+  * ``gs_handover=False`` (the default) leaves every scheduler
+    bit-identical to the unsegmented contention-aware planner, and a
+    single-station ground segment makes handover a no-op even when
+    enabled (consecutive legs must switch stations);
+  * segmented plans conserve the payload bits across legs, serialize
+    the legs in time, alternate stations, and stay inside their access
+    windows;
+  * an upload that outlasts EVERY single pass — infeasible for the
+    single-window planner — becomes feasible through handover, at the
+    planner level and end-to-end through the engine;
+  * under scarce RB capacity handover never completes later than the
+    single-window planner (given the same ledger state);
+  * a segment straddling a rolling-horizon boundary extends the window
+    table (segment-aware extend-and-retry) instead of silently
+    truncating the plan;
+  * the ledger's residual station capacity feeds back into dynamic
+    cluster formation (contention-aware formation feedback).
+"""
+import numpy as np
+import pytest
+
+from repro.comms import GSResourceLedger, LinkConfig
+from repro.comms.link import downlink_time
+from repro.core.fedleo import form_clusters, supply_driven_clusters
+from repro.core.scheduling import (
+    HandoverSpec,
+    SinkDecision,
+    TransferSegment,
+    earliest_transfer,
+    plan_segmented_transfer,
+    reserve_decision,
+    select_sink,
+    symmetric_transfer,
+)
+from repro.orbits import (
+    ConstellationConfig,
+    GroundStation,
+    ISLTopology,
+    TopologyConfig,
+    VisibilityPredictor,
+    WalkerDelta,
+)
+from repro.orbits.constellation import Satellite
+from repro.orbits.visibility import VisibilityWindow
+
+PAYLOAD = 3.2e7         # fits inside a single pass on one RB
+BIG_PAYLOAD = 6.0e8     # outlasts EVERY single pass on one RB
+# engine payload: the full-band download still fits a window, but the
+# 1-RB upload outlasts every pass — only a segmented upload completes
+ENGINE_PAYLOAD = 3.5e8
+
+
+@pytest.fixture(scope="module")
+def world():
+    """Two nearby stations -> overlapping/adjacent access windows, the
+    geometry mid-window handover exploits."""
+    cfg = ConstellationConfig(num_planes=2, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    a = GroundStation()
+    b = GroundStation(lat_deg=a.lat_deg + 4.0, lon_deg=a.lon_deg + 3.0,
+                      name="GS-B")
+    gss = [a, b]
+    pred = VisibilityPredictor(walker, gss, horizon_s=24 * 3600.0)
+    return cfg, walker, gss, pred
+
+
+# --- segmented planner ---------------------------------------------------------
+def _check_plan_invariants(plan, payload, link):
+    assert len(plan.segments) >= 1
+    assert abs(plan.total_bits - payload) < 1e-3        # bits conserved
+    for leg in plan.segments:
+        assert leg.bits > 0
+        assert leg.window_start <= leg.t_start < leg.t_end
+        assert leg.t_end <= leg.window_end + 1e-9       # inside the window
+    for a, b in zip(plan.segments, plan.segments[1:]):
+        assert a.t_end <= b.t_start + 1e-9              # serialized
+        assert a.gs_index != b.gs_index                 # true handover
+    assert plan.t_start == plan.segments[0].t_start
+    assert plan.t_done == plan.segments[-1].t_end
+
+
+def test_oversized_upload_rescued_by_handover(world):
+    """A payload too large for ANY single pass on one RB is infeasible
+    for the single-window planner but completes as a segmented plan."""
+    cfg, walker, gss, pred = world
+    link = LinkConfig()
+    sat = Satellite(0, 0)
+    tt = symmetric_transfer(downlink_time, link, BIG_PAYLOAD)
+    base = earliest_transfer(walker=walker, predictor=pred, sat=sat,
+                             t=0.0, transfer_time=tt)
+    assert base is None                                 # the old failure mode
+    plan = plan_segmented_transfer(
+        walker=walker, predictor=pred, sat=sat, t_ready=0.0,
+        link=link, payload_bits=BIG_PAYLOAD,
+    )
+    assert plan is not None
+    assert len(plan.segments) >= 2
+    _check_plan_invariants(plan, BIG_PAYLOAD, link)
+
+    # the handover-aware entry point surfaces the same plan
+    hit = earliest_transfer(walker=walker, predictor=pred, sat=sat,
+                            t=0.0, transfer_time=tt,
+                            handover=HandoverSpec(link, BIG_PAYLOAD))
+    assert hit is not None
+    t0, t_done, w, segments = hit
+    assert segments == plan.segments
+    assert (t0, t_done) == (plan.t_start, plan.t_done)
+    assert (w.t_start, w.t_end, w.gs_index) == (
+        segments[0].window_start, segments[0].window_end,
+        segments[0].gs_index,
+    )
+
+
+def test_small_payload_handover_identical(world):
+    """When every transfer fits a single window the segmented race is
+    never adopted: handover-on == handover-off, leg tuple empty."""
+    cfg, walker, gss, pred = world
+    link = LinkConfig()
+    tt = symmetric_transfer(downlink_time, link, PAYLOAD)
+    for plane in range(cfg.num_planes):
+        for slot in range(cfg.sats_per_plane):
+            sat = Satellite(plane, slot)
+            base = earliest_transfer(walker=walker, predictor=pred,
+                                     sat=sat, t=3600.0, transfer_time=tt)
+            ho = earliest_transfer(walker=walker, predictor=pred,
+                                   sat=sat, t=3600.0, transfer_time=tt,
+                                   handover=HandoverSpec(link, PAYLOAD))
+            assert base is not None
+            assert ho == (base[0], base[1], base[2], ())
+
+
+def test_handover_never_later_under_scarcity(world):
+    """Same pre-seeded 1-RB ledger state: the handover scheduler's
+    completion is never later than the single-window scheduler's."""
+    from repro.comms import ISLConfig
+
+    cfg, walker, gss, pred = world
+    link, isl = LinkConfig(), ISLConfig()
+    K = cfg.sats_per_plane
+    t_done = [3600.0 + 60.0 * s for s in range(K)]
+
+    def seeded_ledger():
+        led = GSResourceLedger(len(gss), 1)
+        led.reserve(0, 0.0, 30_000.0)       # station 0 saturated early on
+        return led
+
+    for plane in range(cfg.num_planes):
+        a = select_sink(walker=walker, gs=gss, predictor=pred, link=link,
+                        isl=isl, plane=plane, t_train_done=t_done,
+                        payload_bits=PAYLOAD, ledger=seeded_ledger())
+        b = select_sink(walker=walker, gs=gss, predictor=pred, link=link,
+                        isl=isl, plane=plane, t_train_done=t_done,
+                        payload_bits=PAYLOAD, ledger=seeded_ledger(),
+                        handover=True)
+        assert a is not None and b is not None
+        assert b.t_upload_done <= a.t_upload_done + 1e-9
+
+
+def test_reserve_decision_books_each_leg():
+    """A segmented decision books one reservation per leg on the leg's
+    own station; an unsegmented one books the single upload interval."""
+    w = VisibilityWindow(0, 0, 0.0, 100.0, 0)
+    segs = (
+        TransferSegment(0, 10.0, 50.0, 1e6, 0.0, 100.0),
+        TransferSegment(1, 60.0, 80.0, 5e5, 40.0, 150.0),
+    )
+    led = GSResourceLedger(2, 1)
+    reserve_decision(led, SinkDecision(
+        plane=0, sink_slot=0, window=w, t_models_at_sink=0.0,
+        t_upload_start=10.0, t_upload_done=80.0, t_wait=0.0,
+        candidates_considered=1, segments=segs,
+    ))
+    s0, e0 = led.reservations(0)
+    s1, e1 = led.reservations(1)
+    assert (list(s0), list(e0)) == ([10.0], [50.0])
+    assert (list(s1), list(e1)) == ([60.0], [80.0])
+
+    led2 = GSResourceLedger(2, 1)
+    reserve_decision(led2, SinkDecision(
+        plane=0, sink_slot=0, window=w, t_models_at_sink=0.0,
+        t_upload_start=10.0, t_upload_done=80.0, t_wait=0.0,
+        candidates_considered=1,
+    ))
+    s0, e0 = led2.reservations(0)
+    assert (list(s0), list(e0)) == ([10.0], [80.0])
+    assert led2.num_reserved() == 1
+
+
+def test_ledger_free_runs_complement():
+    led = GSResourceLedger(1, 1)
+    led.reserve(0, 10.0, 20.0)
+    led.reserve(0, 30.0, 40.0)
+    s, e = led.free_runs(0, 0.0, 50.0)
+    assert (list(s), list(e)) == ([0.0, 20.0, 40.0], [10.0, 30.0, 50.0])
+    s, e = led.free_runs(0, 12.0, 18.0)
+    assert s.size == 0                      # fully saturated stretch
+    # unlimited capacity: the query range comes back whole
+    led_u = GSResourceLedger(1, None)
+    led_u.reserve(0, 0.0, 1e9)
+    s, e = led_u.free_runs(0, 5.0, 25.0)
+    assert (list(s), list(e)) == ([5.0], [25.0])
+    s, e = led.free_runs(0, 7.0, 7.0)
+    assert s.size == 0                      # empty range
+
+
+# --- rolling horizon: segment-aware extend-and-retry ---------------------------
+def test_segment_straddling_boundary_triggers_extension(world):
+    """A rolling table whose built boundary cuts straight through the
+    plan's first window must extend (ensure more horizon) and produce
+    the exact plan a prebuilt table yields — never a truncated one."""
+    cfg, walker, gss, pred = world
+    link = LinkConfig()
+    sat = Satellite(0, 0)
+    plan_pre = plan_segmented_transfer(
+        walker=walker, predictor=pred, sat=sat, t_ready=0.0,
+        link=link, payload_bits=BIG_PAYLOAD,
+    )
+    assert plan_pre is not None and len(plan_pre.segments) >= 2
+    lead = plan_pre.segments[0]
+    # boundary inside the first leg's window, snapped to the scan grid
+    b = 10.0 * round((lead.window_start + lead.window_end) / 2.0 / 10.0)
+    assert lead.window_start < b < lead.window_end
+    roll = VisibilityPredictor(walker, gss, horizon_s=b, rolling=True,
+                               max_horizon_s=24 * 3600.0)
+    assert roll.built_end == b
+    plan_roll = plan_segmented_transfer(
+        walker=walker, predictor=roll, sat=sat, t_ready=0.0,
+        link=link, payload_bits=BIG_PAYLOAD,
+    )
+    assert roll.built_end > b               # the boundary forced extension
+    assert plan_roll is not None
+    assert plan_roll.segments == plan_pre.segments
+
+    # the handover-aware entry point must agree with the prebuilt
+    # table too (single-window and segmented races on the same table)
+    roll2 = VisibilityPredictor(walker, gss, horizon_s=b, rolling=True,
+                                max_horizon_s=24 * 3600.0)
+    tt = symmetric_transfer(downlink_time, link, BIG_PAYLOAD)
+    spec = HandoverSpec(link, BIG_PAYLOAD)
+    hit_roll = earliest_transfer(walker=walker, predictor=roll2, sat=sat,
+                                 t=0.0, transfer_time=tt, handover=spec)
+    hit_pre = earliest_transfer(walker=walker, predictor=pred, sat=sat,
+                                t=0.0, transfer_time=tt, handover=spec)
+    assert hit_roll == hit_pre
+
+
+# --- contention-aware formation feedback ---------------------------------------
+def test_residual_fraction_discounts_booked_capacity():
+    led = GSResourceLedger(2, 1)
+    assert list(led.residual_fraction(0.0, 100.0)) == [1.0, 1.0]
+    led.reserve(0, 0.0, 100.0)
+    assert list(led.residual_fraction(0.0, 100.0)) == [0.0, 1.0]
+    assert list(led.residual_fraction(0.0, 200.0)) == [0.5, 1.0]
+    led4 = GSResourceLedger(1, 4)
+    led4.reserve(0, 0.0, 100.0)
+    assert list(led4.residual_fraction(0.0, 100.0)) == [0.75]
+    led_u = GSResourceLedger(1, None)
+    led_u.reserve(0, 0.0, 1e9)
+    assert list(led_u.residual_fraction(0.0, 100.0)) == [1.0]
+
+
+def test_formation_feedback_matches_discounted_supply_oracle():
+    """supply_driven_clusters with a ledger == form_clusters over the
+    residual-discounted supply (exact oracle), and without a ledger it
+    stays the plain window-supply grouping."""
+    cfg = ConstellationConfig(num_planes=6, sats_per_plane=4)
+    walker = WalkerDelta(cfg)
+    from repro.configs.constellations import GROUND_STATION_PRESETS
+
+    gss = [GroundStation(), GROUND_STATION_PRESETS["punta-arenas"]]
+    pred = VisibilityPredictor(walker, gss, horizon_s=12 * 3600.0)
+    topo = ISLTopology(cfg, TopologyConfig(kind="grid"))
+    lookahead = topo.constellation.period_s
+
+    led = GSResourceLedger(len(gss), 1)
+    led.reserve(0, 0.0, lookahead)          # station 0 saturated all round
+
+    supply = pred.plane_window_supply(0.0, lookahead)
+    residual = led.residual_fraction(0.0, lookahead)
+    oracle = form_clusters(
+        (supply * residual[None, :]).sum(axis=1), 3,
+        seam_cut=topo.config.seam_cut, adjacency=topo.plane_adjacency(),
+    )
+    got = supply_driven_clusters(pred, topo, 3, 0.0, ledger=led)
+    assert got == oracle
+
+    plain = form_clusters(
+        supply.sum(axis=1), 3,
+        seam_cut=topo.config.seam_cut, adjacency=topo.plane_adjacency(),
+    )
+    assert supply_driven_clusters(pred, topo, 3, 0.0) == plain
+    assert supply_driven_clusters(
+        pred, topo, 3, 0.0, ledger=GSResourceLedger(len(gss), 1)
+    ) == plain                              # empty ledger: degenerate
+
+
+# --- end-to-end engine equivalence and rescue ----------------------------------
+def _small_task(num_planes, sats_per_plane, payload_bits=None):
+    from repro.core import FederatedTask, TrainHyperparams
+    from repro.data import make_classification_dataset, partition_iid
+    from repro.models.cnn import apply_cnn, init_cnn
+    from repro.optim import get_optimizer
+
+    n = num_planes * sats_per_plane * 4
+    ds = make_classification_dataset("mnist-like", num_samples=n, seed=0)
+    test = make_classification_dataset("mnist-like", num_samples=64, seed=7)
+    clients = partition_iid(ds, num_planes, sats_per_plane)
+    hp = TrainHyperparams(local_epochs=100, learning_rate=0.05,
+                          batch_size=16)
+    return FederatedTask(
+        init_fn=lambda r: init_cnn(r, (28, 28, 1), 10, widths=(4,),
+                                   hidden=16),
+        apply_fn=apply_cnn, clients=clients, test_set=test,
+        optimizer=get_optimizer("sgd", 0.05), hp=hp, sim_epochs=1,
+        payload_bits_override=payload_bits,
+    )
+
+
+def _histories_equal(ra, rb):
+    assert len(ra.history) == len(rb.history)
+    for ha, hb in zip(ra.history, rb.history):
+        assert ha.t_hours == hb.t_hours
+        assert ha.events == hb.events
+        assert ha.metrics == hb.metrics
+
+
+def test_single_gs_handover_end_to_end_identical():
+    """With ONE ground station no multi-leg plan exists, so enabling
+    handover must not perturb a single decision, time, or metric —
+    FedLEO, FedLEOGrid, and a star baseline, under 1-RB contention."""
+    import dataclasses
+
+    from repro.core import FedLEO, FedLEOGrid, SimConfig
+    from repro.core.baselines import FedSatSched
+
+    cfg = ConstellationConfig(num_planes=2, sats_per_plane=4)
+    base = SimConfig(constellation=cfg, horizon_hours=48.0,
+                     gs_rb_capacity=1)
+    ho = dataclasses.replace(base, gs_handover=True)
+    assert SimConfig().gs_handover is False             # default off
+
+    _histories_equal(FedLEO(_small_task(2, 4), base).run(max_rounds=2),
+                     FedLEO(_small_task(2, 4), ho).run(max_rounds=2))
+
+    grid = dataclasses.replace(base, topology=TopologyConfig(kind="grid"))
+    grid_ho = dataclasses.replace(grid, gs_handover=True)
+    _histories_equal(
+        FedLEOGrid(_small_task(2, 4), grid, cluster_planes=2)
+        .run(max_rounds=2),
+        FedLEOGrid(_small_task(2, 4), grid_ho, cluster_planes=2)
+        .run(max_rounds=2),
+    )
+
+    _histories_equal(FedSatSched(_small_task(2, 4), base).run(max_rounds=1),
+                     FedSatSched(_small_task(2, 4), ho).run(max_rounds=1))
+
+
+def test_multi_gs_small_payload_handover_identical_end_to_end():
+    """Two stations, contention on, but every upload fits a single
+    window: the segmented race must never be adopted, so handover-on
+    is bit-identical to handover-off through the engine."""
+    import dataclasses
+
+    from repro.core import FedLEO, SimConfig
+
+    cfg = ConstellationConfig(num_planes=2, sats_per_plane=4)
+    a = GroundStation()
+    b = GroundStation(lat_deg=a.lat_deg + 4.0, lon_deg=a.lon_deg + 3.0,
+                      name="GS-B")
+    base = SimConfig(constellation=cfg, horizon_hours=48.0,
+                     ground_stations=(a, b), gs_rb_capacity=1)
+    ho = dataclasses.replace(base, gs_handover=True)
+    _histories_equal(FedLEO(_small_task(2, 4), base).run(max_rounds=2),
+                     FedLEO(_small_task(2, 4), ho).run(max_rounds=2))
+
+
+def test_grid_rolling_handover_matches_prebuilt():
+    """FedLEOGrid with rolling horizon + 1-RB contention + handover:
+    rounds complete through segmented uploads and the rolling run is
+    bit-identical to the prebuilt-table run."""
+    import dataclasses
+
+    from repro.core import FedLEOGrid, SimConfig
+
+    cfg = ConstellationConfig(num_planes=2, sats_per_plane=4)
+    a = GroundStation()
+    b = GroundStation(lat_deg=a.lat_deg + 4.0, lon_deg=a.lon_deg + 3.0,
+                      name="GS-B")
+    sim = SimConfig(constellation=cfg, horizon_hours=48.0,
+                    ground_stations=(a, b),
+                    topology=TopologyConfig(kind="grid"),
+                    gs_rb_capacity=1, rolling_horizon_hours=6.0,
+                    gs_handover=True)
+    rolling = FedLEOGrid(_small_task(2, 4, payload_bits=ENGINE_PAYLOAD),
+                         sim, cluster_planes=2).run(max_rounds=2)
+    assert len(rolling.history) == 2
+    legs = [c["handover_legs"]
+            for h in rolling.history for c in h.events["clusters"]]
+    assert max(legs) >= 2                   # uploads really segmented
+    prebuilt = FedLEOGrid(
+        _small_task(2, 4, payload_bits=ENGINE_PAYLOAD),
+        dataclasses.replace(sim, rolling_horizon_hours=None),
+        cluster_planes=2,
+    ).run(max_rounds=2)
+    _histories_equal(rolling, prebuilt)
+
+
+def test_engine_handover_rescues_oversized_payload():
+    """End-to-end: a model too large for any single pass stalls the
+    handover-off engine on round 1 but completes through segmented
+    uploads when gs_handover is on (legs recorded in round events)."""
+    import dataclasses
+
+    from repro.core import FedLEO, SimConfig
+
+    cfg = ConstellationConfig(num_planes=2, sats_per_plane=4)
+    a = GroundStation()
+    b = GroundStation(lat_deg=a.lat_deg + 4.0, lon_deg=a.lon_deg + 3.0,
+                      name="GS-B")
+    base = SimConfig(constellation=cfg, horizon_hours=48.0,
+                     ground_stations=(a, b), gs_rb_capacity=1)
+    ho = dataclasses.replace(base, gs_handover=True)
+
+    stalled = FedLEO(_small_task(2, 4, payload_bits=ENGINE_PAYLOAD),
+                     base).run(max_rounds=1)
+    assert len(stalled.history) == 0        # no feasible single-window upload
+
+    res = FedLEO(_small_task(2, 4, payload_bits=ENGINE_PAYLOAD),
+                 ho).run(max_rounds=1)
+    assert len(res.history) == 1
+    legs = [p["handover_legs"] for p in res.history[0].events["planes"]]
+    assert max(legs) >= 2                   # at least one upload segmented
+    assert np.isfinite(res.final_accuracy)

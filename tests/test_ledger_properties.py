@@ -1,0 +1,204 @@
+"""Property-based invariants of the GS resource ledger and the
+segmented (handover) transfer planner.
+
+Uses hypothesis through the conftest shim: when hypothesis is not
+installed the ``@given`` tests auto-skip (collection never fails); the
+CI property job installs hypothesis so they actually execute there.
+The property bodies live in plain ``_check_*`` helpers, exercised by a
+seeded random sweep as well (``test_invariants_random_sweep``) so the
+invariants stay covered even where hypothesis is absent.
+
+Invariants:
+  * occupancy never exceeds capacity after ANY sequence of
+    ``earliest_fit``-placed reservations;
+  * ``earliest_fit`` is monotone in its lower bound, never answers
+    before it, and its answer always has a free RB for the whole
+    duration;
+  * unlimited capacity makes the ledger a no-op (``earliest_fit`` is
+    the identity on the lower bound) no matter what was reserved;
+  * segmented plans conserve the payload bits exactly, serialize their
+    legs, alternate stations, stay inside their windows, and never
+    transmit through a saturated stretch.
+"""
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.comms import GSResourceLedger, LinkConfig
+from repro.core.scheduling import plan_segmented_transfer
+from repro.orbits import (
+    ConstellationConfig,
+    GroundStation,
+    VisibilityPredictor,
+    WalkerDelta,
+)
+from repro.orbits.constellation import Satellite
+
+_NUM_STATIONS = 3
+_HI = 1e9
+
+_times = st.floats(min_value=0.0, max_value=1e5,
+                   allow_nan=False, allow_infinity=False)
+_durations = st.floats(min_value=1e-3, max_value=1e4,
+                       allow_nan=False, allow_infinity=False)
+_requests = st.lists(
+    st.tuples(_times, _durations, st.integers(0, _NUM_STATIONS - 1)),
+    min_size=1, max_size=30,
+)
+_caps = st.integers(min_value=1, max_value=4)
+
+_WORLD = None
+
+
+def _world():
+    """Small two-station world, built once (module-lazy, no fixture —
+    the hypothesis shim replaces test signatures)."""
+    global _WORLD
+    if _WORLD is None:
+        cfg = ConstellationConfig(num_planes=2, sats_per_plane=4)
+        walker = WalkerDelta(cfg)
+        a = GroundStation()
+        b = GroundStation(lat_deg=a.lat_deg + 4.0, lon_deg=a.lon_deg + 3.0,
+                          name="GS-B")
+        pred = VisibilityPredictor(walker, [a, b], horizon_s=24 * 3600.0)
+        _WORLD = (cfg, walker, [a, b], pred)
+    return _WORLD
+
+
+# --- property bodies (plain helpers) ------------------------------------------
+def _check_capacity_respected(cap, reqs):
+    """Placing every request at its earliest_fit start never drives any
+    station's occupancy above its capacity, at any event time."""
+    led = GSResourceLedger(_NUM_STATIONS, cap)
+    for lo, dur, gi in reqs:
+        t0 = led.earliest_fit(gi, lo, _HI, dur)
+        assert t0 is not None and t0 >= lo
+        led.reserve(gi, t0, t0 + dur)
+    for gi in range(_NUM_STATIONS):
+        s, e = led.reservations(gi)
+        if s.size == 0:
+            continue
+        probes = np.concatenate([s, (s + e) / 2.0, np.maximum(s, e - 1e-9)])
+        for t in probes:
+            assert led.occupancy(gi, float(t)) <= cap
+
+
+def _check_earliest_fit_monotone(cap, reqs, lo1, lo2, dur):
+    """earliest_fit answers at or after the bound, moves monotonically
+    with it, and its answer has a free RB over the whole duration."""
+    led = GSResourceLedger(1, cap)
+    for lo, d, _gi in reqs:
+        led.reserve(0, lo, lo + d)          # arbitrary booking history
+    lo_a, lo_b = min(lo1, lo2), max(lo1, lo2)
+    f_a = led.earliest_fit(0, lo_a, _HI, dur)
+    f_b = led.earliest_fit(0, lo_b, _HI, dur)
+    assert f_a is not None and f_b is not None
+    assert f_a >= lo_a and f_b >= lo_b
+    assert f_a <= f_b                       # monotone in the lower bound
+    a, b = led.busy_intervals(0)
+    for f in (f_a, f_b):
+        # no saturated stretch may overlap the placed transfer
+        assert not np.any((a < f + dur) & (b > f))
+
+
+def _check_unlimited_identity(reqs, lo, dur):
+    """capacity=None: whatever was reserved, earliest_fit is `lo`."""
+    led = GSResourceLedger(_NUM_STATIONS, None)
+    for t0, d, gi in reqs:
+        led.reserve(gi, t0, t0 + d)
+    for gi in range(_NUM_STATIONS):
+        assert led.earliest_fit(gi, lo, _HI, dur) == lo
+        assert led.free_runs(gi, lo, lo + dur)[0].size == 1
+
+
+def _check_segmented_plan(payload, t_ready, plane, slot, bookings):
+    """Segmented plans conserve bits, serialize legs, alternate
+    stations, stay inside windows, and avoid saturated stretches."""
+    cfg, walker, gss, pred = _world()
+    led = GSResourceLedger(2, 1)
+    for lo, dur in bookings:
+        led.reserve(0, lo, lo + dur)        # pre-load station 0
+    plan = plan_segmented_transfer(
+        walker=walker, predictor=pred, sat=Satellite(plane, slot),
+        t_ready=t_ready, link=LinkConfig(), payload_bits=payload,
+        ledger=led,
+    )
+    if plan is None:                        # infeasible inside the horizon
+        return
+    assert abs(plan.total_bits - payload) < max(1e-6 * payload, 1e-3)
+    assert plan.t_start >= t_ready
+    for leg in plan.segments:
+        assert leg.bits > 0
+        assert leg.window_start <= leg.t_start < leg.t_end
+        assert leg.t_end <= leg.window_end + 1e-9
+        a, b = led.busy_intervals(leg.gs_index)
+        assert not np.any((a < leg.t_end) & (b > leg.t_start))
+    for prev, nxt in zip(plan.segments, plan.segments[1:]):
+        assert prev.t_end <= nxt.t_start + 1e-9
+        assert prev.gs_index != nxt.gs_index
+
+
+# --- hypothesis entry points --------------------------------------------------
+@given(cap=_caps, reqs=_requests)
+@settings(max_examples=25, deadline=None)
+def test_occupancy_never_exceeds_capacity(cap, reqs):
+    _check_capacity_respected(cap, reqs)
+
+
+@given(cap=_caps, reqs=_requests, lo1=_times, lo2=_times, dur=_durations)
+@settings(max_examples=25, deadline=None)
+def test_earliest_fit_monotone_and_feasible(cap, reqs, lo1, lo2, dur):
+    _check_earliest_fit_monotone(cap, reqs, lo1, lo2, dur)
+
+
+@given(reqs=_requests, lo=_times, dur=_durations)
+@settings(max_examples=25, deadline=None)
+def test_unlimited_capacity_is_identity(reqs, lo, dur):
+    _check_unlimited_identity(reqs, lo, dur)
+
+
+@given(
+    payload=st.floats(min_value=1e6, max_value=8e8,
+                      allow_nan=False, allow_infinity=False),
+    t_ready=st.floats(min_value=0.0, max_value=12 * 3600.0,
+                      allow_nan=False, allow_infinity=False),
+    plane=st.integers(0, 1),
+    slot=st.integers(0, 3),
+    bookings=st.lists(st.tuples(_times, _durations), max_size=5),
+)
+@settings(max_examples=15, deadline=None)
+def test_segmented_plans_conserve_bits(payload, t_ready, plane, slot,
+                                       bookings):
+    _check_segmented_plan(payload, t_ready, plane, slot, bookings)
+
+
+# --- seeded sweep over the same properties (runs without hypothesis) ----------
+def test_invariants_random_sweep():
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        n = int(rng.integers(1, 30))
+        reqs = [
+            (float(rng.uniform(0, 1e5)), float(rng.uniform(1e-3, 1e4)),
+             int(rng.integers(0, _NUM_STATIONS)))
+            for _ in range(n)
+        ]
+        cap = int(rng.integers(1, 5))
+        _check_capacity_respected(cap, reqs)
+        _check_earliest_fit_monotone(
+            cap, reqs, float(rng.uniform(0, 1e5)),
+            float(rng.uniform(0, 1e5)), float(rng.uniform(1e-3, 1e4)),
+        )
+        _check_unlimited_identity(
+            reqs, float(rng.uniform(0, 1e5)), float(rng.uniform(1e-3, 1e4)),
+        )
+    for _ in range(8):
+        bookings = [
+            (float(rng.uniform(0, 8e4)), float(rng.uniform(10.0, 5e3)))
+            for _ in range(int(rng.integers(0, 5)))
+        ]
+        _check_segmented_plan(
+            float(rng.uniform(1e6, 8e8)),
+            float(rng.uniform(0, 12 * 3600.0)),
+            int(rng.integers(0, 2)), int(rng.integers(0, 4)), bookings,
+        )
