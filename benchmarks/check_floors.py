@@ -1,0 +1,114 @@
+"""CI floor check over the repo-root BENCH trajectory.
+
+Parses ``BENCH_topology.json`` (append-only, one JSON record per line,
+mixing records committed by past PRs with lines appended by the run
+just finished — unparseable/truncated lines are skipped, never fatal)
+and asserts the ROADMAP's ``gs_contention`` floors on the LATEST
+record per ground-station set:
+
+  * grid round <= ring round under RB contention,
+  * handover round <= no-handover round at 1-RB scarcity,
+  * async re-admission round <= book-at-schedule baseline (and its
+    mean no worse), when the record carries the async arms.
+
+Run after the contention smoke so "latest" reflects the code under
+test:  PYTHONPATH=src python -m benchmarks.check_floors
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+from benchmarks.common import BENCH_TRAJECTORY
+
+
+def load_latest_contention(path: str = BENCH_TRAJECTORY) -> List[Dict]:
+    """Latest ``gs_contention`` record per ground-station set, scanning
+    the whole append-only trajectory and skipping anything unparseable
+    (the file deliberately mixes committed history with fresh lines
+    and may carry a truncated tail)."""
+    latest: Dict[tuple, Dict] = {}
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        return []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue                    # quarantined/corrupt line
+        if not isinstance(rec, dict) or rec.get("bench") != "gs_contention":
+            continue
+        key = tuple(rec.get("ground_stations") or ())
+        latest[key] = rec               # later lines win: append-only
+    return [latest[k] for k in sorted(latest)]
+
+
+def check(records: List[Dict]) -> List[str]:
+    failures = []
+    if not records:
+        return ["no gs_contention records found in the BENCH trajectory"]
+
+    def le(a, b) -> bool:
+        # a floor holds vacuously when either side was not measured
+        return a is None or b is None or a <= b
+
+    for r in records:
+        tag = f"{len(r.get('ground_stations', []))} GS"
+        if r.get("grid_contended_s") is None:
+            failures.append(f"{tag}: grid contended round did not complete")
+        if not le(r.get("grid_contended_s"), r.get("ring_contended_s")):
+            failures.append(
+                f"{tag}: grid {r['grid_contended_s']}s > "
+                f"ring {r['ring_contended_s']}s under RB contention"
+            )
+        for kind in ("ring", "grid"):
+            if not le(r.get(f"{kind}_handover_s"), r.get(f"{kind}_scarce_s")):
+                failures.append(
+                    f"{tag}: {kind} handover {r[f'{kind}_handover_s']}s > "
+                    f"no-handover {r[f'{kind}_scarce_s']}s at 1-RB scarcity"
+                )
+        # async arms exist only from PR 5 on — older records skip them
+        if "async_readmit_s" in r:
+            if not le(r.get("async_readmit_s"), r.get("async_scarce_s")):
+                failures.append(
+                    f"{tag}: async re-admission {r['async_readmit_s']}s > "
+                    f"baseline {r['async_scarce_s']}s"
+                )
+            if not le(r.get("async_readmit_mean_s"),
+                      r.get("async_scarce_mean_s")):
+                failures.append(
+                    f"{tag}: async re-admission mean "
+                    f"{r['async_readmit_mean_s']}s > baseline mean "
+                    f"{r['async_scarce_mean_s']}s"
+                )
+    return failures
+
+
+def main() -> None:
+    records = load_latest_contention()
+    failures = check(records)
+    for r in records:
+        print(
+            f"# checked {len(r.get('ground_stations', []))} GS: "
+            f"grid {r.get('grid_contended_s')}s vs ring "
+            f"{r.get('ring_contended_s')}s; handover "
+            f"{r.get('ring_handover_s')}/{r.get('grid_handover_s')}s vs "
+            f"scarce {r.get('ring_scarce_s')}/{r.get('grid_scarce_s')}s; "
+            f"async {r.get('async_readmit_s')}s vs "
+            f"{r.get('async_scarce_s')}s"
+        )
+    if failures:
+        for msg in failures:
+            print(f"FLOOR VIOLATION: {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all gs_contention floors hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -95,60 +95,78 @@ def timed(fn: Callable) -> tuple:
     return out, (time.time() - t0) * 1e6
 
 
+def make_comms_env(sim, *, predictor=None, walker=None, capacity=None,
+                   handover: bool = False):
+    """A benchmark-arm ``CommsEnvironment``: share one (expensive)
+    predictor across arms (pass the base arm's ``predictor``/
+    ``walker``), give each arm its own fresh ledger and handover
+    policy.  ``capacity=None`` is the contention-free arm.  Session
+    construction is ``CommsEnvironment.from_sim`` — the one recipe —
+    so benchmark arms and strategies always agree on the predictor."""
+    from repro.comms.environment import CommsEnvironment
+    from repro.comms.ledger import GSResourceLedger
+
+    if predictor is None:
+        env = CommsEnvironment.from_sim(sim, walker=walker)
+    else:
+        env = CommsEnvironment(
+            walker=walker, predictor=predictor, link=sim.link,
+            isl=sim.isl, gs=list(sim.all_ground_stations),
+        )
+    ledger = (
+        GSResourceLedger(len(env.ground_stations), capacity)
+        if capacity is not None else None
+    )
+    return env.derive(ledger=ledger, handover=handover)
+
+
 def price_ring_round(
-    walker, gs_list, predictor, sim, *,
+    env, *,
     payload_bits: float = PAYLOAD_BITS,
     train_time_s: float = 600.0,
-    ledger=None,
-    handover: bool = False,
     t: float = 0.0,
 ):
     """Full FedLEO ring round time via the pure plane planners (no JAX
     training): every plane needs its own GS download and sink upload.
-    With a ``ledger`` each chosen upload is booked so later planes are
-    priced against residual station capacity (``ledger=None`` is the
-    pre-ledger contention-free pricing); ``handover=True`` lets each
+    Planning and booking route through the ``env`` session: with a
+    ledger each chosen upload is committed so later planes are priced
+    against residual station capacity (no ledger = the pre-ledger
+    contention-free pricing); the session's handover policy lets each
     upload split into station-handover segments.  None if any plane
     stalls."""
     import numpy as np
 
     from repro.core.fedleo import plan_plane_round
-    from repro.core.scheduling import reserve_decision
 
-    K = sim.constellation.sats_per_plane
+    K = env.walker.config.sats_per_plane
     train = np.full(K, train_time_s)
     done = []
-    for plane in range(sim.constellation.num_planes):
+    for plane in range(env.walker.config.num_planes):
         plan = plan_plane_round(
-            walker=walker, gs_list=gs_list, predictor=predictor,
-            link=sim.link, isl=sim.isl, plane=plane, t=t,
-            payload_bits=payload_bits, train_times=train, ledger=ledger,
-            handover=handover,
+            env=env, isl=env.isl, plane=plane, t=t,
+            payload_bits=payload_bits, train_times=train,
         )
         if plan is None:
             return None            # a plane stalls the whole round
-        reserve_decision(ledger, plan.decision)
+        env.commit(plan.decision)
         done.append(plan.decision.t_upload_done)
     return max(done)
 
 
 def price_grid_round(
-    walker, gs_list, predictor, sim, routing, *,
+    env, routing, *,
     cluster_planes: int,
     payload_bits: float = PAYLOAD_BITS,
     train_time_s: float = 600.0,
-    ledger=None,
     dynamic: bool = False,
-    handover: bool = False,
     t: float = 0.0,
 ):
     """Full FedLEOGrid round time via the pure cluster planners: one
     download + one sink upload per cluster.  ``dynamic=True`` re-forms
     clusters from predicted window supply (the strategy default) —
-    discounted by the ledger's residual station capacity when one is
-    given (formation feedback); ``False`` keeps the static
-    adjacent-plane grouping.  Ledger and ``handover`` semantics as in
-    ``price_ring_round``."""
+    discounted by the session ledger's residual station capacity
+    (formation feedback); ``False`` keeps the static adjacent-plane
+    grouping.  Session semantics as in ``price_ring_round``."""
     import numpy as np
 
     from repro.core.fedleo import (
@@ -156,13 +174,13 @@ def price_grid_round(
         plan_cluster_round,
         supply_driven_clusters,
     )
-    from repro.core.scheduling import reserve_decision
 
-    K = sim.constellation.sats_per_plane
-    L = sim.constellation.num_planes
+    K = env.walker.config.sats_per_plane
+    L = env.walker.config.num_planes
     if dynamic:
         clusters = supply_driven_clusters(
-            predictor, routing.topology, cluster_planes, t, ledger=ledger
+            env.predictor, routing.topology, cluster_planes, t,
+            ledger=env.ledger,
         )
     else:
         clusters = make_clusters(L, cluster_planes)
@@ -170,13 +188,90 @@ def price_grid_round(
     for planes in clusters:
         train = np.full(len(planes) * K, train_time_s)
         plan = plan_cluster_round(
-            walker=walker, gs_list=gs_list, predictor=predictor,
-            link=sim.link, routing=routing, planes=planes, t=t,
-            payload_bits=payload_bits, train_times=train, ledger=ledger,
-            handover=handover,
+            env=env, routing=routing, planes=planes, t=t,
+            payload_bits=payload_bits, train_times=train,
         )
         if plan is None:
             return None
-        reserve_decision(ledger, plan.decision)
+        env.commit(plan.decision)
         done.append(plan.decision.t_upload_done)
     return max(done)
+
+
+def price_async_round(
+    env, *,
+    payload_bits: float = PAYLOAD_BITS,
+    train_time_s: float = 600.0,
+    readmit: bool = False,
+    t: float = 0.0,
+):
+    """AsyncFLEO-style async 'round' pricing (no JAX training): every
+    plane schedules download -> ring flood -> training -> naive-sink
+    upload at ``t``, BOOKING the upload at schedule time in plane
+    order.  Then the release event the re-admission machinery exists
+    for fires: the earliest-starting queued upload is CANCELLED (its
+    plane drops out of the round — a straggler/abort, exactly how an
+    async strategy abandons a cycle) and its reservation released.
+
+    The book-at-schedule-time baseline (``readmit=False``) leaves the
+    surviving bookings where they were — the freed RB stretch goes
+    unused.  ``readmit=True`` re-admits the surviving queued uploads
+    through the session's release hook (``CommsEnvironment.readmit``:
+    per-entry monotone re-pricing in ready order, each move adopted
+    only when that upload completes strictly earlier), so uploads
+    cascade up into the freed capacity — the round never finishes
+    later, and the server receives updates earlier on average (fresher
+    async mixing).
+
+    Returns ``(t_round, t_mean, repriced)`` — when every surviving
+    plane's upload lands, the mean upload completion, and how many
+    re-pricings were adopted — or ``(None, None, 0)`` if any plane
+    stalls."""
+    import numpy as np
+
+    from repro.comms.environment import PendingUpload
+    from repro.comms.isl import isl_hop_time
+    from repro.core.propagation import broadcast_schedule, ring_hops_matrix
+    from repro.orbits.constellation import Satellite
+
+    K = env.walker.config.sats_per_plane
+    t_hop = isl_hop_time(env.isl, payload_bits)
+    hops = ring_hops_matrix(K)
+    pending = []
+    for plane in range(env.walker.config.num_planes):
+        dl = env.first_visible_download(plane, t, payload_bits)
+        if dl is None:
+            return None, None, 0
+        src_slot, t_recv = dl
+        events = broadcast_schedule(
+            K, [src_slot], [t_recv], payload_bits, env.isl
+        )
+        t_done = np.array(
+            [events[s].t_receive + train_time_s for s in range(K)]
+        )
+        sink = env.naive_sink_slot(plane, float(t_done.max()))
+        if sink is None:
+            return None, None, 0
+        t_ready = float(np.max(t_done + hops[sink] * t_hop))
+        dec = env.plan_upload(Satellite(plane, sink), t_ready, payload_bits)
+        if dec is None:
+            return None, None, 0
+        res = env.commit(dec)
+        pending.append(PendingUpload(
+            plane, Satellite(plane, sink), t_ready, payload_bits, dec, res
+        ))
+    # the release event: the earliest-starting queued upload aborts
+    # and its reservation is released (fires the on_release hooks)
+    victim = min(
+        range(len(pending)),
+        key=lambda i: (pending[i].decision.t_start, i),
+    )
+    env.release(pending[victim].reservation)
+    survivors = [p for i, p in enumerate(pending) if i != victim]
+    if not survivors:
+        return None, None, 0        # single-plane round: nothing left
+    repriced = 0
+    if readmit:
+        survivors, repriced = env.readmit(survivors, t)
+    done = [p.decision.t_done for p in survivors]
+    return max(done), sum(done) / len(done), repriced

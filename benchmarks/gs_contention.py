@@ -15,6 +15,9 @@ stations; the grid's fewer/larger uploads should keep it at or below
 the ring under contention (acceptance floor).  Records append to the
 repo-root ``BENCH_topology.json`` trajectory.
 
+Each arm is priced through its own ``CommsEnvironment`` session (one
+shared predictor per GS set, a fresh ledger per arm).
+
 The ``handover`` arm re-prices the scarce (1-RB) rounds with
 mid-window station handover (``gs_handover``): an upload may split
 into segments across different stations' windows instead of waiting
@@ -29,25 +32,35 @@ stalls the whole round (None) — segmented uploads across stations are
 what make the round feasible at all.  Floor: with >= 2 stations the
 heavy handover round completes.
 
+The ``async`` arms price an AsyncFLEO-style round (naive sinks, upload
+booked at schedule time in plane order) under 1-RB scarcity, then fire
+a release event: the earliest-starting queued upload aborts and frees
+its RB stretch.  ``async_scarce`` is the book-at-schedule-time
+baseline (the freed capacity goes unused); ``async_readmit`` re-admits
+the surviving queued uploads through the session's release hooks
+(``CommsEnvironment.readmit``: per-entry monotone re-pricing — the
+ROADMAP's ledger-aware async re-admission).  Floors: the re-admission
+round completes no later than the baseline (guaranteed per-entry), and
+the mean upload completion — the async freshness signal — improves.
+
 Usage: PYTHONPATH=src python -m benchmarks.gs_contention [--quick]
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List, Optional
+from typing import List
 
 from benchmarks.common import (
     PAYLOAD_BITS,
     append_bench,
+    make_comms_env,
+    price_async_round,
     price_grid_round,
     price_ring_round,
 )
-from repro.comms.ledger import GSResourceLedger
 from repro.comms.routing import ISLPlan, RoutingTable
 from repro.configs.constellations import make_sim_config
-from repro.orbits.constellation import WalkerDelta
-from repro.orbits.prediction import VisibilityPredictor
 
 CONSTELLATION = "starlink-40x22"
 GS_SETS = (("rolla",), ("rolla", "punta-arenas"),
@@ -56,12 +69,6 @@ HORIZON_HOURS = 24.0
 CLUSTER_PLANES = 4
 TRAIN_TIME_S = 600.0
 HEAVY_FACTOR = 4        # 4x model: one upload outlasts any single pass
-
-
-def _make_ledger(gs_list, capacity) -> Optional[GSResourceLedger]:
-    if capacity is None:
-        return None
-    return GSResourceLedger(len(gs_list), capacity)
 
 
 def run(gs_sets=GS_SETS) -> List[dict]:
@@ -74,12 +81,15 @@ def run(gs_sets=GS_SETS) -> List[dict]:
             CONSTELLATION, ground_stations=gs_names, topology="grid",
             horizon_hours=HORIZON_HOURS,
         )
-        walker = WalkerDelta(sim.constellation)
-        gs_list = list(sim.all_ground_stations)
-        predictor = VisibilityPredictor(
-            walker, gs_list, horizon_s=sim.horizon_hours * 3600.0 * 1.5,
-            coarse_step_s=sim.coarse_step_s,
-        )
+        # one predictor per GS set, one session per arm (fresh ledger)
+        base_env = make_comms_env(sim)
+
+        def arm(capacity, handover=False):
+            return make_comms_env(
+                sim, predictor=base_env.predictor, walker=base_env.walker,
+                capacity=capacity, handover=handover,
+            )
+
         if routing is None:
             topology = get_isl_topology(sim.constellation, sim.topology)
             routing = RoutingTable(
@@ -98,31 +108,33 @@ def run(gs_sets=GS_SETS) -> List[dict]:
         )
         for label, capacity, handover in modes:
             out[f"ring_{label}"] = price_ring_round(
-                walker, gs_list, predictor, sim,
-                train_time_s=TRAIN_TIME_S,
-                ledger=_make_ledger(gs_list, capacity),
-                handover=handover,
+                arm(capacity, handover), train_time_s=TRAIN_TIME_S,
             )
             out[f"grid_{label}"] = price_grid_round(
-                walker, gs_list, predictor, sim, routing,
+                arm(capacity, handover), routing,
                 cluster_planes=CLUSTER_PLANES,
                 train_time_s=TRAIN_TIME_S, dynamic=True,
-                ledger=_make_ledger(gs_list, capacity),
-                handover=handover,
             )
         heavy = HEAVY_FACTOR * PAYLOAD_BITS
         for label, handover in (("heavy", False), ("heavy_handover", True)):
             out[f"ring_{label}"] = price_ring_round(
-                walker, gs_list, predictor, sim, payload_bits=heavy,
+                arm(1, handover), payload_bits=heavy,
                 train_time_s=TRAIN_TIME_S,
-                ledger=_make_ledger(gs_list, 1), handover=handover,
             )
             out[f"grid_{label}"] = price_grid_round(
-                walker, gs_list, predictor, sim, routing,
+                arm(1, handover), routing,
                 cluster_planes=CLUSTER_PLANES, payload_bits=heavy,
                 train_time_s=TRAIN_TIME_S, dynamic=True,
-                ledger=_make_ledger(gs_list, 1), handover=handover,
             )
+        # async re-admission arms: book-at-schedule-time vs event-driven
+        # re-admission, both under 1-RB scarcity
+        out["async_scarce"], out["async_scarce_mean"], _ = price_async_round(
+            arm(1), train_time_s=TRAIN_TIME_S, readmit=False,
+        )
+        (out["async_readmit"], out["async_readmit_mean"],
+         out["async_repriced"]) = price_async_round(
+            arm(1), train_time_s=TRAIN_TIME_S, readmit=True,
+        )
         wall = time.perf_counter() - t0
 
         def _r(x):
@@ -149,6 +161,11 @@ def run(gs_sets=GS_SETS) -> List[dict]:
             "grid_heavy_s": _r(out["grid_heavy"]),
             "ring_heavy_handover_s": _r(out["ring_heavy_handover"]),
             "grid_heavy_handover_s": _r(out["grid_heavy_handover"]),
+            "async_scarce_s": _r(out["async_scarce"]),
+            "async_readmit_s": _r(out["async_readmit"]),
+            "async_scarce_mean_s": _r(out["async_scarce_mean"]),
+            "async_readmit_mean_s": _r(out["async_readmit_mean"]),
+            "async_repriced": out["async_repriced"],
             "speedup_contended": (
                 None if ring_c is None or not grid_c
                 else round(ring_c / grid_c, 2)
@@ -170,6 +187,11 @@ def run(gs_sets=GS_SETS) -> List[dict]:
                 None if out["grid_handover"] is None
                 or out["grid_scarce"] is None
                 else _r(out["grid_scarce"] - out["grid_handover"])
+            ),
+            "async_readmit_gain_s": (
+                None if out["async_readmit"] is None
+                or out["async_scarce"] is None
+                else _r(out["async_scarce"] - out["async_readmit"])
             ),
             "plan_wall_s": round(wall, 3),
         })
@@ -207,6 +229,15 @@ def main() -> None:
         for r in rows if len(r["ground_stations"]) >= 2
         for kind in ("ring", "grid")
     )
+    # floor: event-driven re-admission never worsens the async round,
+    # nor the mean upload completion (the async freshness signal)
+    ok_async = all(
+        r["async_readmit_s"] is not None
+        and (r["async_scarce_s"] is None
+             or (r["async_readmit_s"] <= r["async_scarce_s"]
+                 and r["async_readmit_mean_s"] <= r["async_scarce_mean_s"]))
+        for r in rows
+    )
     for r in rows:
         print(
             f"# {len(r['ground_stations'])} GS @ {r['rb_capacity']} RB: "
@@ -219,7 +250,11 @@ def main() -> None:
             f"contended speedup {r['speedup_contended']}x) | "
             f"{r['heavy_factor']}x payload: ring {r['ring_heavy_s']} -> "
             f"{r['ring_heavy_handover_s']}s, grid {r['grid_heavy_s']} -> "
-            f"{r['grid_heavy_handover_s']}s"
+            f"{r['grid_heavy_handover_s']}s | "
+            f"async 1 RB round {r['async_scarce_s']}s -> "
+            f"{r['async_readmit_s']}s, mean "
+            f"{r['async_scarce_mean_s']}s -> {r['async_readmit_mean_s']}s "
+            f"({r['async_repriced']} re-priced)"
         )
     print(f"# grid <= ring under contention — "
           f"{'OK' if ok else 'REGRESSION'}")
@@ -227,7 +262,9 @@ def main() -> None:
           f"{'OK' if ok_handover else 'REGRESSION'}")
     print(f"# heavy upload feasible only via handover (>=2 GS) — "
           f"{'OK' if ok_heavy else 'REGRESSION'}")
-    if not (ok and ok_handover and ok_heavy):
+    print(f"# async re-admission <= book-at-schedule under 1-RB — "
+          f"{'OK' if ok_async else 'REGRESSION'}")
+    if not (ok and ok_handover and ok_heavy and ok_async):
         raise SystemExit(1)
 
 

@@ -29,14 +29,13 @@ from typing import List
 from benchmarks.common import (
     PAYLOAD_BITS,
     append_bench,
+    make_comms_env,
     price_grid_round,
     price_ring_round,
 )
 from repro.comms.routing import ISLPlan, RoutingTable
 from repro.configs.constellations import make_sim_config
 from repro.core.fedleo import make_clusters
-from repro.orbits.constellation import WalkerDelta
-from repro.orbits.prediction import VisibilityPredictor
 
 CONSTELLATION = "starlink-40x22"
 GS_SETS = (("rolla",), ("rolla", "punta-arenas"),
@@ -59,16 +58,12 @@ def run(gs_sets=GS_SETS) -> List[dict]:
             CONSTELLATION, ground_stations=gs_names, topology="grid",
             horizon_hours=HORIZON_HOURS,
         )
-        walker = WalkerDelta(sim.constellation)
-        gs_list = list(sim.all_ground_stations)
-        predictor = VisibilityPredictor(
-            walker, gs_list, horizon_s=sim.horizon_hours * 3600.0 * 1.5,
-            coarse_step_s=sim.coarse_step_s,
-        )
+        # contention-free arms share one session per pricing pass (a
+        # fresh env per arm: each must not see the other's bookings)
+        base_env = make_comms_env(sim)
 
         t0 = time.perf_counter()
-        ring = price_ring_round(walker, gs_list, predictor, sim,
-                                train_time_s=TRAIN_TIME_S)
+        ring = price_ring_round(base_env.derive(), train_time_s=TRAIN_TIME_S)
         t_ring = time.perf_counter() - t0
 
         if routing is None:
@@ -82,7 +77,7 @@ def run(gs_sets=GS_SETS) -> List[dict]:
         t0 = time.perf_counter()
         # static clusters: this benchmark tracks the PR 2 floor
         grid = price_grid_round(
-            walker, gs_list, predictor, sim, routing,
+            base_env.derive(), routing,
             cluster_planes=CLUSTER_PLANES, train_time_s=TRAIN_TIME_S,
         )
         t_grid = time.perf_counter() - t0

@@ -14,8 +14,18 @@ from repro.comms.link import (
 from repro.comms.isl import ISLConfig, isl_hop_time, relay_time
 from repro.comms.ledger import GSResourceLedger
 from repro.comms.routing import ISLPlan, RoutingTable
+from repro.comms.environment import (
+    CommsEnvironment,
+    PendingUpload,
+    Reservation,
+    TransferDecision,
+)
 
 __all__ = [
+    "CommsEnvironment",
+    "PendingUpload",
+    "Reservation",
+    "TransferDecision",
     "GSResourceLedger",
     "ISLPlan",
     "RoutingTable",

@@ -1,0 +1,566 @@
+"""CommsEnvironment: the scheduling *session* of the simulation.
+
+The paper's scheduler (eqs. 13-22) grew across PRs 1-4 as free
+functions in ``core/scheduling.py`` that each re-thread the same
+``(walker, predictor, gs, ledger, handover, ...)`` tuple through every
+strategy; ``core/baselines.py`` even carried a ``_SELF_LEDGER``
+sentinel to guess which ledger a call meant.  Nothing *owned* the
+reservations, so nothing could observe a release and re-plan — the
+structural blocker for ledger-aware async re-admission (FedSpace,
+So et al. 2022; AsyncFLEO, Elmahallawy & Luo 2024: asynchronous LEO FL
+hinges on re-pricing queued uploads as link state changes).
+
+``CommsEnvironment`` is the stateful session that owns those parts:
+
+  * the ``VisibilityPredictor`` (access-window table, rolling horizon),
+  * the ``GSResourceLedger`` (per-station RB occupancy),
+  * the link/ISL budgets and the station-handover policy,
+
+constructed once per simulation (``CommsEnvironment.from_sim``) and
+shared by every planning call of a strategy.  The API:
+
+  planning    ``plan_upload`` / ``plan_download`` -> TransferDecision,
+              ``select_sink`` / ``select_sink_cluster``,
+              ``first_visible_download(_sats)``, ``naive_sink_slot``
+  lifecycle   ``commit(decision) -> Reservation``,
+              ``release(reservation, at=...)`` — frees the booked RB
+              intervals and fires every registered ``on_release``
+              callback, and
+  events      ``on_release(callback)`` — observe capacity releases;
+              ``readmit(pending, t_now)`` — the event-driven async
+              re-admission engine built on top of them.
+
+The planners only *read* residual capacity; ``commit`` is the one
+booking rule (per-leg intervals for segmented uploads).  All methods
+delegate to the same private machinery in ``core/scheduling.py`` that
+the legacy free functions now shim, so an environment-planned schedule
+is bit-identical to the pre-session scheduler when no release events
+fire (equivalence-tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.comms.isl import ISLConfig, isl_hop_time
+from repro.comms.ledger import GSResourceLedger
+from repro.comms.link import LinkConfig, downlink_time, uplink_time
+from repro.orbits.constellation import (
+    GroundStation,
+    Satellite,
+    WalkerDelta,
+)
+from repro.orbits.prediction import (
+    GroundStations,
+    VisibilityPredictor,
+    as_gs_list,
+)
+from repro.orbits.visibility import VisibilityWindow
+
+_UNSET = object()
+
+
+def _sched():
+    """Lazy handle on ``repro.core.scheduling`` (the shared planning
+    machinery).  Imported at call time: the core modules import this
+    module at their top level, so a module-level import here would be
+    circular."""
+    from repro.core import scheduling
+
+    return scheduling
+
+
+# --- typed decisions / reservations -------------------------------------------
+Leg = Tuple[int, float, float]          # (gs_index, t_start, t_end)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferDecision:
+    """One planned point-to-point transfer: start, completion, the
+    access window it rides (the first leg's window when the upload was
+    split across station handovers) and the handover legs (empty for a
+    single-window transfer).  ``direction`` is "up" (satellite -> GS,
+    RB-contended) or "down" (GS broadcast, never contended)."""
+
+    direction: str
+    t_start: float
+    t_done: float
+    window: VisibilityWindow
+    segments: Tuple[Any, ...] = ()      # TransferSegment legs
+
+    @property
+    def legs(self) -> Tuple[Leg, ...]:
+        """The RB intervals this transfer occupies when committed —
+        one per handover leg, or the single ``[t_start, t_done)`` span.
+        Downloads are full-band broadcasts (eq. 15) and occupy none."""
+        if self.direction != "up":
+            return ()
+        if self.segments:
+            return tuple(
+                (s.gs_index, s.t_start, s.t_end) for s in self.segments
+            )
+        return ((self.window.gs_index, self.t_start, self.t_done),)
+
+
+@dataclasses.dataclass
+class Reservation:
+    """A committed booking: the ledger intervals one decision occupies.
+    Handed back to ``release`` to free the capacity again."""
+
+    rid: int
+    legs: Tuple[Leg, ...]
+    decision: Any = None
+    released: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingUpload:
+    """One queued (planned + committed, not yet transmitted) upload of
+    an asynchronous strategy — the unit ``readmit`` re-prices."""
+
+    key: Any                    # caller's identity (client id, plane, ...)
+    sat: Satellite
+    t_ready: float              # model ready for upload (absolute s)
+    payload_bits: float
+    decision: TransferDecision
+    reservation: Reservation
+
+
+def _decision_legs(decision: Any) -> Tuple[Leg, ...]:
+    """Booked intervals of any decision type: ``TransferDecision``
+    (its ``legs``), or a ``SinkDecision``/``ClusterSinkDecision``
+    (per-segment legs, else the single upload span)."""
+    if isinstance(decision, TransferDecision):
+        return decision.legs
+    segments = getattr(decision, "segments", ())
+    if segments:
+        return tuple((s.gs_index, s.t_start, s.t_end) for s in segments)
+    return (
+        (
+            decision.window.gs_index,
+            decision.t_upload_start,
+            decision.t_upload_done,
+        ),
+    )
+
+
+class CommsEnvironment:
+    """Stateful scheduling session: predictor + ledger + link budgets +
+    handover policy behind one typed planning/booking API.
+
+    Args:
+      walker: the constellation geometry.
+      predictor: the access-window table — THE authority on the ground
+        segment (every window carries its station's ``gs_index``).
+      link: GS link budget (required by the upload/download/sink
+        planners; may be None for a bare transfer-planning session).
+      isl: intra-plane ISL budget (ring hop metric of ``select_sink``).
+      ledger: shared per-station RB occupancy, or None for the
+        contention-free degenerate case.
+      handover: default mid-window station-handover policy
+        (``SimConfig.gs_handover``); per-call override available.
+      gs: optional ground station(s) the caller *believes* the session
+        covers — validated against the predictor's ground segment (the
+        check formerly duplicated at every free-function entry point).
+    """
+
+    def __init__(
+        self,
+        *,
+        walker: WalkerDelta,
+        predictor: VisibilityPredictor,
+        link: Optional[LinkConfig] = None,
+        isl: Optional[ISLConfig] = None,
+        ledger: Optional[GSResourceLedger] = None,
+        handover: bool = False,
+        gs: Optional[GroundStations] = None,
+    ):
+        if gs is not None:
+            assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
+                "predictor was built over a different ground segment"
+        if ledger is not None and ledger.num_stations != len(
+            predictor.ground_stations
+        ):
+            raise ValueError(
+                f"ledger covers {ledger.num_stations} stations, predictor "
+                f"{len(predictor.ground_stations)}"
+            )
+        self.walker = walker
+        self.predictor = predictor
+        self.link = link
+        self.isl = isl
+        self.ledger = ledger
+        self.handover = bool(handover)
+        self._release_listeners: List[Callable] = []
+        self._next_rid = 0
+
+    @classmethod
+    def from_sim(cls, sim, walker: Optional[WalkerDelta] = None
+                 ) -> "CommsEnvironment":
+        """The session of one ``SimConfig``: predictor over the sim's
+        ground segment (rolling when ``rolling_horizon_hours`` is set),
+        a shared RB ledger when ``gs_rb_capacity`` caps station
+        capacity, and the sim's handover policy."""
+        if walker is None:
+            walker = WalkerDelta(sim.constellation)
+        gs_list = list(sim.all_ground_stations)
+        max_horizon_s = sim.horizon_hours * 3600.0 * 1.5
+        if sim.rolling_horizon_hours is not None:
+            predictor = VisibilityPredictor(
+                walker,
+                gs_list,
+                horizon_s=sim.rolling_horizon_hours * 3600.0,
+                coarse_step_s=sim.coarse_step_s,
+                rolling=True,
+                max_horizon_s=max_horizon_s,
+            )
+        else:
+            predictor = VisibilityPredictor(
+                walker, gs_list, horizon_s=max_horizon_s,
+                coarse_step_s=sim.coarse_step_s,
+            )
+        ledger = (
+            GSResourceLedger(len(gs_list), sim.gs_rb_capacity)
+            if sim.gs_rb_capacity is not None else None
+        )
+        return cls(
+            walker=walker, predictor=predictor, link=sim.link, isl=sim.isl,
+            ledger=ledger, handover=sim.gs_handover, gs=gs_list,
+        )
+
+    @property
+    def ground_stations(self) -> Tuple[GroundStation, ...]:
+        return self.predictor.ground_stations
+
+    def derive(self, *, ledger=_UNSET, handover=_UNSET,
+               link=_UNSET, isl=_UNSET) -> "CommsEnvironment":
+        """Sibling session sharing this one's walker/predictor/budgets
+        but with its OWN booking state: by default the new session gets
+        a fresh, empty ledger of the parent's capacity (no ledger stays
+        no ledger), so derived arms never see each other's bookings —
+        how benchmarks price the same window table under different
+        contention regimes.  Pass ``ledger=...`` to override."""
+        if ledger is _UNSET:
+            ledger = (
+                GSResourceLedger(self.ledger.num_stations,
+                                 self.ledger.capacity)
+                if self.ledger is not None else None
+            )
+        return CommsEnvironment(
+            walker=self.walker,
+            predictor=self.predictor,
+            link=self.link if link is _UNSET else link,
+            isl=self.isl if isl is _UNSET else isl,
+            ledger=ledger,
+            handover=self.handover if handover is _UNSET else handover,
+        )
+
+    # -- transfer planning -----------------------------------------------------
+    def plan_transfer(
+        self,
+        *,
+        sat: Satellite,
+        t: float,
+        transfer_time,                  # (gs_index, distance) -> (need, done)
+        skip_window=None,
+        handover_spec=None,
+        contended: bool = True,
+    ) -> Optional[Tuple]:
+        """Generic earliest-completing transfer of one satellite after
+        ``t`` against this session's window table and (when
+        ``contended``) residual RB capacity — the raw tuple surface the
+        legacy ``earliest_transfer`` shim exposes.  Prefer
+        ``plan_upload``/``plan_download``."""
+        S = _sched()
+        return S._earliest_transfer_impl(
+            walker=self.walker, predictor=self.predictor, sat=sat, t=t,
+            transfer_time=transfer_time, skip_window=skip_window,
+            ledger=self.ledger if contended else None,
+            handover=handover_spec,
+        )
+
+    def plan_upload(
+        self,
+        sat: Satellite,
+        t_ready: float,
+        payload_bits: float,
+        *,
+        skip_window=None,
+        handover: Optional[bool] = None,
+    ) -> Optional[TransferDecision]:
+        """Earliest-completing sink upload (one RB, eq. 16) after
+        ``t_ready``: priced against residual station capacity and — per
+        the session's handover policy — raced against a segmented
+        station-switching plan.  Plan only; ``commit`` books it."""
+        S = _sched()
+        assert self.link is not None, "session has no GS link budget"
+        tt = S.symmetric_transfer(downlink_time, self.link, payload_bits)
+        use_handover = self.handover if handover is None else handover
+        spec = (
+            S.HandoverSpec(self.link, payload_bits) if use_handover else None
+        )
+        hit = self.plan_transfer(
+            sat=sat, t=t_ready, transfer_time=tt, skip_window=skip_window,
+            handover_spec=spec,
+        )
+        if hit is None:
+            return None
+        if spec is not None:
+            t0, t_done, w, segments = hit
+        else:
+            t0, t_done, w = hit
+            segments = ()
+        return TransferDecision("up", t0, t_done, w, tuple(segments))
+
+    def plan_download(
+        self,
+        sat: Satellite,
+        t: float,
+        payload_bits: float,
+        *,
+        skip_window=None,
+    ) -> Optional[TransferDecision]:
+        """Earliest-completing global-model download after ``t``: a
+        full-band GS broadcast (eq. 15) — never RB-contended, never
+        segmented."""
+        S = _sched()
+        assert self.link is not None, "session has no GS link budget"
+        tt = S.symmetric_transfer(uplink_time, self.link, payload_bits)
+        hit = self.plan_transfer(
+            sat=sat, t=t, transfer_time=tt, skip_window=skip_window,
+            contended=False,
+        )
+        if hit is None:
+            return None
+        t0, t_done, w = hit
+        return TransferDecision("down", t0, t_done, w)
+
+    # -- sink selection --------------------------------------------------------
+    def select_sink(
+        self,
+        *,
+        plane: int,
+        t_train_done: Sequence[float],
+        payload_bits: float,
+        require_next_download: bool = False,
+        isl: Optional[ISLConfig] = None,
+        handover: Optional[bool] = None,
+    ):
+        """Deterministic sink selection for one orbital plane (eqs.
+        21-22 with the ring hop metric) — ``SinkDecision`` or None."""
+        S = _sched()
+        isl = isl if isl is not None else self.isl
+        assert isl is not None, "session has no intra-plane ISL budget"
+        K = self.walker.config.sats_per_plane
+        t_hop = isl_hop_time(isl, payload_bits)
+        cd = self.select_sink_cluster(
+            sats=[(plane, s) for s in range(K)],
+            relay_latency=S.ring_hops_matrix(K) * t_hop,
+            t_train_done=t_train_done, payload_bits=payload_bits,
+            require_next_download=require_next_download, handover=handover,
+        )
+        if cd is None:
+            return None
+        return S.SinkDecision(
+            plane=plane,
+            sink_slot=cd.sink.slot,
+            window=cd.window,
+            t_models_at_sink=cd.t_models_at_sink,
+            t_upload_start=cd.t_upload_start,
+            t_upload_done=cd.t_upload_done,
+            t_wait=cd.t_wait,
+            candidates_considered=cd.candidates_considered,
+            segments=cd.segments,
+        )
+
+    def select_sink_cluster(
+        self,
+        *,
+        sats: Sequence[Tuple[int, int]],
+        relay_latency: np.ndarray,
+        t_train_done: Sequence[float],
+        payload_bits: float,
+        require_next_download: bool = False,
+        handover: Optional[bool] = None,
+    ):
+        """Constellation-wide sink selection over an arbitrary satellite
+        set (eq. 21/22 over a relay-latency matrix) —
+        ``ClusterSinkDecision`` or None."""
+        S = _sched()
+        assert self.link is not None, "session has no GS link budget"
+        return S._select_sink_cluster_impl(
+            walker=self.walker, predictor=self.predictor, link=self.link,
+            sats=sats, relay_latency=relay_latency,
+            t_train_done=t_train_done, payload_bits=payload_bits,
+            require_next_download=require_next_download, ledger=self.ledger,
+            handover=self.handover if handover is None else handover,
+        )
+
+    def naive_sink_slot(self, plane: int, t_ready: float) -> Optional[int]:
+        """The naive-sink ablation's slot choice (first visitor after
+        ``t_ready``, window duration ignored)."""
+        return _sched()._naive_sink_slot_impl(self.predictor, plane, t_ready)
+
+    def first_visible_download(
+        self, plane: int, t: float, payload_bits: float
+    ) -> Optional[tuple]:
+        """Earliest (slot, t_received) at which ANY satellite of the
+        plane can finish downloading w^t after ``t`` (§IV-A step 1)."""
+        K = self.walker.config.sats_per_plane
+        return self.first_visible_download_sats(
+            [(plane, s) for s in range(K)], t, payload_bits
+        )
+
+    def first_visible_download_sats(
+        self, sats: Sequence[Tuple[int, int]], t: float, payload_bits: float
+    ) -> Optional[tuple]:
+        """Earliest (index into ``sats``, t_received) download over an
+        arbitrary satellite set (a cluster of planes)."""
+        S = _sched()
+        assert self.link is not None, "session has no GS link budget"
+        return S._first_visible_download_sats_impl(
+            walker=self.walker, predictor=self.predictor, link=self.link,
+            sats=sats, t=t, payload_bits=payload_bits,
+        )
+
+    # -- reservation lifecycle -------------------------------------------------
+    def commit(self, decision: Any) -> Reservation:
+        """Book one chosen decision on the session ledger — each
+        handover leg on its own station for exactly the leg span, or
+        the single upload interval — and return the ``Reservation``
+        that ``release`` takes back.  THE one booking rule; without a
+        ledger (or for downloads) the reservation carries its legs but
+        occupies nothing."""
+        legs = _decision_legs(decision)
+        if self.ledger is not None:
+            for gi, t0, t1 in legs:
+                self.ledger.reserve(gi, t0, t1)
+        self._next_rid += 1
+        return Reservation(rid=self._next_rid, legs=legs, decision=decision)
+
+    def release(
+        self, reservation: Reservation, at: Optional[float] = None
+    ) -> Tuple[Leg, ...]:
+        """Give a committed reservation's capacity back to the ledger
+        and fire every registered ``on_release`` callback with the
+        freed intervals.
+
+        ``at=None`` frees every leg in full.  With ``at``, only the
+        part from ``at`` on is freed: legs already over keep their
+        booking (the RB was truly spent), a straddling leg is truncated
+        to ``[t0, at)``.  Double release is a no-op.  Returns the freed
+        ``(gs_index, t0, t1)`` intervals."""
+        if reservation.released:
+            return ()
+        freed: List[Leg] = []
+        kept: List[Leg] = []
+        for gi, t0, t1 in reservation.legs:
+            if at is not None and t1 <= at:
+                kept.append((gi, t0, t1))       # already transmitted
+                continue
+            f0 = t0 if at is None else max(t0, at)
+            if self.ledger is not None:
+                self.ledger.release(gi, t0, t1)
+                if f0 > t0:                     # keep the spent head
+                    self.ledger.reserve(gi, t0, f0)
+            if f0 > t0:
+                kept.append((gi, t0, f0))
+            freed.append((gi, f0, t1))
+        reservation.legs = tuple(kept)
+        reservation.released = True
+        if freed and self.ledger is not None:
+            for cb in list(self._release_listeners):
+                cb(reservation, tuple(freed))
+        return tuple(freed)
+
+    def release_before(self, t: float) -> None:
+        """Drop bookings that ended at or before ``t`` (the simulated
+        clock is monotone; past intervals can never affect a fit).
+        Deliberately does NOT fire ``on_release`` — expiring into the
+        past frees no *future* capacity to re-plan against."""
+        if self.ledger is not None:
+            self.ledger.release_before(t)
+
+    def on_release(self, callback: Callable) -> Callable[[], None]:
+        """Register ``callback(reservation, freed_legs)`` to run on
+        every capacity release; returns an unsubscribe function."""
+        self._release_listeners.append(callback)
+
+        def unsubscribe() -> None:
+            if callback in self._release_listeners:
+                self._release_listeners.remove(callback)
+
+        return unsubscribe
+
+    # -- event-driven async re-admission --------------------------------------
+    def readmit(
+        self,
+        pending: Sequence[PendingUpload],
+        t_now: float,
+    ) -> Tuple[List[PendingUpload], int]:
+        """Re-admit queued uploads after their reservations release.
+
+        Async strategies book every upload at schedule time — under
+        scarce RB capacity a queued upload sits wherever the booking
+        order left it, even after an earlier reservation (or handover
+        leg) releases the capacity that blocked it.  ``readmit`` runs
+        the event-driven repair: in model-ready order, each queued
+        upload's own reservation is released, the upload is re-priced
+        against everything else still booked (the freed capacity now
+        visible), and the new plan is ADOPTED only when it completes
+        strictly earlier — otherwise the original booking is restored
+        verbatim (its slot is provably still free: only its own
+        reservation was out).  Every adoption releases that upload's
+        old slot in turn — each release firing the ``on_release`` hooks
+        — so improvements cascade; passes repeat until a full pass
+        adopts nothing.
+
+        Per-entry monotonicity makes the repair safe by construction:
+        no upload ever completes later than its original booking, so
+        neither the queued makespan nor any single completion can
+        regress (the same adopt-only-if-strictly-better discipline as
+        the segmented handover planner).  Uploads already transmitting
+        (``t_start <= t_now``) are never touched; with no ledger this
+        is a no-op and schedules stay bit-identical.
+
+        Returns ``(updated pending, number of re-priced uploads)``;
+        the updated list preserves the input order.
+        """
+        pending = list(pending)
+        if self.ledger is None:
+            return pending, 0
+        # model-ready order, stable on the original admission order
+        order = sorted(
+            range(len(pending)), key=lambda i: (pending[i].t_ready, i)
+        )
+        repriced = 0
+        improved = True
+        while improved:             # adoptions strictly shrink some
+            improved = False        # completion: passes terminate
+            for i in order:
+                p = pending[i]
+                if p.decision.t_start <= t_now or p.reservation.released:
+                    continue
+                self.release(p.reservation)
+                # re-plan from the later of model readiness and NOW — a
+                # queued upload must never be re-priced into a window
+                # that has already elapsed (release_before may have
+                # purged past bookings, leaving phantom-free history)
+                dec = self.plan_upload(
+                    p.sat, max(p.t_ready, t_now), p.payload_bits
+                )
+                if dec is not None and dec.t_done < p.decision.t_done - 1e-9:
+                    pending[i] = dataclasses.replace(
+                        p, decision=dec, reservation=self.commit(dec)
+                    )
+                    repriced += 1
+                    improved = True
+                else:
+                    # restore: the earliest completion with its own slot
+                    # free again can never be later than that same slot
+                    pending[i] = dataclasses.replace(
+                        p, reservation=self.commit(p.decision)
+                    )
+        return pending, repriced

@@ -92,6 +92,32 @@ class GSResourceLedger:
     def num_reserved(self) -> int:
         return sum(len(s) for s in self._starts)
 
+    def release(self, gs_index: int, t0: float, t1: float) -> None:
+        """Give ONE previously booked ``[t0, t1)`` interval of the
+        station back to the pool — the reservation-release half of the
+        lifecycle (``CommsEnvironment.release``): freed capacity is
+        visible to every later ``earliest_fit``/``free_runs`` query.
+
+        Exact-match on the booked bounds (callers hand back the legs
+        they reserved); the most recent matching booking is dropped.
+        Raises ValueError when no such booking exists (double release /
+        never booked).  Zero-length intervals were never stored and
+        release as a no-op.
+        """
+        t0, t1 = float(t0), float(t1)
+        if t1 <= t0:
+            return
+        s, e = self._starts[gs_index], self._ends[gs_index]
+        for i in range(len(s) - 1, -1, -1):
+            if s[i] == t0 and e[i] == t1:
+                del s[i]
+                del e[i]
+                self._busy[gs_index] = None
+                return
+        raise ValueError(
+            f"no booking [{t0}, {t1}) to release on station {gs_index}"
+        )
+
     def release_before(self, t: float) -> None:
         """Drop intervals that ended at or before ``t`` (the simulated
         clock is monotone, so past bookings can never affect a fit)."""

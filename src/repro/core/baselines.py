@@ -35,23 +35,11 @@ from repro.core import aggregation
 from repro.core.engine import FLStrategy, SimConfig
 from repro.core.fltask import FederatedTask
 from repro.core.propagation import broadcast_schedule, ring_hops_matrix
-from repro.core.scheduling import (
-    HandoverSpec,
-    earliest_transfer,
-    first_visible_download,
-    naive_sink_slot,
-    reserve_transfer,
-    symmetric_transfer,
-)
+from repro.comms.environment import CommsEnvironment, PendingUpload
 from repro.comms.isl import isl_hop_time
-from repro.comms.link import downlink_time, uplink_time
 from repro.configs.constellations import GROUND_STATION_PRESETS
-from repro.orbits.constellation import GroundStation, Satellite
+from repro.orbits.constellation import Satellite
 from repro.orbits.prediction import VisibilityPredictor
-
-
-# --- shared helpers -------------------------------------------------------------
-_SELF_LEDGER = object()     # sentinel: use the strategy's own ledger
 
 
 class _StarMixin:
@@ -59,10 +47,8 @@ class _StarMixin:
 
     def _first_tx(
         self, sat: Satellite, t: float, payload_bits: float, downlink: bool,
-        predictor: Optional[VisibilityPredictor] = None,
-        gs: Optional[GroundStation] = None,
+        env: Optional[CommsEnvironment] = None,
         same_window: bool = True,
-        ledger=_SELF_LEDGER,
     ) -> Optional[float]:
         """Completion time of the earliest feasible transfer after t.
 
@@ -74,54 +60,30 @@ class _StarMixin:
         *after* t (the naive FedAvg behaviour of eq. (10) case 2: wait
         for the next visit).
 
-        Uploads (``downlink=True``) are priced against the strategy's
-        resource ledger when one is active and the chosen transfer is
-        booked on it; downloads are full-band broadcasts of the shared
-        global model (eq. 15) and never contend.  ``ledger`` overrides
-        the default when a strategy pairs its own predictor/station
-        sets (FedHAP).  With ``SimConfig.gs_handover`` an upload may
-        split into station-handover segments (each leg booked on its
-        own station); downloads never segment.
+        Everything routes through the scheduling session: uploads
+        (``downlink=True``) are priced against the session's resource
+        ledger and the chosen transfer is committed on it — splitting
+        into station-handover segments per the session's policy;
+        downloads are full-band broadcasts of the shared global model
+        (eq. 15) and never contend or segment.  ``env`` overrides the
+        strategy session when a strategy pairs its own
+        predictor/station sets (FedHAP's per-server sessions).
         """
-        predictor = predictor or self.predictor
-        if gs is not None:
-            # stations come from the predictor that tagged the windows;
-            # an explicit gs must match it (FedHAP's per-server pairs)
-            assert (gs,) == predictor.ground_stations, \
-                "gs does not match the predictor's ground segment"
-        if ledger is _SELF_LEDGER:
-            ledger = getattr(self, "ledger", None)
-        if not downlink:
-            ledger = None                  # broadcasts never contend
-
-        tt = symmetric_transfer(
-            downlink_time if downlink else uplink_time,
-            self.sim.link, payload_bits,
-        )
+        env = env if env is not None else self.env
 
         skip = None
         if not same_window:
             def skip(w):      # skip the in-progress window
                 return w.contains(t) and w.t_start < t
 
-        spec = (
-            HandoverSpec(self.sim.link, payload_bits)
-            if downlink and self.sim.gs_handover else None
-        )
-        hit = earliest_transfer(
-            walker=self.walker, predictor=predictor, sat=sat,
-            t=t, transfer_time=tt, skip_window=skip, ledger=ledger,
-            handover=spec,
-        )
-        if hit is None:
-            return None
-        if spec is not None:
-            t0, t_done, w, segments = hit
-        else:
-            t0, t_done, w = hit
-            segments = ()
-        reserve_transfer(ledger, w.gs_index, t0, t_done, segments)
-        return t_done
+        if downlink:
+            dec = env.plan_upload(sat, t, payload_bits, skip_window=skip)
+            if dec is None:
+                return None
+            env.commit(dec)
+            return dec.t_done
+        dec = env.plan_download(sat, t, payload_bits, skip_window=skip)
+        return None if dec is None else dec.t_done
 
 
 # --- synchronous star baselines ----------------------------------------------------
@@ -186,19 +148,27 @@ class FedHAP(FLStrategy, _StarMixin):
             alt_m=20_000.0, min_elevation_deg=2.0, name="HAP-B",
         )
         horizon = sim.horizon_hours * 3600.0 * 1.5
+        # one scheduling session per HAP server: the paper's extra-
+        # dedicated-hardware baseline has private capacity (no ledger),
+        # and the session constructor checks each server matches its
+        # own predictor's ground segment
         self.servers = [
-            (hap_a, VisibilityPredictor(self.walker, hap_a, horizon,
-                                        coarse_step_s=sim.coarse_step_s)),
-            (hap_b, VisibilityPredictor(self.walker, hap_b, horizon,
-                                        coarse_step_s=sim.coarse_step_s)),
+            CommsEnvironment(
+                walker=self.walker,
+                predictor=VisibilityPredictor(
+                    self.walker, hap, horizon,
+                    coarse_step_s=sim.coarse_step_s,
+                ),
+                link=sim.link, isl=sim.isl,
+                handover=sim.gs_handover, gs=hap,
+            )
+            for hap in (hap_a, hap_b)
         ]
+
     def _best_tx(self, sat, t, payload_bits, downlink):
-        # HAP servers are the paper's extra-dedicated-hardware baseline:
-        # modeled with private capacity, never RB-contended
         outs = [
-            self._first_tx(sat, t, payload_bits, downlink,
-                           predictor=pred, gs=gs, ledger=None)
-            for gs, pred in self.servers
+            self._first_tx(sat, t, payload_bits, downlink, env=env)
+            for env in self.servers
         ]
         outs = [o for o in outs if o is not None]
         return min(outs) if outs else None
@@ -260,10 +230,8 @@ class FedISL(FLStrategy, _StarMixin):
 
         for plane in range(L):
             clients = self.plane_clients(plane)
-            dl = first_visible_download(
-                walker=self.walker, gs=self.gs_list, predictor=self.predictor,
-                link=sim.link, plane=plane, t=t,
-                payload_bits=self.payload_bits,
+            dl = self.env.first_visible_download(
+                plane, t, self.payload_bits
             )
             if dl is None:
                 return None, {"failed_plane": plane}
@@ -278,7 +246,7 @@ class FedISL(FLStrategy, _StarMixin):
             # naive sink: earliest next visitor after completion (one
             # batched per-plane window sweep)
             t_ready0 = max(t_done)
-            sink = naive_sink_slot(self.predictor, plane, t_ready0)
+            sink = self.env.naive_sink_slot(plane, t_ready0)
             if sink is None:
                 return None, {"failed_plane": plane}
             t_ready = float(np.max(
@@ -314,7 +282,80 @@ class FedISLIdeal(FedISL):
 
 
 # --- asynchronous baselines ------------------------------------------------------------
-class _AsyncStar(FLStrategy, _StarMixin):
+class _AsyncQueueMixin:
+    """Book-at-schedule-time upload queue shared by the asynchronous
+    strategies, with optional event-driven re-admission
+    (``SimConfig.async_readmit``).
+
+    Every async cycle plans download -> train -> upload at schedule
+    time and *books* the upload on the session ledger — under scarce RB
+    capacity an upload whose model is ready early can therefore queue
+    behind bookings merely made earlier.  With re-admission on, the
+    strategy registers an ``on_release`` hook with its
+    ``CommsEnvironment``; whenever booked capacity is RELEASED
+    (``env.release`` — an aborted cycle, or any other component
+    sharing the session; the stock strategies never abort a booked
+    upload themselves), the next server event re-admits the queued
+    uploads in model-ready order (``CommsEnvironment.readmit``) and
+    re-keys the event queue to the re-priced completions.  Until such
+    an event fires — and always with ``async_readmit=False`` — the
+    schedule is bit-identical to the book-at-schedule-time baseline.
+    """
+
+    def _init_async_queue(self) -> None:
+        # (t_upload_done, key, t_model_version) priority queue
+        self._queue: List[Tuple[float, Any, float]] = []
+        self.readmit = bool(self.sim.async_readmit)
+        self._pending: Dict[Any, PendingUpload] = {}
+        self._versions: Dict[Any, float] = {}
+        self._capacity_freed = False
+        if self.readmit:
+            self.env.on_release(self._note_release)
+
+    def _note_release(self, _reservation, _freed) -> None:
+        # the release hook: booked capacity freed somewhere — re-admit
+        # the queued uploads at the next server event
+        self._capacity_freed = True
+
+    def _admit_upload(
+        self, key, sat: Satellite, t_ready: float, payload_bits: float,
+        version: float,
+    ) -> Optional[float]:
+        """Plan + book one upload at schedule time; tracked as pending
+        for re-admission when it is on.  Returns the completion."""
+        if not self.readmit:
+            return self._first_tx(sat, t_ready, payload_bits, downlink=True)
+        dec = self.env.plan_upload(sat, t_ready, payload_bits)
+        if dec is None:
+            return None
+        res = self.env.commit(dec)
+        self._pending[key] = PendingUpload(
+            key, sat, t_ready, payload_bits, dec, res
+        )
+        self._versions[key] = version
+        return dec.t_done
+
+    def _pop_pending(self, key) -> None:
+        self._pending.pop(key, None)
+        self._versions.pop(key, None)
+
+    def _readmit_queued(self, t_now: float) -> None:
+        """Re-admit the queued uploads (release -> re-price in ready
+        order) and re-key the event queue to the new completions."""
+        self._capacity_freed = False
+        if not self.readmit or not self._pending:
+            return
+        updated, _ = self.env.readmit(list(self._pending.values()), t_now)
+        self._pending = {p.key: p for p in updated}
+        self._queue = [
+            (p.decision.t_done, p.key, self._versions[p.key])
+            for p in self._pending.values()
+        ]
+        heapq.heapify(self._queue)
+        self._capacity_freed = False
+
+
+class _AsyncStar(FLStrategy, _StarMixin, _AsyncQueueMixin):
     """Shared machinery: every satellite loops download->train->upload
     independently; the server consumes an arrival stream."""
 
@@ -324,8 +365,7 @@ class _AsyncStar(FLStrategy, _StarMixin):
 
     def __init__(self, task: FederatedTask, sim: SimConfig):
         super().__init__(task, sim)
-        # (t_upload_done, client_id, t_model_version) priority queue
-        self._queue: List[Tuple[float, int, float]] = []
+        self._init_async_queue()
         for cid, client in enumerate(task.clients):
             self._push_next(cid, 0.0)
 
@@ -336,7 +376,7 @@ class _AsyncStar(FLStrategy, _StarMixin):
         if t_dl is None:
             return
         t_tr = t_dl + self.task.train_time_s(cid)
-        t_ul = self._first_tx(sat, t_tr, self.payload_bits, downlink=True)
+        t_ul = self._admit_upload(cid, sat, t_tr, self.payload_bits, t_dl)
         if t_ul is None:
             return
         heapq.heappush(self._queue, (t_ul, cid, t_dl))
@@ -346,9 +386,12 @@ class _AsyncStar(FLStrategy, _StarMixin):
         return self.mix_rate / (1.0 + stale_h) ** self.staleness_power
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        if self._capacity_freed:
+            self._readmit_queued(t)    # an external release freed capacity
         if not self._queue:
             return None, {"drained": True}
         t_ul, cid, t_version = heapq.heappop(self._queue)
+        self._pop_pending(cid)
         stacked = self.task.local_train(
             self.global_params, [cid], self._next_rng()
         )
@@ -386,9 +429,12 @@ class FedSat(_AsyncStar):
         self._next_agg = sim.constellation.period_s
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        if self._capacity_freed:
+            self._readmit_queued(t)
         if not self._queue:
             return None, {"drained": True}
         t_ul, cid, t_version = heapq.heappop(self._queue)
+        self._pop_pending(cid)
         self._buffer.append((cid, t_version))
         self._push_next(cid, t_ul)
         if t_ul < self._next_agg and self._queue:
@@ -429,9 +475,12 @@ class FedSpace(_AsyncStar):
         self._buffer: List[Tuple[int, float]] = []
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        if self._capacity_freed:
+            self._readmit_queued(t)
         if not self._queue:
             return None, {"drained": True}
         t_ul, cid, t_version = heapq.heappop(self._queue)
+        self._pop_pending(cid)
         self._buffer.append((cid, t_version))
         self._push_next(cid, t_ul)
         target = max(1, int(self.buffer_fraction * len(self.task.clients)))
@@ -461,7 +510,7 @@ class FedSpace(_AsyncStar):
         return t_ul, {"aggregated": len(cids)}
 
 
-class AsyncFLEO(FLStrategy, _StarMixin):
+class AsyncFLEO(FLStrategy, _StarMixin, _AsyncQueueMixin):
     """[4]: intra-plane propagation + per-orbit partials like FedLEO, but
     the sink is the next visitor (its visible-period sufficiency is NOT
     checked -> upload retries), and the server mixes partials in
@@ -473,7 +522,7 @@ class AsyncFLEO(FLStrategy, _StarMixin):
 
     def __init__(self, task: FederatedTask, sim: SimConfig):
         super().__init__(task, sim)
-        self._queue: List[Tuple[float, int, float]] = []
+        self._init_async_queue()
         for plane in range(sim.constellation.num_planes):
             self._schedule_plane(plane, 0.0)
 
@@ -481,10 +530,7 @@ class AsyncFLEO(FLStrategy, _StarMixin):
         sim, task = self.sim, self.task
         K = sim.constellation.sats_per_plane
         clients = self.plane_clients(plane)
-        dl = first_visible_download(
-            walker=self.walker, gs=self.gs_list, predictor=self.predictor,
-            link=sim.link, plane=plane, t=t, payload_bits=self.payload_bits,
-        )
+        dl = self.env.first_visible_download(plane, t, self.payload_bits)
         if dl is None:
             return
         src_slot, t_recv = dl
@@ -497,7 +543,7 @@ class AsyncFLEO(FLStrategy, _StarMixin):
         ]
         t_hop = isl_hop_time(sim.isl, self.payload_bits)
         t_ready0 = max(t_done)
-        sink = naive_sink_slot(self.predictor, plane, t_ready0)
+        sink = self.env.naive_sink_slot(plane, t_ready0)
         if sink is None:
             return
         t_ready = float(np.max(
@@ -506,18 +552,21 @@ class AsyncFLEO(FLStrategy, _StarMixin):
         # naive upload with retries (window chosen after the fact, not
         # scheduled ahead like FedLEO); the booked RB makes later plane
         # schedules compete for residual station capacity
-        t_ul = self._first_tx(
-            Satellite(plane, sink), t_ready, self.payload_bits,
-            downlink=True,
+        t_ul = self._admit_upload(
+            plane, Satellite(plane, sink), t_ready, self.payload_bits,
+            t_recv,
         )
         if t_ul is None:
             return
         heapq.heappush(self._queue, (t_ul, plane, t_recv))
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
+        if self._capacity_freed:
+            self._readmit_queued(t)
         if not self._queue:
             return None, {"drained": True}
         t_ul, plane, t_version = heapq.heappop(self._queue)
+        self._pop_pending(plane)
         clients = self.plane_clients(plane)
         stacked = self.task.local_train(
             self.global_params, clients, self._next_rng()

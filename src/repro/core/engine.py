@@ -22,16 +22,14 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.comms.environment import CommsEnvironment
 from repro.comms.isl import ISLConfig
-from repro.comms.ledger import GSResourceLedger
 from repro.comms.link import LinkConfig
 from repro.core.fltask import FederatedTask
 from repro.orbits.constellation import (
     ConstellationConfig,
     GroundStation,
-    WalkerDelta,
 )
-from repro.orbits.prediction import VisibilityPredictor
 from repro.orbits.topology import TopologyConfig
 
 PyTree = Any
@@ -78,6 +76,18 @@ class SimConfig:
     # rolling table grows on demand (capped at 1.5x horizon_hours) and
     # is bit-identical to the prebuilt one on overlapping ranges.
     rolling_horizon_hours: Optional[float] = None
+    # Event-driven async re-admission: the asynchronous strategies
+    # (_AsyncStar family, AsyncFLEO) book every upload at schedule
+    # time; with this on they register an on_release hook with their
+    # CommsEnvironment and re-admit queued uploads in model-ready
+    # order whenever a reservation RELEASES capacity
+    # (CommsEnvironment.readmit).  Releases come from env.release —
+    # an aborted/cancelled cycle, or any other component sharing the
+    # session; the stock strategies never abort a booked upload on
+    # their own, so until such an event fires the stream is identical
+    # to the book-at-schedule-time default.  False (default) does not
+    # arm the hook at all; meaningful only under RB contention.
+    async_readmit: bool = False
     noniid_alpha: float = 0.5             # non-IID-aware weighting blend
     use_kernel: bool = False              # Pallas aggregation path (TPU)
     seed: int = 0
@@ -130,34 +140,26 @@ class FLStrategy:
     def __init__(self, task: FederatedTask, sim: SimConfig):
         self.task = task
         self.sim = sim
-        self.walker = WalkerDelta(sim.constellation)
-        self.gs_list = list(sim.all_ground_stations)
+        # ONE scheduling session per strategy: the environment owns the
+        # predictor, the shared RB ledger and the handover policy, and
+        # every planning/booking call routes through it.
+        self.env = CommsEnvironment.from_sim(sim)
+        self.walker = self.env.walker
+        self.gs_list = list(self.env.ground_stations)
         self.gs = self.gs_list[0]
-        max_horizon_s = sim.horizon_hours * 3600.0 * 1.5
-        if sim.rolling_horizon_hours is not None:
-            self.predictor = VisibilityPredictor(
-                self.walker,
-                self.gs_list,
-                horizon_s=sim.rolling_horizon_hours * 3600.0,
-                coarse_step_s=sim.coarse_step_s,
-                rolling=True,
-                max_horizon_s=max_horizon_s,
-            )
-        else:
-            self.predictor = VisibilityPredictor(
-                self.walker,
-                self.gs_list,
-                horizon_s=max_horizon_s,
-                coarse_step_s=sim.coarse_step_s,
-            )
-        # shared per-station RB capacity view; None = contention-free
-        self.ledger = (
-            GSResourceLedger(len(self.gs_list), sim.gs_rb_capacity)
-            if sim.gs_rb_capacity is not None else None
-        )
         self.global_params = task.global_params
         self.rng = jax.random.PRNGKey(sim.seed)
         self.round_index = 0
+
+    @property
+    def predictor(self):
+        """The session's visibility predictor (back-compat alias)."""
+        return self.env.predictor
+
+    @property
+    def ledger(self):
+        """The session's RB ledger, or None (back-compat alias)."""
+        return self.env.ledger
 
     # -- helpers ---------------------------------------------------------------
     def _next_rng(self) -> jax.Array:
@@ -185,10 +187,9 @@ class FLStrategy:
         history: List[HistoryPoint] = []
         t = 0.0
         while t < max_s and (max_rounds is None or self.round_index < max_rounds):
-            if self.ledger is not None:
-                # simulated time is monotone: bookings that ended before
-                # this round can never affect another fit
-                self.ledger.release_before(t)
+            # simulated time is monotone: bookings that ended before
+            # this round can never affect another fit
+            self.env.release_before(t)
             t_next, events = self.step(t)
             if t_next is None or t_next <= t:
                 break  # no feasible progress inside the horizon

@@ -41,26 +41,15 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.comms.environment import CommsEnvironment
 from repro.comms.isl import ISLConfig, isl_hop_time
 from repro.comms.ledger import GSResourceLedger
-from repro.comms.link import LinkConfig, downlink_time
+from repro.comms.link import LinkConfig
 from repro.comms.routing import ISLPlan, RoutingTable
 from repro.core import aggregation
 from repro.core.engine import FLStrategy, SimConfig
 from repro.core.propagation import ring_hops_matrix
-from repro.core.scheduling import (
-    ClusterSinkDecision,
-    HandoverSpec,
-    SinkDecision,
-    earliest_transfer,
-    first_visible_download,
-    first_visible_download_sats,
-    naive_sink_slot,
-    reserve_decision,
-    select_sink,
-    select_sink_cluster,
-    symmetric_transfer,
-)
+from repro.core.scheduling import ClusterSinkDecision, SinkDecision
 from repro.orbits.constellation import Satellite, WalkerDelta
 from repro.orbits.prediction import VisibilityPredictor
 from repro.orbits.topology import get_isl_topology
@@ -93,67 +82,68 @@ class ClusterPlan:
 
 
 def _naive_sink_decision(
+    env: CommsEnvironment,
     *,
-    walker: WalkerDelta,
-    predictor: VisibilityPredictor,
-    link: LinkConfig,
     isl: ISLConfig,
     plane: int,
     t_train_done: Sequence[float],
     payload_bits: float,
-    ledger: Optional[GSResourceLedger] = None,
-    handover: bool = False,
 ) -> Optional[SinkDecision]:
     """Ablation sink: first visitor after training, AW duration NOT
     checked — uploads that do not fit a window retry at the next one
     (the failure mode the paper's scheduler avoids)."""
-    K = walker.config.sats_per_plane
+    K = env.walker.config.sats_per_plane
     t_hop = isl_hop_time(isl, payload_bits)
     t_ready0 = max(t_train_done)
-    sink = naive_sink_slot(predictor, plane, t_ready0)
+    sink = env.naive_sink_slot(plane, t_ready0)
     if sink is None:
         return None
     t_ready = float(np.max(
         np.asarray(t_train_done, dtype=np.float64)
         + ring_hops_matrix(K)[sink] * t_hop
     ))
-    # upload with retries across this sink's windows (with handover,
-    # raced against a segmented station-switching plan)
-    tt = symmetric_transfer(downlink_time, link, payload_bits)
-    hit = earliest_transfer(
-        walker=walker, predictor=predictor,
-        sat=Satellite(plane, sink), t=t_ready, transfer_time=tt,
-        ledger=ledger,
-        handover=HandoverSpec(link, payload_bits) if handover else None,
-    )
-    if hit is None:
+    # upload with retries across this sink's windows (per the session's
+    # handover policy, raced against a segmented station-switching plan)
+    dec = env.plan_upload(Satellite(plane, sink), t_ready, payload_bits)
+    if dec is None:
         return None
-    if handover:
-        t0, t_done, w, segments = hit
-    else:
-        t0, t_done, w = hit
-        segments = ()
     return SinkDecision(
-        plane=plane, sink_slot=sink, window=w,
-        t_models_at_sink=t_ready, t_upload_start=t0,
-        t_upload_done=t_done,
-        t_wait=max(0.0, w.t_start - t_ready),
+        plane=plane, sink_slot=sink, window=dec.window,
+        t_models_at_sink=t_ready, t_upload_start=dec.t_start,
+        t_upload_done=dec.t_done,
+        t_wait=max(0.0, dec.window.t_start - t_ready),
         candidates_considered=1,
-        segments=segments,
+        segments=dec.segments,
+    )
+
+
+def _resolve_env(
+    env: Optional[CommsEnvironment],
+    walker, gs_list, predictor, link, ledger, handover,
+) -> CommsEnvironment:
+    """The planners' session: the one the caller holds (strategies,
+    benchmarks), or an ephemeral one assembled from the legacy explicit
+    arguments (which also runs the gs-matches-predictor check)."""
+    if env is not None:
+        return env
+    return CommsEnvironment(
+        walker=walker, predictor=predictor, link=link,
+        ledger=ledger, handover=handover, gs=gs_list,
     )
 
 
 def plan_plane_round(
     *,
-    walker: WalkerDelta,
-    gs_list,
-    predictor: VisibilityPredictor,
-    link: LinkConfig,
-    isl: ISLConfig,
     plane: int,
     t: float,
     payload_bits: float,
     train_times: np.ndarray,
+    isl: ISLConfig,
+    env: Optional[CommsEnvironment] = None,
+    walker: Optional[WalkerDelta] = None,
+    gs_list=None,
+    predictor: Optional[VisibilityPredictor] = None,
+    link: Optional[LinkConfig] = None,
     sink_policy: str = "scheduled",
     require_next_download: bool = False,
     ledger: Optional[GSResourceLedger] = None,
@@ -164,18 +154,21 @@ def plan_plane_round(
     ``train_times``) -> sink selection.  Returns None when no feasible
     window exists inside the predictor horizon.
 
-    With a ``ledger`` the sink upload is priced against the residual
+    Planning routes through a ``CommsEnvironment`` session — pass one
+    via ``env`` (its ledger/handover policy then applies), or the
+    legacy explicit ``walker``/``gs_list``/``predictor``/``link``/
+    ``ledger``/``handover`` arguments to assemble an ephemeral session.
+    The session's ledger prices the sink upload against residual
     per-station RB capacity; the caller books the returned plan
-    (``reserve_decision(ledger, plan.decision)``) before planning the
-    next group.  The GS download is a full-band broadcast of the same
-    global model (eq. 15) and is not RB-contended.  ``handover``
-    additionally lets the upload split into station-handover segments
+    (``env.commit(plan.decision)``) before planning the next group.
+    The GS download is a full-band broadcast of the same global model
+    (eq. 15) and is not RB-contended.  The handover policy additionally
+    lets the upload split into station-handover segments
     (``SimConfig.gs_handover``)."""
-    K = walker.config.sats_per_plane
-    dl = first_visible_download(
-        walker=walker, gs=gs_list, predictor=predictor, link=link,
-        plane=plane, t=t, payload_bits=payload_bits,
-    )
+    env = _resolve_env(env, walker, gs_list, predictor, link, ledger,
+                       handover)
+    K = env.walker.config.sats_per_plane
+    dl = env.first_visible_download(plane, t, payload_bits)
     if dl is None:
         return None
     src_slot, t_recv = dl
@@ -185,18 +178,15 @@ def plan_plane_round(
     t_train_done = t_receive + np.asarray(train_times, dtype=np.float64)
 
     if sink_policy == "scheduled":
-        decision = select_sink(
-            walker=walker, gs=gs_list, predictor=predictor, link=link,
-            isl=isl, plane=plane, t_train_done=t_train_done,
+        decision = env.select_sink(
+            plane=plane, t_train_done=t_train_done,
             payload_bits=payload_bits,
-            require_next_download=require_next_download, ledger=ledger,
-            handover=handover,
+            require_next_download=require_next_download, isl=isl,
         )
     else:
         decision = _naive_sink_decision(
-            walker=walker, predictor=predictor, link=link, isl=isl,
-            plane=plane, t_train_done=t_train_done,
-            payload_bits=payload_bits, ledger=ledger, handover=handover,
+            env, isl=isl, plane=plane, t_train_done=t_train_done,
+            payload_bits=payload_bits,
         )
     if decision is None:
         return None
@@ -208,15 +198,16 @@ def plan_plane_round(
 
 def plan_cluster_round(
     *,
-    walker: WalkerDelta,
-    gs_list,
-    predictor: VisibilityPredictor,
-    link: LinkConfig,
     routing: RoutingTable,
     planes: Sequence[int],
     t: float,
     payload_bits: float,
     train_times: np.ndarray,
+    env: Optional[CommsEnvironment] = None,
+    walker: Optional[WalkerDelta] = None,
+    gs_list=None,
+    predictor: Optional[VisibilityPredictor] = None,
+    link: Optional[LinkConfig] = None,
     require_next_download: bool = False,
     ledger: Optional[GSResourceLedger] = None,
     handover: bool = False,
@@ -225,18 +216,18 @@ def plan_cluster_round(
     seeds a flood across every plane of the cluster, and one
     constellation-wide sink collects the cluster over cross-plane relay.
     With a single-plane cluster and a ring topology this degenerates to
-    ``plan_plane_round`` exactly (bit-identical schedules).  Ledger and
-    ``handover`` semantics as in ``plan_plane_round``: candidate sinks
-    are priced against residual station capacity (and may split their
-    upload across stations), the caller reserves."""
-    K = walker.config.sats_per_plane
+    ``plan_plane_round`` exactly (bit-identical schedules).  Session
+    (``env`` vs legacy explicit arguments), ledger and handover
+    semantics as in ``plan_plane_round``: candidate sinks are priced
+    against residual station capacity (and may split their upload
+    across stations), the caller commits."""
+    env = _resolve_env(env, walker, gs_list, predictor, link, ledger,
+                       handover)
+    K = env.walker.config.sats_per_plane
     sats = [(p, s) for p in planes for s in range(K)]
     nodes = routing.nodes_of(sats)
 
-    dl = first_visible_download_sats(
-        walker=walker, gs=gs_list, predictor=predictor, link=link,
-        sats=sats, t=t, payload_bits=payload_bits,
-    )
+    dl = env.first_visible_download_sats(sats, t, payload_bits)
     if dl is None:
         return None
     src_i, t_recv = dl
@@ -247,12 +238,10 @@ def plan_cluster_round(
     t_train_done = t_receive + np.asarray(train_times, dtype=np.float64)
 
     _, relay_latency = routing.submatrix(nodes)
-    decision = select_sink_cluster(
-        walker=walker, gs=gs_list, predictor=predictor, link=link,
+    decision = env.select_sink_cluster(
         sats=sats, relay_latency=relay_latency,
         t_train_done=t_train_done, payload_bits=payload_bits,
-        require_next_download=require_next_download, ledger=ledger,
-        handover=handover,
+        require_next_download=require_next_download,
     )
     if decision is None:
         return None
@@ -423,7 +412,7 @@ class _SyncRoundMixin:
             plan = plan_group(group, clients)
             if plan is None:
                 return None, fail_event(group)
-            reserve_decision(self.ledger, plan.decision)
+            self.env.commit(plan.decision)
 
             stacked = task.local_train(
                 self.global_params, clients, self._next_rng()
@@ -477,16 +466,13 @@ class FedLEO(_SyncRoundMixin, FLStrategy):
         def plan_group(group, clients):
             (plane,) = group
             return plan_plane_round(
-                walker=self.walker, gs_list=self.gs_list,
-                predictor=self.predictor, link=sim.link, isl=sim.isl,
+                env=self.env, isl=sim.isl,
                 plane=plane, t=t, payload_bits=self.payload_bits,
                 train_times=np.array(
                     [task.train_time_s(c) for c in clients]
                 ),
                 sink_policy=self.sink_policy,
                 require_next_download=self.require_next_download,
-                ledger=self.ledger,
-                handover=sim.gs_handover,
             )
 
         def group_stats(plan):
@@ -579,16 +565,13 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
 
         def plan_group(group, clients):
             return plan_cluster_round(
-                walker=self.walker, gs_list=self.gs_list,
-                predictor=self.predictor, link=sim.link,
+                env=self.env,
                 routing=self.routing, planes=group, t=t,
                 payload_bits=self.payload_bits,
                 train_times=np.array(
                     [task.train_time_s(c) for c in clients]
                 ),
                 require_next_download=self.require_next_download,
-                ledger=self.ledger,
-                handover=sim.gs_handover,
             )
 
         def group_stats(plan):

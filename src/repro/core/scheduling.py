@@ -52,6 +52,17 @@ Consecutive legs must switch stations, and a segmented plan is adopted
 only when it strictly beats the single-window completion — so
 handover-off, single-GS, and never-splitting runs stay bit-identical
 to the unsegmented scheduler.
+
+Session API: the canonical owner of the (predictor, ledger, handover)
+state is now ``repro.comms.environment.CommsEnvironment`` — strategies
+hold ONE session and plan through its typed methods (``plan_upload``,
+``select_sink``, ``commit``/``release``).  The public free functions
+below (``earliest_transfer``, ``select_sink``, ``select_sink_cluster``,
+``naive_sink_slot``, ``first_visible_download[_sats]``) remain as thin
+shims that build an ephemeral session from their explicit arguments
+and delegate, so legacy callers and the environment agree bit-for-bit
+(golden-tested in ``tests/test_comms_environment.py``).  The private
+``*_impl`` functions hold the actual machinery both surfaces share.
 """
 from __future__ import annotations
 
@@ -75,7 +86,6 @@ from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
 from repro.orbits.prediction import (
     GroundStations,
     VisibilityPredictor,
-    as_gs_list,
 )
 from repro.orbits.visibility import VisibilityWindow
 
@@ -298,35 +308,68 @@ def plan_segmented_transfer(
         def candidate(t: float, last_gs: Optional[int], excl: set):
             """Earliest usable free stretch over all windows after t:
             (fa, fb, ws, we, gi, j, d, t_over, rate), ties resolved to
-            the faster station then window order."""
-            best, best_key = None, None
+            the faster station then window order.
+
+            Slant ranges are evaluated in batched rounds — one
+            ``_slant_ranges`` call covering every still-active window's
+            current free stretch, exactly as ``_resolve_first_fits``
+            does — instead of a scalar ``_distance_at`` sweep per
+            (window, stretch).  A window whose stretch is too short to
+            deliver any bits advances to its next free stretch in the
+            following round; a window whose stretch starts after the
+            best key so far can never win (its later stretches start
+            later still) and drops out.  The winner is the same minimum
+            the scalar scan found: windows are start-ordered and the
+            key orders on the stretch start first, so evaluating the
+            full candidate set changes nothing but the wall time.
+            """
+            runs = {}                       # window -> its free stretches
             for j in range(starts.size):
                 ws, we = float(starts[j]), float(ends[j])
                 gi = int(gs_idx[j])
                 if we <= t or j in excl:
                     continue
-                if best_key is not None and ws > best_key[0]:
-                    break       # start-ordered: strictly-later windows
-                                # cannot improve; same-start windows can
-                                # still win the faster-station tie-break
                 if last_gs is not None and gi == last_gs:
                     continue                # a handover must switch stations
                 if skip_window is not None and skip_window(
                     VisibilityWindow(sat.plane, sat.slot, ws, we, gi)
                 ):
                     continue
-                for fa, fb in free_runs(gi, max(ws, t), we):
-                    d = _distance_at(walker, gss[gi], sat, fa)
+                fr = free_runs(gi, max(ws, t), we)
+                if fr:
+                    runs[j] = fr
+            best, best_key = None, None
+            ptr = {j: 0 for j in runs}
+            active = list(runs)             # ascending window order
+            while active:
+                fas = np.array([runs[j][ptr[j]][0] for j in active])
+                gis = np.array([int(gs_idx[j]) for j in active])
+                dists = _slant_ranges(
+                    walker, gss, gis,
+                    np.full(len(active), sat.plane),
+                    np.full(len(active), sat.slot), fas,
+                )
+                nxt = []
+                for j, fa, d in zip(active, fas, dists):
+                    fa, d = float(fa), float(d)
+                    if best_key is not None and fa > best_key[0]:
+                        continue            # cannot beat the best stretch
+                    fb = runs[j][ptr[j]][1]
+                    gi = int(gs_idx[j])
                     t_over = propagation_time(d) + link.processing_delay_s
                     if fb - fa <= t_over:
-                        continue            # too short to deliver any bits
+                        ptr[j] += 1         # too short to deliver any bits
+                        if ptr[j] < len(runs[j]):
+                            nxt.append(j)   # later stretches start later
+                        continue
                     rate = shannon_rate(link, d, link.rb_bandwidth_hz)
                     key = (fa, -rate, gi, j)
                     if best_key is None or key < best_key:
                         best_key, best = key, (
-                            fa, fb, ws, we, gi, j, d, t_over, rate
+                            fa, fb, float(starts[j]), float(ends[j]),
+                            gi, j, d, t_over, rate,
                         )
-                    break                   # later stretches start later
+                active = nxt
             return best
 
         segments = []
@@ -623,6 +666,37 @@ def earliest_transfer(
     ledger: Optional[GSResourceLedger] = None,
     handover: Optional[HandoverSpec] = None,
 ) -> Optional[Tuple]:
+    """Legacy shim over ``CommsEnvironment.plan_transfer``: builds an
+    ephemeral session from the explicit (walker, predictor, ledger)
+    arguments and delegates.  Same contract as always — (t0, t_done,
+    window) or, with a ``handover`` spec, (t0, t_done, window,
+    segments) — and bit-identical to the session API (golden-tested).
+    New code should hold a ``CommsEnvironment`` and call
+    ``plan_upload``/``plan_download``/``plan_transfer`` instead."""
+    from repro.comms.environment import CommsEnvironment
+
+    env = CommsEnvironment(
+        walker=walker, predictor=predictor,
+        link=handover.link if handover is not None else None,
+        ledger=ledger, handover=handover is not None,
+    )
+    return env.plan_transfer(
+        sat=sat, t=t, transfer_time=transfer_time,
+        skip_window=skip_window, handover_spec=handover,
+    )
+
+
+def _earliest_transfer_impl(
+    *,
+    walker: WalkerDelta,
+    predictor: VisibilityPredictor,
+    sat: Satellite,
+    t: float,
+    transfer_time,  # (gs_index, distance) -> (need_s, done_s)
+    skip_window=None,
+    ledger: Optional[GSResourceLedger] = None,
+    handover: Optional[HandoverSpec] = None,
+) -> Optional[Tuple]:
     """Earliest-completing feasible transfer of one satellite after t:
     (t0, t_done, window), or None.
 
@@ -797,31 +871,20 @@ def select_sink(
       The SinkDecision, or None if no feasible window exists in the
       predictor's horizon (a rolling predictor extends and retries
       before giving up).
+
+    Legacy shim: delegates to ``CommsEnvironment.select_sink`` (the
+    ring is the degenerate graph — eq. 21's hop metric as a relay-
+    latency matrix over the one shared cluster scheduler).
     """
-    K = walker.config.sats_per_plane
-    t_hop = isl_hop_time(isl, payload_bits)
-    # the ring is the degenerate graph: eq. 21's hop metric as a relay-
-    # latency matrix, then the one shared cluster scheduler
-    cd = select_sink_cluster(
-        walker=walker, gs=gs, predictor=predictor, link=link,
-        sats=[(plane, s) for s in range(K)],
-        relay_latency=ring_hops_matrix(K) * t_hop,
-        t_train_done=t_train_done, payload_bits=payload_bits,
-        require_next_download=require_next_download, ledger=ledger,
-        handover=handover,
+    from repro.comms.environment import CommsEnvironment
+
+    env = CommsEnvironment(
+        walker=walker, predictor=predictor, link=link, isl=isl,
+        ledger=ledger, handover=handover, gs=gs,
     )
-    if cd is None:
-        return None
-    return SinkDecision(
-        plane=plane,
-        sink_slot=cd.sink.slot,
-        window=cd.window,
-        t_models_at_sink=cd.t_models_at_sink,
-        t_upload_start=cd.t_upload_start,
-        t_upload_done=cd.t_upload_done,
-        t_wait=cd.t_wait,
-        candidates_considered=cd.candidates_considered,
-        segments=cd.segments,
+    return env.select_sink(
+        plane=plane, t_train_done=t_train_done, payload_bits=payload_bits,
+        require_next_download=require_next_download,
     )
 
 
@@ -840,15 +903,16 @@ def first_visible_download(
 
     The GS broadcasts over the full uplink bandwidth; the first visible
     satellite of the plane becomes the propagation source.
+
+    Legacy shim over ``CommsEnvironment.first_visible_download`` (the
+    gs-matches-predictor check now lives in the session constructor).
     """
-    assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
-        "predictor was built over a different ground segment"
-    K = walker.config.sats_per_plane
-    return first_visible_download_sats(
-        walker=walker, gs=gs, predictor=predictor, link=link,
-        sats=[(plane, s) for s in range(K)], t=t,
-        payload_bits=payload_bits, _skip_gs_check=True,
+    from repro.comms.environment import CommsEnvironment
+
+    env = CommsEnvironment(
+        walker=walker, predictor=predictor, link=link, gs=gs,
     )
+    return env.first_visible_download(plane, t, payload_bits)
 
 
 def first_visible_download_sats(
@@ -865,10 +929,30 @@ def first_visible_download_sats(
     """Earliest (index into ``sats``, t_received) at which ANY of the
     listed satellites can finish downloading w^t from the GS after time
     t — ``first_visible_download`` over an arbitrary satellite set (a
-    cluster of planes under the grid topology)."""
-    if not _skip_gs_check:
-        assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
-            "predictor was built over a different ground segment"
+    cluster of planes under the grid topology).
+
+    Legacy shim over ``CommsEnvironment.first_visible_download_sats``.
+    """
+    from repro.comms.environment import CommsEnvironment
+
+    env = CommsEnvironment(
+        walker=walker, predictor=predictor, link=link,
+        gs=None if _skip_gs_check else gs,
+    )
+    return env.first_visible_download_sats(sats, t, payload_bits)
+
+
+def _first_visible_download_sats_impl(
+    *,
+    walker: WalkerDelta,
+    predictor: VisibilityPredictor,
+    link: LinkConfig,
+    sats: Sequence[Tuple[int, int]],
+    t: float,
+    payload_bits: float,
+) -> Optional[tuple]:
+    """The resolution machinery behind ``first_visible_download_sats``
+    (and the session method of the same name)."""
     sats = list(sats)
     fits = _first_fit_transfers(
         walker=walker, predictor=predictor, sats=sats,
@@ -889,6 +973,15 @@ def first_visible_download_sats(
 
 
 def naive_sink_slot(
+    predictor: VisibilityPredictor, plane: int, t_ready: float
+) -> Optional[int]:
+    """Legacy shim over ``CommsEnvironment.naive_sink_slot`` with an
+    explicit predictor (the session holds no other state this query
+    touches); both call the one ``_naive_sink_slot_impl``."""
+    return _naive_sink_slot_impl(predictor, plane, t_ready)
+
+
+def _naive_sink_slot_impl(
     predictor: VisibilityPredictor, plane: int, t_ready: float
 ) -> Optional[int]:
     """The naive-sink ablation's slot choice: the plane's next visitor
@@ -944,6 +1037,35 @@ def select_sink_cluster(
     ledger: Optional[GSResourceLedger] = None,
     handover: bool = False,
 ) -> Optional[ClusterSinkDecision]:
+    """Legacy shim over ``CommsEnvironment.select_sink_cluster`` —
+    builds an ephemeral session from the explicit arguments (which
+    also runs the gs-matches-predictor check) and delegates."""
+    from repro.comms.environment import CommsEnvironment
+
+    env = CommsEnvironment(
+        walker=walker, predictor=predictor, link=link,
+        ledger=ledger, handover=handover, gs=gs,
+    )
+    return env.select_sink_cluster(
+        sats=sats, relay_latency=relay_latency, t_train_done=t_train_done,
+        payload_bits=payload_bits,
+        require_next_download=require_next_download,
+    )
+
+
+def _select_sink_cluster_impl(
+    *,
+    walker: WalkerDelta,
+    predictor: VisibilityPredictor,
+    link: LinkConfig,
+    sats: Sequence[Tuple[int, int]],
+    relay_latency: np.ndarray,
+    t_train_done: Sequence[float],
+    payload_bits: float,
+    require_next_download: bool = False,
+    ledger: Optional[GSResourceLedger] = None,
+    handover: bool = False,
+) -> Optional[ClusterSinkDecision]:
     """Constellation-wide sink selection over an arbitrary satellite set.
 
     The eq. (21)/(22) machinery of ``select_sink`` with the ring hop
@@ -961,8 +1083,6 @@ def select_sink_cluster(
     segmented plans (a candidate with no single long-enough window can
     still win through a split upload).
     """
-    assert tuple(as_gs_list(gs)) == predictor.ground_stations, \
-        "predictor was built over a different ground segment"
     sats = list(sats)
     planes = tuple(sorted({p for p, _ in sats}))
     t_ready = np.max(

@@ -16,6 +16,9 @@ Invariants:
     duration;
   * unlimited capacity makes the ledger a no-op (``earliest_fit`` is
     the identity on the lower bound) no matter what was reserved;
+  * ``reserve`` -> ``release`` round-trips the ledger to its prior
+    occupancy (any release order), and releasing a never-booked
+    interval raises;
   * segmented plans conserve the payload bits exactly, serialize their
     legs, alternate stations, stay inside their windows, and never
     transmit through a saturated stretch.
@@ -139,11 +142,51 @@ def _check_segmented_plan(payload, t_ready, plane, slot, bookings):
         assert prev.gs_index != nxt.gs_index
 
 
+def _ledger_state(led):
+    """Comparable snapshot of a ledger's full occupancy state."""
+    return [
+        (
+            sorted(zip(*map(tuple, led.reservations(gi)))),
+            tuple(map(tuple, led.busy_intervals(gi))),
+            tuple(map(tuple, led.free_runs(gi, 0.0, _HI))),
+        )
+        for gi in range(led.num_stations)
+    ]
+
+
+def _check_release_round_trip(cap, reqs, extra):
+    """``reserve`` -> ``release`` round-trips the ledger to its prior
+    occupancy (busy intervals, free runs and the reservation list are
+    all restored), in any release order; releasing an interval that was
+    never booked raises."""
+    led = GSResourceLedger(_NUM_STATIONS, cap)
+    for lo, d, gi in reqs:
+        led.reserve(gi, lo, lo + d)
+    before = _ledger_state(led)
+    placed = []
+    for lo, d, gi in extra:
+        t0 = led.earliest_fit(gi, lo, _HI, d)
+        led.reserve(gi, t0, t0 + d)
+        placed.append((gi, t0, t0 + d))
+    # interleaved order: releases need not mirror the booking order
+    for gi, t0, t1 in placed[1::2] + placed[0::2]:
+        led.release(gi, t0, t1)
+    assert _ledger_state(led) == before
+    with np.testing.assert_raises(ValueError):
+        led.release(0, -2.0, -1.0)          # never booked
+
+
 # --- hypothesis entry points --------------------------------------------------
 @given(cap=_caps, reqs=_requests)
 @settings(max_examples=25, deadline=None)
 def test_occupancy_never_exceeds_capacity(cap, reqs):
     _check_capacity_respected(cap, reqs)
+
+
+@given(cap=_caps, reqs=_requests, extra=_requests)
+@settings(max_examples=25, deadline=None)
+def test_reserve_release_round_trips(cap, reqs, extra):
+    _check_release_round_trip(cap, reqs, extra)
 
 
 @given(cap=_caps, reqs=_requests, lo1=_times, lo2=_times, dur=_durations)
@@ -184,7 +227,13 @@ def test_invariants_random_sweep():
             for _ in range(n)
         ]
         cap = int(rng.integers(1, 5))
+        extra = [
+            (float(rng.uniform(0, 1e5)), float(rng.uniform(1e-3, 1e4)),
+             int(rng.integers(0, _NUM_STATIONS)))
+            for _ in range(int(rng.integers(1, 8)))
+        ]
         _check_capacity_respected(cap, reqs)
+        _check_release_round_trip(cap, reqs, extra)
         _check_earliest_fit_monotone(
             cap, reqs, float(rng.uniform(0, 1e5)),
             float(rng.uniform(0, 1e5)), float(rng.uniform(1e-3, 1e4)),
