@@ -9,7 +9,15 @@ record per ground-station set:
   * grid round <= ring round under RB contention,
   * handover round <= no-handover round at 1-RB scarcity,
   * async re-admission round <= book-at-schedule baseline (and its
-    mean no worse), when the record carries the async arms.
+    mean no worse), when the record carries the async arms,
+
+plus the predictor query-latency floor on the latest
+``predictor_queries`` record (the 2.86 -> 16.77 us/query regression
+this floor exists to catch: ``next_window``/``wait_time`` must stay
+bisect-indexed, not re-materialize the full window list per call).
+
+A missing trajectory file is a warning, not a failure (a fresh clone
+or a CI job that skipped the smokes has no floors to assert yet).
 
 Run after the contention smoke so "latest" reflects the code under
 test:  PYTHONPATH=src python -m benchmarks.check_floors
@@ -17,10 +25,16 @@ test:  PYTHONPATH=src python -m benchmarks.check_floors
 from __future__ import annotations
 
 import json
+import os
 import sys
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from benchmarks.common import BENCH_TRAJECTORY
+
+# generous ceiling over the healthy ~3 us/query (the regressed
+# implementation sat at 16.77): catches an O(windows) query path
+# without flaking on a loaded CI runner
+US_PER_QUERY_FLOOR = 10.0
 
 
 def load_latest_contention(path: str = BENCH_TRAJECTORY) -> List[Dict]:
@@ -47,6 +61,36 @@ def load_latest_contention(path: str = BENCH_TRAJECTORY) -> List[Dict]:
         key = tuple(rec.get("ground_stations") or ())
         latest[key] = rec               # later lines win: append-only
     return [latest[k] for k in sorted(latest)]
+
+
+def load_latest_predictor(path: str = BENCH_TRAJECTORY) -> Optional[Dict]:
+    """Latest ``predictor_queries`` record, or None."""
+    latest: Optional[Dict] = None
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        return None
+    for line in lines:
+        try:
+            rec = json.loads(line.strip())
+        except json.JSONDecodeError:
+            continue
+        if isinstance(rec, dict) and rec.get("bench") == "predictor_queries":
+            latest = rec
+    return latest
+
+
+def check_predictor(rec: Optional[Dict]) -> List[str]:
+    if rec is None:
+        return []                       # no record yet: nothing to assert
+    us = rec.get("us_per_query")
+    if us is not None and us > US_PER_QUERY_FLOOR:
+        return [
+            f"predictor_queries: {us} us/query > floor "
+            f"{US_PER_QUERY_FLOOR} (bisect-indexed queries regressed)"
+        ]
+    return []
 
 
 def check(records: List[Dict]) -> List[str]:
@@ -91,8 +135,22 @@ def check(records: List[Dict]) -> List[str]:
 
 
 def main() -> None:
+    if not os.path.exists(BENCH_TRAJECTORY):
+        print(
+            f"WARNING: {BENCH_TRAJECTORY} not found — no BENCH "
+            "trajectory to assert floors on; skipping",
+            file=sys.stderr,
+        )
+        return
     records = load_latest_contention()
     failures = check(records)
+    pred = load_latest_predictor()
+    failures += check_predictor(pred)
+    if pred is not None:
+        print(
+            f"# checked predictor_queries: {pred.get('us_per_query')} "
+            f"us/query (floor {US_PER_QUERY_FLOOR})"
+        )
     for r in records:
         print(
             f"# checked {len(r.get('ground_stations', []))} GS: "

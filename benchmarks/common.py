@@ -96,13 +96,15 @@ def timed(fn: Callable) -> tuple:
 
 
 def make_comms_env(sim, *, predictor=None, walker=None, capacity=None,
-                   handover: bool = False):
+                   handover: bool = False, sanitize: bool = False):
     """A benchmark-arm ``CommsEnvironment``: share one (expensive)
     predictor across arms (pass the base arm's ``predictor``/
     ``walker``), give each arm its own fresh ledger and handover
     policy.  ``capacity=None`` is the contention-free arm.  Session
     construction is ``CommsEnvironment.from_sim`` — the one recipe —
-    so benchmark arms and strategies always agree on the predictor."""
+    so benchmark arms and strategies always agree on the predictor.
+    ``sanitize`` attaches a strict ``ScheduleSanitizer`` to the arm
+    (the ``--quick`` smoke configuration; timed arms leave it off)."""
     from repro.comms.environment import CommsEnvironment
     from repro.comms.ledger import GSResourceLedger
 
@@ -117,7 +119,7 @@ def make_comms_env(sim, *, predictor=None, walker=None, capacity=None,
         GSResourceLedger(len(env.ground_stations), capacity)
         if capacity is not None else None
     )
-    return env.derive(ledger=ledger, handover=handover)
+    return env.derive(ledger=ledger, handover=handover, sanitize=sanitize)
 
 
 def price_ring_round(

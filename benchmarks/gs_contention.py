@@ -59,7 +59,7 @@ from benchmarks.common import (
     price_grid_round,
     price_ring_round,
 )
-from repro.comms.routing import ISLPlan, RoutingTable
+from repro.comms.routing import ISLPlan, get_routing_table
 from repro.configs.constellations import make_sim_config
 
 CONSTELLATION = "starlink-40x22"
@@ -71,9 +71,7 @@ TRAIN_TIME_S = 600.0
 HEAVY_FACTOR = 4        # 4x model: one upload outlasts any single pass
 
 
-def run(gs_sets=GS_SETS) -> List[dict]:
-    from repro.orbits.topology import get_isl_topology
-
+def run(gs_sets=GS_SETS, sanitize: bool = False) -> List[dict]:
     rows = []
     routing = None
     for gs_names in gs_sets:
@@ -83,18 +81,20 @@ def run(gs_sets=GS_SETS) -> List[dict]:
         )
         # one predictor per GS set, one session per arm (fresh ledger)
         base_env = make_comms_env(sim)
+        arms_made = []
 
         def arm(capacity, handover=False):
-            return make_comms_env(
+            env = make_comms_env(
                 sim, predictor=base_env.predictor, walker=base_env.walker,
-                capacity=capacity, handover=handover,
+                capacity=capacity, handover=handover, sanitize=sanitize,
             )
+            arms_made.append(env)
+            return env
 
         if routing is None:
-            topology = get_isl_topology(sim.constellation, sim.topology)
-            routing = RoutingTable(
-                topology, ISLPlan(intra=sim.isl, inter=sim.isl_inter),
-                PAYLOAD_BITS,
+            routing = get_routing_table(
+                sim.constellation, sim.topology,
+                ISLPlan(intra=sim.isl, inter=sim.isl_inter), PAYLOAD_BITS,
             )
 
         t0 = time.perf_counter()
@@ -136,6 +136,12 @@ def run(gs_sets=GS_SETS) -> List[dict]:
             arm(1), train_time_s=TRAIN_TIME_S, readmit=True,
         )
         wall = time.perf_counter() - t0
+        # sanitized smokes: every arm's commits were invariant-checked
+        # live (strict mode raises on violation); the pricing functions
+        # never release their bookings, so run only the per-commit
+        # accounting close-out — no leak report on an open-ended arm
+        for env in arms_made:
+            env.finish_session(float("inf"), check_leaks=False)
 
         def _r(x):
             return None if x is None else round(x, 1)
@@ -202,9 +208,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="one ground-station set (CI smoke) — the 2-GS "
-                         "set, so the handover arms are meaningful")
+                         "set, so the handover arms are meaningful; "
+                         "runs with the schedule sanitizer attached")
     args = ap.parse_args()
-    rows = run(GS_SETS[1:2] if args.quick else GS_SETS)
+    # --quick is the CI smoke: price it sanitized (strict — a single
+    # invariant violation aborts the run).  Timed full runs stay
+    # unsanitized so the BENCH trajectory's wall numbers are clean.
+    rows = run(GS_SETS[1:2] if args.quick else GS_SETS,
+               sanitize=args.quick)
     for rec in rows:
         append_bench(rec)
     ok = all(

@@ -33,7 +33,7 @@ from benchmarks.common import (
     price_grid_round,
     price_ring_round,
 )
-from repro.comms.routing import ISLPlan, RoutingTable
+from repro.comms.routing import ISLPlan, get_routing_table
 from repro.configs.constellations import make_sim_config
 from repro.core.fedleo import make_clusters
 
@@ -47,12 +47,14 @@ TRAIN_TIME_S = 600.0
 
 
 def run(gs_sets=GS_SETS) -> List[dict]:
-    from repro.orbits.topology import get_isl_topology
-
     rows = []
-    # the ISL graph is GS-independent: build its routing table once
+    # the ISL graph is GS-independent: build its routing table once —
+    # and time the memoized re-lookup (``get_routing_table`` caches per
+    # (constellation, topology, plan, payload), so every strategy and
+    # benchmark arm after the first gets the table for free)
     routing = None
     t_routing = 0.0
+    t_routing_cached = 0.0
     for gs_names in gs_sets:
         sim = make_sim_config(
             CONSTELLATION, ground_stations=gs_names, topology="grid",
@@ -67,13 +69,17 @@ def run(gs_sets=GS_SETS) -> List[dict]:
         t_ring = time.perf_counter() - t0
 
         if routing is None:
+            plan = ISLPlan(intra=sim.isl, inter=sim.isl_inter)
             t0 = time.perf_counter()
-            topology = get_isl_topology(sim.constellation, sim.topology)
-            routing = RoutingTable(
-                topology, ISLPlan(intra=sim.isl, inter=sim.isl_inter),
-                PAYLOAD_BITS,
+            routing = get_routing_table(
+                sim.constellation, sim.topology, plan, PAYLOAD_BITS
             )
             t_routing = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            get_routing_table(
+                sim.constellation, sim.topology, plan, PAYLOAD_BITS
+            )
+            t_routing_cached = time.perf_counter() - t0
         t0 = time.perf_counter()
         # static clusters: this benchmark tracks the PR 2 floor
         grid = price_grid_round(
@@ -101,6 +107,7 @@ def run(gs_sets=GS_SETS) -> List[dict]:
             "plan_wall_ring_s": round(t_ring, 3),
             "plan_wall_grid_s": round(t_grid, 3),
             "routing_build_s": round(t_routing, 3),
+            "routing_build_cached_s": round(t_routing_cached, 6),
         })
     return rows
 

@@ -1,0 +1,21 @@
+"""Correctness tooling over the scheduling stack.
+
+Two complementary checkers keep the paper's feasibility constraints
+machine-checked instead of convention-checked:
+
+  * ``repro.analysis.sanitizer`` — the runtime ``ScheduleSanitizer``:
+    validates every committed ``TransferDecision``/``Reservation``
+    against the eq. 13-16 RB-capacity and eq. 15 window-containment
+    invariants while a simulation runs (``SimConfig.sanitize``).
+  * ``repro.analysis.lint`` — the static AST lint pass
+    (``python -m repro.analysis.lint``): repo-specific rules over
+    ``src/`` (ledger encapsulation, deprecated-shim calls, unit-suffix
+    discipline, wall-clock bans, annotation completeness).
+"""
+from repro.analysis.sanitizer import (
+    ScheduleSanitizer,
+    ScheduleViolation,
+    Violation,
+)
+
+__all__ = ["ScheduleSanitizer", "ScheduleViolation", "Violation"]

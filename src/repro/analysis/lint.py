@@ -1,0 +1,412 @@
+"""Repo-specific static lint over ``src/repro`` — run as
+``python -m repro.analysis.lint [paths...]``.
+
+AST-based rules encoding the conventions the scheduling stack depends
+on (each with a narrow, justified allow-list):
+
+  ledger-encapsulation   ``GSResourceLedger`` booking state is mutated
+                         (``reserve``/``release``/``release_before``)
+                         only inside ``CommsEnvironment`` (and the
+                         ledger itself); everything else goes through
+                         the session's ``commit``/``release`` so the
+                         sanitizer and the ``on_release`` listeners see
+                         every booking.
+  deprecated-shim        no *new* ``src/`` calls to the PR-5 legacy
+                         free-function shims in ``core/scheduling.py``
+                         (``select_sink``, ``reserve_decision``, ...);
+                         they remain only as a back-compat surface for
+                         external callers and the equivalence tests.
+  unit-suffix            numeric fields of scheduling dataclasses carry
+                         their unit in the name (``_s``/``_bits``/
+                         ``_hz``/``_bps``/...) or sit in the central
+                         exemption table below with a justification —
+                         mixed-unit bugs (seconds vs hours, bits vs
+                         bytes) are the classic scheduling failure.
+  wall-clock             no wall-clock reads (``time.time`` & friends)
+                         in ``core/``, ``comms/``, ``orbits/``: the
+                         simulation owns its clock; wall-clock in the
+                         sim path destroys reproducibility.
+  annotation             every function in ``comms/`` and ``core/`` is
+                         fully annotated — the local, dependency-free
+                         mirror of the CI mypy ``disallow_untyped_defs``
+                         gate.
+
+Exit status 1 when any finding is reported, 0 on a clean tree.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str                   # repo-relative, forward slashes
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# --- rule 1: ledger encapsulation ---------------------------------------------
+_LEDGER_MUTATORS = {"reserve", "release", "release_before"}
+# files allowed to mutate ledger state directly: the ledger itself, the
+# session that owns it, and the PR-5 legacy booking shim
+# (``reserve_transfer`` in core/scheduling.py) kept solely for the
+# session-vs-legacy equivalence tests
+_LEDGER_ALLOWED_FILES = {
+    "repro/comms/ledger.py",
+    "repro/comms/environment.py",
+}
+_LEDGER_ALLOWED_FUNCS = {("repro/core/scheduling.py", "reserve_transfer")}
+
+
+# --- rule 2: deprecated PR-5 shims --------------------------------------------
+_DEPRECATED_SHIMS = {
+    "earliest_transfer",
+    "select_sink",
+    "select_sink_cluster",
+    "naive_sink_slot",
+    "first_visible_download",
+    "first_visible_download_sats",
+    "reserve_transfer",
+    "reserve_decision",
+}
+_SCHEDULING_MODULE = "repro.core.scheduling"
+
+
+# --- rule 3: unit-suffix discipline -------------------------------------------
+# files whose dataclasses carry scheduling quantities
+_UNIT_FILES = {
+    "repro/comms/environment.py",
+    "repro/comms/isl.py",
+    "repro/comms/link.py",
+    "repro/comms/ledger.py",
+    "repro/comms/routing.py",
+    "repro/core/scheduling.py",
+    "repro/core/engine.py",
+}
+_UNIT_SUFFIXES = (
+    "_s", "_bits", "_hz", "_bps", "_hours", "_m", "_deg",
+    "_dbm", "_dbi", "_k", "_db", "_fraction", "_factor",
+    "_index", "_slot",
+)
+_UNIT_PREFIXES = ("t_", "num_")
+# central exemption table: unit-free or self-describing numeric fields.
+# Add here ONLY with a justification — everything else must carry its
+# unit in the name.
+_UNIT_EXEMPT: Dict[str, str] = {
+    "rid": "opaque reservation id",
+    "seed": "RNG seed, dimensionless",
+    "plane": "topology coordinate, not a quantity",
+    "bits": "the field IS the unit (TransferSegment payload)",
+    "candidates_considered": "plain count",
+    "spectral_efficiency": "standard link-budget name (bit/s/Hz)",
+    "noniid_alpha": "dimensionless mixing blend",
+    "gs_rb_capacity": "resource-block count per station",
+    "window_start": "absolute seconds; legacy TransferSegment field",
+    "window_end": "absolute seconds; legacy TransferSegment field",
+}
+_NUMERIC_ANNOTATIONS = {
+    "int", "float",
+    "Optional[int]", "Optional[float]",
+    "int | None", "float | None",
+    "Optional[Union[int, Sequence[int]]]",
+}
+
+
+# --- rule 4: wall-clock ban ---------------------------------------------------
+_SIM_PACKAGES = ("repro/core/", "repro/comms/", "repro/orbits/")
+_WALL_CLOCK_CALLS = {
+    ("time", "time"), ("time", "perf_counter"), ("time", "monotonic"),
+    ("time", "process_time"), ("datetime", "now"), ("datetime", "today"),
+    ("datetime", "utcnow"),
+}
+
+
+# --- rule 5: annotation completeness ------------------------------------------
+_ANNOTATION_PACKAGES = ("repro/comms/", "repro/core/")
+
+
+def _enclosing_functions(tree: ast.Module) -> Dict[ast.AST, str]:
+    """Map every node to the name of its innermost enclosing def."""
+    owner: Dict[ast.AST, str] = {}
+
+    def visit(node: ast.AST, current: str) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            current = node.name
+        for child in ast.iter_child_nodes(node):
+            owner[child] = current
+            visit(child, current)
+
+    visit(tree, "<module>")
+    return owner
+
+
+def _check_ledger(
+    rel: str, tree: ast.Module, findings: List[Finding]
+) -> None:
+    if rel in _LEDGER_ALLOWED_FILES:
+        return
+    owner = _enclosing_functions(tree)
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        if node.func.attr not in _LEDGER_MUTATORS:
+            continue
+        receiver = ast.unparse(node.func.value)
+        if "ledger" not in receiver.lower():
+            continue
+        if (rel, owner.get(node, "<module>")) in _LEDGER_ALLOWED_FUNCS:
+            continue
+        findings.append(Finding(
+            rel, node.lineno, "ledger-encapsulation",
+            f"direct ledger mutation `{receiver}.{node.func.attr}(...)` — "
+            "book through CommsEnvironment.commit/release so the session "
+            "(and its sanitizer) owns every reservation",
+        ))
+
+
+def _check_deprecated_shims(
+    rel: str, tree: ast.Module, findings: List[Finding]
+) -> None:
+    if rel == "repro/core/scheduling.py":
+        return
+    # names bound to the shim functions, and names bound to the
+    # scheduling MODULE (``import ... as S``, ``S = _sched()``)
+    shim_names: Set[str] = set()
+    module_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.module == _SCHEDULING_MODULE:
+                for alias in node.names:
+                    if alias.name in _DEPRECATED_SHIMS:
+                        shim_names.add(alias.asname or alias.name)
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == _SCHEDULING_MODULE:
+                    module_names.add(
+                        alias.asname or alias.name.split(".")[0]
+                    )
+        elif isinstance(node, ast.Assign) and isinstance(
+            node.value, ast.Call
+        ):
+            # the lazy-import idiom: S = _sched()
+            f = node.value.func
+            if isinstance(f, ast.Name) and f.id == "_sched":
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        module_names.add(tgt.id)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        name: Optional[str] = None
+        if isinstance(f, ast.Name) and f.id in shim_names:
+            name = f.id
+        elif (
+            isinstance(f, ast.Attribute)
+            and isinstance(f.value, ast.Name)
+            and f.value.id in module_names
+            and f.attr in _DEPRECATED_SHIMS
+        ):
+            name = f.attr
+        if name is not None:
+            findings.append(Finding(
+                rel, node.lineno, "deprecated-shim",
+                f"call to legacy scheduling shim `{name}` — use the "
+                "CommsEnvironment session API instead",
+            ))
+
+
+def _unit_ok(name: str) -> bool:
+    if name in _UNIT_EXEMPT:
+        return True
+    if name.endswith(_UNIT_SUFFIXES):
+        return True
+    return name.startswith(_UNIT_PREFIXES)
+
+
+def _check_unit_suffixes(
+    rel: str, tree: ast.Module, findings: List[Finding]
+) -> None:
+    if rel not in _UNIT_FILES:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if not any("dataclass" in ast.unparse(d)
+                   for d in node.decorator_list):
+            continue
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)):
+                continue
+            ann = ast.unparse(stmt.annotation)
+            if ann not in _NUMERIC_ANNOTATIONS:
+                continue
+            field = stmt.target.id
+            if not _unit_ok(field):
+                findings.append(Finding(
+                    rel, stmt.lineno, "unit-suffix",
+                    f"numeric field `{node.name}.{field}` carries no unit "
+                    "suffix (_s/_bits/_hz/_bps/...) and is not in the "
+                    "lint exemption table",
+                ))
+
+
+def _check_wall_clock(
+    rel: str, tree: ast.Module, findings: List[Finding]
+) -> None:
+    if not rel.startswith(_SIM_PACKAGES):
+        return
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        f = node.func
+        if isinstance(f.value, ast.Name):
+            if (f.value.id, f.attr) in _WALL_CLOCK_CALLS:
+                findings.append(Finding(
+                    rel, node.lineno, "wall-clock",
+                    f"wall-clock read `{f.value.id}.{f.attr}()` in the "
+                    "simulation path — the simulated clock is the only "
+                    "clock here",
+                ))
+
+
+def _unannotated_args(
+    fn: "ast.FunctionDef | ast.AsyncFunctionDef",
+) -> List[str]:
+    args = fn.args
+    names: List[str] = []
+    plain = args.posonlyargs + args.args
+    for i, a in enumerate(plain):
+        if i == 0 and a.arg in ("self", "cls"):
+            continue
+        if a.annotation is None:
+            names.append(a.arg)
+    for a in args.kwonlyargs:
+        if a.annotation is None:
+            names.append(a.arg)
+    for a in (args.vararg, args.kwarg):
+        if a is not None and a.annotation is None:
+            names.append(a.arg)
+    return names
+
+
+def _check_annotations(
+    rel: str, tree: ast.Module, findings: List[Finding]
+) -> None:
+    if not rel.startswith(_ANNOTATION_PACKAGES):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        missing = _unannotated_args(node)
+        if missing:
+            findings.append(Finding(
+                rel, node.lineno, "annotation",
+                f"`{node.name}` has unannotated parameter(s): "
+                f"{', '.join(missing)}",
+            ))
+        if node.returns is None and node.name != "__init__":
+            findings.append(Finding(
+                rel, node.lineno, "annotation",
+                f"`{node.name}` has no return annotation",
+            ))
+
+
+_CHECKS = (
+    _check_ledger,
+    _check_deprecated_shims,
+    _check_unit_suffixes,
+    _check_wall_clock,
+    _check_annotations,
+)
+
+
+def _rel_path(path: Path, roots: Sequence[Path]) -> str:
+    """Path relative to the nearest containing root (posix form), so
+    rule allow-lists match regardless of where lint is invoked from."""
+    resolved = path.resolve()
+    for root in roots:
+        try:
+            return resolved.relative_to(root.resolve()).as_posix()
+        except ValueError:
+            continue
+    return path.as_posix()
+
+
+def lint_file(path: Path, roots: Sequence[Path]) -> List[Finding]:
+    rel = _rel_path(path, roots)
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as exc:
+        return [Finding(rel, exc.lineno or 0, "syntax",
+                        f"unparseable: {exc.msg}")]
+    findings: List[Finding] = []
+    for check in _CHECKS:
+        check(rel, tree, findings)
+    return findings
+
+
+def iter_python_files(paths: Iterable[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def run_lint(paths: Sequence[Path]) -> Tuple[List[Finding], int]:
+    """Lint every Python file under ``paths``.  Returns the findings
+    and the number of files checked.  Rule allow-lists key on paths
+    relative to the ``repro`` package, so any invocation directory
+    works."""
+    roots = []
+    for p in paths:
+        p = p.resolve()
+        # anchor rel-paths at the directory CONTAINING `repro`
+        for anc in (p, *p.parents):
+            if anc.name == "repro":
+                roots.append(anc.parent)
+                break
+        else:
+            roots.append(p if p.is_dir() else p.parent)
+    files = iter_python_files(paths)
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f, roots))
+    findings.sort(key=lambda x: (x.path, x.line, x.rule))
+    return findings, len(files)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv:
+        paths = [Path(a) for a in argv]
+    else:
+        # default: the repro package this module is part of
+        paths = [Path(__file__).resolve().parent.parent]
+    findings, n_files = run_lint(paths)
+    for f in findings:
+        print(f)
+    status = 1 if findings else 0
+    print(
+        f"lint: {n_files} files, {len(findings)} finding(s)",
+        file=sys.stderr,
+    )
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

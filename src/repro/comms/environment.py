@@ -40,7 +40,16 @@ fire (equivalence-tested).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import (
+    TYPE_CHECKING,
+    Any,
+    Callable,
+    FrozenSet,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 import numpy as np
 
@@ -59,10 +68,24 @@ from repro.orbits.prediction import (
 )
 from repro.orbits.visibility import VisibilityWindow
 
-_UNSET = object()
+if TYPE_CHECKING:
+    from repro.analysis.sanitizer import ScheduleSanitizer, Violation
+    from repro.core.engine import SimConfig
+    from repro.core.scheduling import (
+        ClusterSinkDecision,
+        HandoverSpec,
+        SinkDecision,
+    )
+
+_UNSET: Any = object()
+
+# (gs_index, slant_range_m) -> (window seconds needed, transfer seconds)
+TransferTime = Callable[[int, float], Tuple[float, float]]
+# window predicate: True = exclude this window from the search
+SkipWindow = Optional[Callable[[VisibilityWindow], bool]]
 
 
-def _sched():
+def _sched() -> Any:
     """Lazy handle on ``repro.core.scheduling`` (the shared planning
     machinery).  Imported at call time: the core modules import this
     module at their top level, so a module-level import here would be
@@ -89,6 +112,7 @@ class TransferDecision:
     t_done: float
     window: VisibilityWindow
     segments: Tuple[Any, ...] = ()      # TransferSegment legs
+    payload_bits: Optional[float] = None
 
     @property
     def legs(self) -> Tuple[Leg, ...]:
@@ -195,9 +219,12 @@ class CommsEnvironment:
         self.handover = bool(handover)
         self._release_listeners: List[Callable] = []
         self._next_rid = 0
+        # invariant checker (repro.analysis.sanitizer), installed by
+        # from_sim/derive(sanitize=True) or ScheduleSanitizer.attach
+        self.sanitizer: Optional["ScheduleSanitizer"] = None
 
     @classmethod
-    def from_sim(cls, sim, walker: Optional[WalkerDelta] = None
+    def from_sim(cls, sim: "SimConfig", walker: Optional[WalkerDelta] = None
                  ) -> "CommsEnvironment":
         """The session of one ``SimConfig``: predictor over the sim's
         ground segment (rolling when ``rolling_horizon_hours`` is set),
@@ -225,30 +252,37 @@ class CommsEnvironment:
             GSResourceLedger(len(gs_list), sim.gs_rb_capacity)
             if sim.gs_rb_capacity is not None else None
         )
-        return cls(
+        env = cls(
             walker=walker, predictor=predictor, link=sim.link, isl=sim.isl,
             ledger=ledger, handover=sim.gs_handover, gs=gs_list,
         )
+        if getattr(sim, "sanitize", False):
+            from repro.analysis.sanitizer import ScheduleSanitizer
+
+            ScheduleSanitizer.attach(env)
+        return env
 
     @property
     def ground_stations(self) -> Tuple[GroundStation, ...]:
         return self.predictor.ground_stations
 
-    def derive(self, *, ledger=_UNSET, handover=_UNSET,
-               link=_UNSET, isl=_UNSET) -> "CommsEnvironment":
+    def derive(self, *, ledger: Any = _UNSET, handover: Any = _UNSET,
+               link: Any = _UNSET, isl: Any = _UNSET,
+               sanitize: bool = False) -> "CommsEnvironment":
         """Sibling session sharing this one's walker/predictor/budgets
         but with its OWN booking state: by default the new session gets
         a fresh, empty ledger of the parent's capacity (no ledger stays
         no ledger), so derived arms never see each other's bookings —
         how benchmarks price the same window table under different
-        contention regimes.  Pass ``ledger=...`` to override."""
+        contention regimes.  Pass ``ledger=...`` to override;
+        ``sanitize=True`` attaches a fresh ``ScheduleSanitizer``."""
         if ledger is _UNSET:
             ledger = (
                 GSResourceLedger(self.ledger.num_stations,
                                  self.ledger.capacity)
                 if self.ledger is not None else None
             )
-        return CommsEnvironment(
+        env = CommsEnvironment(
             walker=self.walker,
             predictor=self.predictor,
             link=self.link if link is _UNSET else link,
@@ -256,6 +290,11 @@ class CommsEnvironment:
             ledger=ledger,
             handover=self.handover if handover is _UNSET else handover,
         )
+        if sanitize:
+            from repro.analysis.sanitizer import ScheduleSanitizer
+
+            ScheduleSanitizer.attach(env)
+        return env
 
     # -- transfer planning -----------------------------------------------------
     def plan_transfer(
@@ -263,9 +302,9 @@ class CommsEnvironment:
         *,
         sat: Satellite,
         t: float,
-        transfer_time,                  # (gs_index, distance) -> (need, done)
-        skip_window=None,
-        handover_spec=None,
+        transfer_time: TransferTime,    # (gs_index, distance) -> (need, done)
+        skip_window: SkipWindow = None,
+        handover_spec: Optional["HandoverSpec"] = None,
         contended: bool = True,
     ) -> Optional[Tuple]:
         """Generic earliest-completing transfer of one satellite after
@@ -287,7 +326,7 @@ class CommsEnvironment:
         t_ready: float,
         payload_bits: float,
         *,
-        skip_window=None,
+        skip_window: SkipWindow = None,
         handover: Optional[bool] = None,
     ) -> Optional[TransferDecision]:
         """Earliest-completing sink upload (one RB, eq. 16) after
@@ -312,7 +351,10 @@ class CommsEnvironment:
         else:
             t0, t_done, w = hit
             segments = ()
-        return TransferDecision("up", t0, t_done, w, tuple(segments))
+        return TransferDecision(
+            "up", t0, t_done, w, tuple(segments),
+            payload_bits=float(payload_bits),
+        )
 
     def plan_download(
         self,
@@ -320,7 +362,7 @@ class CommsEnvironment:
         t: float,
         payload_bits: float,
         *,
-        skip_window=None,
+        skip_window: SkipWindow = None,
     ) -> Optional[TransferDecision]:
         """Earliest-completing global-model download after ``t``: a
         full-band GS broadcast (eq. 15) — never RB-contended, never
@@ -335,7 +377,9 @@ class CommsEnvironment:
         if hit is None:
             return None
         t0, t_done, w = hit
-        return TransferDecision("down", t0, t_done, w)
+        return TransferDecision(
+            "down", t0, t_done, w, payload_bits=float(payload_bits)
+        )
 
     # -- sink selection --------------------------------------------------------
     def select_sink(
@@ -347,7 +391,7 @@ class CommsEnvironment:
         require_next_download: bool = False,
         isl: Optional[ISLConfig] = None,
         handover: Optional[bool] = None,
-    ):
+    ) -> Optional["SinkDecision"]:
         """Deterministic sink selection for one orbital plane (eqs.
         21-22 with the ring hop metric) — ``SinkDecision`` or None."""
         S = _sched()
@@ -373,6 +417,7 @@ class CommsEnvironment:
             t_wait=cd.t_wait,
             candidates_considered=cd.candidates_considered,
             segments=cd.segments,
+            payload_bits=cd.payload_bits,
         )
 
     def select_sink_cluster(
@@ -384,7 +429,7 @@ class CommsEnvironment:
         payload_bits: float,
         require_next_download: bool = False,
         handover: Optional[bool] = None,
-    ):
+    ) -> Optional["ClusterSinkDecision"]:
         """Constellation-wide sink selection over an arbitrary satellite
         set (eq. 21/22 over a relay-latency matrix) —
         ``ClusterSinkDecision`` or None."""
@@ -434,11 +479,18 @@ class CommsEnvironment:
         ledger (or for downloads) the reservation carries its legs but
         occupies nothing."""
         legs = _decision_legs(decision)
+        self._next_rid += 1
+        reservation = Reservation(
+            rid=self._next_rid, legs=legs, decision=decision
+        )
+        if self.sanitizer is not None:
+            # validate BEFORE booking: a strict sanitizer rejects the
+            # decision with the ledger untouched
+            self.sanitizer.observe_commit(reservation)
         if self.ledger is not None:
             for gi, t0, t1 in legs:
                 self.ledger.reserve(gi, t0, t1)
-        self._next_rid += 1
-        return Reservation(rid=self._next_rid, legs=legs, decision=decision)
+        return reservation
 
     def release(
         self, reservation: Reservation, at: Optional[float] = None
@@ -470,6 +522,8 @@ class CommsEnvironment:
             freed.append((gi, f0, t1))
         reservation.legs = tuple(kept)
         reservation.released = True
+        if self.sanitizer is not None:
+            self.sanitizer.observe_release(reservation, tuple(freed))
         if freed and self.ledger is not None:
             for cb in list(self._release_listeners):
                 cb(reservation, tuple(freed))
@@ -531,6 +585,7 @@ class CommsEnvironment:
         pending = list(pending)
         if self.ledger is None:
             return pending, 0
+        before = [(p.key, p.decision.t_done) for p in pending]
         # model-ready order, stable on the original admission order
         order = sorted(
             range(len(pending)), key=lambda i: (pending[i].t_ready, i)
@@ -563,4 +618,27 @@ class CommsEnvironment:
                     pending[i] = dataclasses.replace(
                         p, reservation=self.commit(p.decision)
                     )
+        if self.sanitizer is not None:
+            self.sanitizer.observe_readmit(
+                before, [(p.key, p.decision.t_done) for p in pending]
+            )
         return pending, repriced
+
+    def finish_session(
+        self,
+        t_end: float,
+        *,
+        open_rids: FrozenSet[int] = frozenset(),
+        check_leaks: bool = True,
+    ) -> List["Violation"]:
+        """Close the sanitizer's books at simulated time ``t_end`` and
+        return every violation it recorded (empty when unsanitized or
+        clean).  ``open_rids`` exempts reservations a strategy still
+        legitimately holds (an async queue booked beyond sim end);
+        ``check_leaks=False`` skips the leak report entirely (runs
+        abandoned mid-round leave half-planned bookings by design)."""
+        if self.sanitizer is None:
+            return []
+        return self.sanitizer.finish(
+            t_end, open_rids=open_rids, check_leaks=check_leaks
+        )

@@ -18,6 +18,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import TYPE_CHECKING, Any, Optional, Union
+
+if TYPE_CHECKING:
+    from repro.orbits.constellation import ConstellationConfig
+    from repro.orbits.topology import ISLTopology, TopologyConfig
 
 # Inter-plane cross-links are optical (FSO): provision them at 1 Gbps
 # (250 MHz x 4 bit/s/Hz) instead of the paper's deliberately RF-rate
@@ -39,10 +44,10 @@ class ISLConfig:
     @classmethod
     def from_constellation(
         cls,
-        constellation,
+        constellation: "ConstellationConfig",
         link_type: str = "intra",
-        topology=None,
-        **overrides,
+        topology: "Optional[Union[ISLTopology, TopologyConfig]]" = None,
+        **overrides: Any,
     ) -> "ISLConfig":
         """ISLConfig with the real chord/c propagation delay for this
         constellation's geometry.

@@ -17,12 +17,19 @@ bit-identical to the legacy ring arithmetic ``hops * t_hop``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.comms.isl import ISLConfig, isl_hop_time
-from repro.orbits.topology import ISLTopology, UNREACHABLE
+from repro.orbits.constellation import ConstellationConfig
+from repro.orbits.topology import (
+    ISLTopology,
+    TopologyConfig,
+    UNREACHABLE,
+    get_isl_topology,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,3 +168,21 @@ class RoutingTable:
             else np.asarray(nodes, dtype=np.intp)
         )
         return relay_arrivals(self.latency, sink, t_ready, rows)
+
+
+@functools.lru_cache(maxsize=32)
+def get_routing_table(
+    constellation: ConstellationConfig,
+    topology: TopologyConfig,
+    plan: ISLPlan,
+    payload_bits: float,
+) -> RoutingTable:
+    """Cached ``RoutingTable`` per (constellation, topology, plan,
+    payload) — every argument is frozen/hashable and the graph is
+    static per scenario, so strategies and benchmark arms re-running
+    the same topology share one table (and the hop-split computation
+    behind it) instead of rebuilding it per run.  The table is
+    read-only by convention; callers must not mutate its matrices."""
+    return RoutingTable(
+        get_isl_topology(constellation, topology), plan, payload_bits
+    )

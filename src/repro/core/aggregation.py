@@ -46,7 +46,7 @@ def weighted_average(
 
         return aggregate_ops.aggregate_pytree(stacked, w)
 
-    def leaf(x):
+    def leaf(x: jnp.ndarray) -> jnp.ndarray:
         return jnp.tensordot(w.astype(jnp.float32), x.astype(jnp.float32), axes=1).astype(x.dtype)
 
     return jax.tree_util.tree_map(leaf, stacked)

@@ -40,6 +40,7 @@ from repro.comms.isl import isl_hop_time
 from repro.configs.constellations import GROUND_STATION_PRESETS
 from repro.orbits.constellation import Satellite
 from repro.orbits.prediction import VisibilityPredictor
+from repro.orbits.visibility import VisibilityWindow
 
 
 class _StarMixin:
@@ -73,7 +74,8 @@ class _StarMixin:
 
         skip = None
         if not same_window:
-            def skip(w):      # skip the in-progress window
+            def skip(w: VisibilityWindow) -> bool:
+                # skip the in-progress window
                 return w.contains(t) and w.t_start < t
 
         if downlink:
@@ -165,7 +167,9 @@ class FedHAP(FLStrategy, _StarMixin):
             for hap in (hap_a, hap_b)
         ]
 
-    def _best_tx(self, sat, t, payload_bits, downlink):
+    def _best_tx(
+        self, sat: Satellite, t: float, payload_bits: float, downlink: bool
+    ) -> Optional[float]:
         outs = [
             self._first_tx(sat, t, payload_bits, downlink, env=env)
             for env in self.servers
@@ -312,19 +316,21 @@ class _AsyncQueueMixin:
         if self.readmit:
             self.env.on_release(self._note_release)
 
-    def _note_release(self, _reservation, _freed) -> None:
+    def _note_release(self, _reservation: Any, _freed: Any) -> None:
         # the release hook: booked capacity freed somewhere — re-admit
         # the queued uploads at the next server event
         self._capacity_freed = True
 
     def _admit_upload(
-        self, key, sat: Satellite, t_ready: float, payload_bits: float,
+        self, key: Any, sat: Satellite, t_ready: float, payload_bits: float,
         version: float,
     ) -> Optional[float]:
-        """Plan + book one upload at schedule time; tracked as pending
-        for re-admission when it is on.  Returns the completion."""
-        if not self.readmit:
-            return self._first_tx(sat, t_ready, payload_bits, downlink=True)
+        """Plan + book one upload at schedule time; tracked as pending —
+        for re-admission when it is on, and always as the strategy's
+        declared open reservations (the sanitizer's leak report exempts
+        a live async queue).  Identical plan/commit path either way, so
+        the schedule does not depend on ``readmit``.  Returns the
+        completion."""
         dec = self.env.plan_upload(sat, t_ready, payload_bits)
         if dec is None:
             return None
@@ -335,7 +341,7 @@ class _AsyncQueueMixin:
         self._versions[key] = version
         return dec.t_done
 
-    def _pop_pending(self, key) -> None:
+    def _pop_pending(self, key: Any) -> None:
         self._pending.pop(key, None)
         self._versions.pop(key, None)
 

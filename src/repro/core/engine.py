@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -90,6 +90,14 @@ class SimConfig:
     async_readmit: bool = False
     noniid_alpha: float = 0.5             # non-IID-aware weighting blend
     use_kernel: bool = False              # Pallas aggregation path (TPU)
+    # Runtime schedule sanitizer (repro.analysis.sanitizer): every
+    # commit/release/readmit on the strategy's CommsEnvironment is
+    # checked against the paper's feasibility invariants (eqs. 13-16
+    # RB capacity, eq. 15 window containment, eqs. 21-22 re-admission
+    # monotonicity) and a reservation-leak report runs at sim end.
+    # On by default — tests and --quick benchmark smokes run sanitized;
+    # timed benchmark arms turn it off.
+    sanitize: bool = True
     seed: int = 0
 
     @property
@@ -152,12 +160,12 @@ class FLStrategy:
         self.round_index = 0
 
     @property
-    def predictor(self):
+    def predictor(self) -> Any:
         """The session's visibility predictor (back-compat alias)."""
         return self.env.predictor
 
     @property
-    def ledger(self):
+    def ledger(self) -> Any:
         """The session's RB ledger, or None (back-compat alias)."""
         return self.env.ledger
 
@@ -173,6 +181,16 @@ class FLStrategy:
     def plane_clients(self, plane: int) -> List[int]:
         return self.task.clients_on_plane(plane)
 
+    def open_reservations(self) -> FrozenSet[int]:
+        """Reservation ids this strategy still legitimately holds at
+        sim end — exempted from the sanitizer's leak report.  The async
+        strategies override the ``_pending`` queue this reads: a queued
+        upload booked beyond the horizon is live state, not a leak."""
+        pending = getattr(self, "_pending", None) or {}
+        return frozenset(
+            p.reservation.rid for p in pending.values()
+        )
+
     # -- strategy API -----------------------------------------------------------
     def step(self, t: float) -> Tuple[float, Dict[str, Any]]:
         raise NotImplementedError
@@ -186,13 +204,18 @@ class FLStrategy:
         max_s = (max_sim_hours or self.sim.horizon_hours) * 3600.0
         history: List[HistoryPoint] = []
         t = 0.0
+        completed = True
         while t < max_s and (max_rounds is None or self.round_index < max_rounds):
             # simulated time is monotone: bookings that ended before
             # this round can never affect another fit
             self.env.release_before(t)
             t_next, events = self.step(t)
             if t_next is None or t_next <= t:
-                break  # no feasible progress inside the horizon
+                # no feasible progress inside the horizon — the aborted
+                # step may leave half-planned bookings, so the leak
+                # report does not apply
+                completed = False
+                break
             self.round_index += 1
             metrics = self.task.evaluate(self.global_params)
             history.append(
@@ -210,4 +233,7 @@ class FLStrategy:
                     f"loss={metrics['loss']:.4f}"
                 )
             t = t_next
+        self.env.finish_session(
+            t, open_rids=self.open_reservations(), check_leaks=completed
+        )
         return RunResult(name=self.name, history=history)

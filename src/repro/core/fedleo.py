@@ -37,7 +37,7 @@ aggregation).  The clock is the Satcom simulation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -45,14 +45,15 @@ from repro.comms.environment import CommsEnvironment
 from repro.comms.isl import ISLConfig, isl_hop_time
 from repro.comms.ledger import GSResourceLedger
 from repro.comms.link import LinkConfig
-from repro.comms.routing import ISLPlan, RoutingTable
+from repro.comms.routing import ISLPlan, RoutingTable, get_routing_table
 from repro.core import aggregation
 from repro.core.engine import FLStrategy, SimConfig
+from repro.core.fltask import FederatedTask
 from repro.core.propagation import ring_hops_matrix
 from repro.core.scheduling import ClusterSinkDecision, SinkDecision
-from repro.orbits.constellation import Satellite, WalkerDelta
+from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
 from repro.orbits.prediction import VisibilityPredictor
-from repro.orbits.topology import get_isl_topology
+from repro.orbits.topology import ISLTopology, get_isl_topology
 
 
 # --- pure round planners (no learning; benchmarkable stand-alone) -------------
@@ -114,12 +115,18 @@ def _naive_sink_decision(
         t_wait=max(0.0, dec.window.t_start - t_ready),
         candidates_considered=1,
         segments=dec.segments,
+        payload_bits=float(payload_bits),
     )
 
 
 def _resolve_env(
     env: Optional[CommsEnvironment],
-    walker, gs_list, predictor, link, ledger, handover,
+    walker: Optional[WalkerDelta],
+    gs_list: Optional[Sequence[GroundStation]],
+    predictor: Optional[VisibilityPredictor],
+    link: Optional[LinkConfig],
+    ledger: Optional[GSResourceLedger],
+    handover: bool,
 ) -> CommsEnvironment:
     """The planners' session: the one the caller holds (strategies,
     benchmarks), or an ephemeral one assembled from the legacy explicit
@@ -141,7 +148,7 @@ def plan_plane_round(
     isl: ISLConfig,
     env: Optional[CommsEnvironment] = None,
     walker: Optional[WalkerDelta] = None,
-    gs_list=None,
+    gs_list: Optional[Sequence[GroundStation]] = None,
     predictor: Optional[VisibilityPredictor] = None,
     link: Optional[LinkConfig] = None,
     sink_policy: str = "scheduled",
@@ -205,7 +212,7 @@ def plan_cluster_round(
     train_times: np.ndarray,
     env: Optional[CommsEnvironment] = None,
     walker: Optional[WalkerDelta] = None,
-    gs_list=None,
+    gs_list: Optional[Sequence[GroundStation]] = None,
     predictor: Optional[VisibilityPredictor] = None,
     link: Optional[LinkConfig] = None,
     require_next_download: bool = False,
@@ -346,7 +353,7 @@ def form_clusters(
 
 def supply_driven_clusters(
     predictor: VisibilityPredictor,
-    topology,                       # ISLTopology
+    topology: ISLTopology,
     cluster_planes: int,
     t: float,
     lookahead_s: Optional[float] = None,
@@ -393,9 +400,12 @@ class _SyncRoundMixin:
     def _sync_round(
         self,
         groups: Sequence[Tuple[int, ...]],
-        plan_group,     # (group, clients) -> PlanePlan | ClusterPlan | None
-        fail_event,     # group -> events dict for an infeasible round
-        group_stats,    # plan -> stats dict
+        # (group, clients) -> PlanePlan | ClusterPlan | None
+        plan_group: Callable[[Tuple[int, ...], List[int]], Optional[Any]],
+        # group -> events dict for an infeasible round
+        fail_event: Callable[[Tuple[int, ...]], Dict[str, Any]],
+        # plan -> stats dict
+        group_stats: Callable[[Any], Dict[str, Any]],
         events_key: str,
     ) -> Tuple[Optional[float], Dict[str, Any]]:
         sim, task = self.sim, self.task
@@ -443,8 +453,8 @@ class _SyncRoundMixin:
 class FedLEO(_SyncRoundMixin, FLStrategy):
     name = "FedLEO"
 
-    def __init__(self, *args, require_next_download: bool = False,
-                 sink_policy: str = "scheduled", **kwargs):
+    def __init__(self, *args: Any, require_next_download: bool = False,
+                 sink_policy: str = "scheduled", **kwargs: Any):
         """sink_policy:
           * "scheduled"     — the paper's distributed scheduler (§IV-B):
             first satellite whose window fits the exchange, minimizing
@@ -463,7 +473,9 @@ class FedLEO(_SyncRoundMixin, FLStrategy):
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
         sim, task = self.sim, self.task
 
-        def plan_group(group, clients):
+        def plan_group(
+            group: Tuple[int, ...], clients: List[int]
+        ) -> Optional[PlanePlan]:
             (plane,) = group
             return plan_plane_round(
                 env=self.env, isl=sim.isl,
@@ -475,7 +487,7 @@ class FedLEO(_SyncRoundMixin, FLStrategy):
                 require_next_download=self.require_next_download,
             )
 
-        def group_stats(plan):
+        def group_stats(plan: PlanePlan) -> Dict[str, Any]:
             d = plan.decision
             return {
                 "plane": plan.plane,
@@ -516,7 +528,7 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
 
     name = "FedLEO-Grid"
 
-    def __init__(self, task, sim: SimConfig, *,
+    def __init__(self, task: FederatedTask, sim: SimConfig, *,
                  cluster_planes: Optional[int] = None,
                  dynamic_clusters: bool = True,
                  require_next_download: bool = False):
@@ -529,8 +541,9 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
         super().__init__(task, sim)
         self.require_next_download = require_next_download
         self.topology = get_isl_topology(sim.constellation, sim.topology)
-        self.routing = RoutingTable(
-            self.topology,
+        self.routing = get_routing_table(
+            sim.constellation,
+            sim.topology,
             ISLPlan(intra=sim.isl, inter=sim.isl_inter),
             self.payload_bits,
         )
@@ -563,7 +576,9 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
         sim, task = self.sim, self.task
 
-        def plan_group(group, clients):
+        def plan_group(
+            group: Tuple[int, ...], clients: List[int]
+        ) -> Optional[ClusterPlan]:
             return plan_cluster_round(
                 env=self.env,
                 routing=self.routing, planes=group, t=t,
@@ -574,7 +589,7 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
                 require_next_download=self.require_next_download,
             )
 
-        def group_stats(plan):
+        def group_stats(plan: ClusterPlan) -> Dict[str, Any]:
             d = plan.decision
             return {
                 "planes": list(plan.planes),

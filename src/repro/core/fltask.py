@@ -123,7 +123,9 @@ class FederatedTask:
         ) / hp.cpu_freq_hz
 
     # --- local training ---------------------------------------------------------
-    def _local_train_one(self, params, x, y, rng):
+    def _local_train_one(
+        self, params: PyTree, x: jax.Array, y: jax.Array, rng: jax.Array
+    ) -> PyTree:
         """I epochs of mini-batch SGD on one client (runs under vmap)."""
         hp = self.hp
         m = x.shape[0]
@@ -131,14 +133,16 @@ class FederatedTask:
         n_batches = max(1, m // bsz)
         opt_state = self.optimizer.init(params)
 
-        def loss(p, xb, yb):
+        def loss(p: PyTree, xb: jax.Array, yb: jax.Array) -> jax.Array:
             return self.loss_fn(self.apply_fn(p, xb), yb)
 
-        def epoch_body(carry, ekey):
+        Carry = Tuple[PyTree, PyTree]
+
+        def epoch_body(carry: Carry, ekey: jax.Array) -> Tuple[Carry, None]:
             params, opt_state = carry
             perm = jax.random.permutation(ekey, m)
 
-            def batch_body(carry, i):
+            def batch_body(carry: Carry, i: jax.Array) -> Tuple[Carry, None]:
                 params, opt_state = carry
                 idx = jax.lax.dynamic_slice_in_dim(
                     perm, i * bsz, bsz
@@ -173,7 +177,9 @@ class FederatedTask:
         )
 
     # --- evaluation ---------------------------------------------------------------
-    def _eval(self, params, x, y):
+    def _eval(
+        self, params: PyTree, x: jax.Array, y: jax.Array
+    ) -> Dict[str, jax.Array]:
         logits = self.apply_fn(params, x)
         return {
             "loss": self.loss_fn(logits, y),

@@ -67,7 +67,7 @@ and delegate, so legacy callers and the environment agree bit-for-bit
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -89,6 +89,11 @@ from repro.orbits.prediction import (
 )
 from repro.orbits.visibility import VisibilityWindow
 
+# (gs_index, slant_range_m) -> (need_s, done_s): the window-feasibility
+# requirement and the completion offset of one candidate transfer
+TransferTime = Callable[[int, float], Tuple[float, float]]
+SkipWindow = Optional[Callable[[VisibilityWindow], bool]]
+
 
 @dataclasses.dataclass(frozen=True)
 class SinkDecision:
@@ -103,6 +108,7 @@ class SinkDecision:
     # mid-window station handover: the upload's legs when it was split
     # across stations (empty = the classic single-window transfer)
     segments: Tuple["TransferSegment", ...] = ()
+    payload_bits: Optional[float] = None
 
 
 def _distance_at(
@@ -158,7 +164,7 @@ def _repriced_fit(
     gs_index: int,
     t0: float,
     window_end: float,
-    transfer_time,
+    transfer_time: TransferTime,
     need: float,
     done: float,
     max_iters: int = 8,
@@ -255,7 +261,7 @@ def plan_segmented_transfer(
     payload_bits: float,
     ledger: Optional[GSResourceLedger] = None,
     require_next_download: bool = False,
-    skip_window=None,
+    skip_window: SkipWindow = None,
     max_segments: int = 16,
 ) -> Optional[SegmentedPlan]:
     """Greedy segmented (handover) plan for one sink upload.
@@ -290,7 +296,9 @@ def plan_segmented_transfer(
     """
     gss = predictor.ground_stations
 
-    def free_runs(gi: int, lo: float, hi: float):
+    def free_runs(
+        gi: int, lo: float, hi: float
+    ) -> Tuple[Tuple[float, float], ...]:
         if hi <= lo:
             return ()
         if ledger is None:
@@ -298,14 +306,18 @@ def plan_segmented_transfer(
         a, b = ledger.free_runs(gi, lo, hi)
         return tuple(zip(a, b))
 
-    def attempt():
+    def attempt() -> Tuple[Optional[SegmentedPlan], bool]:
         rec = predictor.sat_arrays(sat.plane, sat.slot)
         if rec is None:
             return None, True               # nothing built for this sat yet
         built_end = predictor.built_end if predictor.rolling else np.inf
         starts, ends, gs_idx = rec["starts"], rec["ends"], rec["gs_index"]
 
-        def candidate(t: float, last_gs: Optional[int], excl: set):
+        def candidate(
+            t: float, last_gs: Optional[int], excl: set
+        ) -> Optional[
+            Tuple[float, float, float, float, int, int, float, float, float]
+        ]:
             """Earliest usable free stretch over all windows after t:
             (fa, fb, ws, we, gi, j, d, t_over, rate), ties resolved to
             the faster station then window order.
@@ -443,7 +455,7 @@ def _first_fit_transfers(
     predictor: VisibilityPredictor,
     sats: Sequence[Tuple[int, int]],
     t_ready: np.ndarray,
-    transfer_time,  # (gs_index, distance) -> (need_s, done_s)
+    transfer_time: TransferTime,
     ledger: Optional[GSResourceLedger] = None,
     handover: Optional[HandoverSpec] = None,
 ) -> List[Optional[Tuple]]:
@@ -481,7 +493,7 @@ def _first_fit_transfers(
     """
     sats = list(sats)
 
-    def attempt():
+    def attempt() -> Tuple[List[Optional[Tuple]], bool]:
         out, clipped_reject = _resolve_first_fits(
             walker=walker, predictor=predictor, sats=sats,
             t_ready=t_ready, transfer_time=transfer_time, ledger=ledger,
@@ -534,7 +546,7 @@ def _resolve_first_fits(
     predictor: VisibilityPredictor,
     sats: List[Tuple[int, int]],
     t_ready: np.ndarray,
-    transfer_time,
+    transfer_time: TransferTime,
     ledger: Optional[GSResourceLedger],
 ) -> Tuple[List[Optional[Tuple[float, float, int]]], bool]:
     """One batched resolution pass of ``_first_fit_transfers`` against
@@ -645,10 +657,14 @@ def _resolve_first_fits(
     return out, clipped_reject
 
 
-def symmetric_transfer(time_fn, link: LinkConfig, payload_bits: float):
+def symmetric_transfer(
+    time_fn: Callable[[LinkConfig, float, float], float],
+    link: LinkConfig,
+    payload_bits: float,
+) -> TransferTime:
     """transfer_time callback for a single up- or downlink: feasibility
     need and completion offset are the same transfer duration."""
-    def tt(_gs_index: int, d: float):
+    def tt(_gs_index: int, d: float) -> Tuple[float, float]:
         tc = time_fn(link, payload_bits, d)
         return tc, tc
 
@@ -661,8 +677,8 @@ def earliest_transfer(
     predictor: VisibilityPredictor,
     sat: Satellite,
     t: float,
-    transfer_time,  # (gs_index, distance) -> (need_s, done_s)
-    skip_window=None,
+    transfer_time: TransferTime,
+    skip_window: SkipWindow = None,
     ledger: Optional[GSResourceLedger] = None,
     handover: Optional[HandoverSpec] = None,
 ) -> Optional[Tuple]:
@@ -692,8 +708,8 @@ def _earliest_transfer_impl(
     predictor: VisibilityPredictor,
     sat: Satellite,
     t: float,
-    transfer_time,  # (gs_index, distance) -> (need_s, done_s)
-    skip_window=None,
+    transfer_time: TransferTime,
+    skip_window: SkipWindow = None,
     ledger: Optional[GSResourceLedger] = None,
     handover: Optional[HandoverSpec] = None,
 ) -> Optional[Tuple]:
@@ -754,8 +770,8 @@ def _earliest_single_transfer(
     predictor: VisibilityPredictor,
     sat: Satellite,
     t: float,
-    transfer_time,
-    skip_window=None,
+    transfer_time: TransferTime,
+    skip_window: SkipWindow = None,
     ledger: Optional[GSResourceLedger] = None,
 ) -> Optional[Tuple[float, float, VisibilityWindow]]:
     """The unsegmented single-window search of ``earliest_transfer``."""
@@ -818,7 +834,10 @@ def reserve_transfer(
         ledger.reserve(gs_index, t0, t_done)
 
 
-def reserve_decision(ledger: Optional[GSResourceLedger], decision) -> None:
+def reserve_decision(
+    ledger: Optional[GSResourceLedger],
+    decision: Union["SinkDecision", "ClusterSinkDecision"],
+) -> None:
     """Book a chosen sink upload (``SinkDecision`` or
     ``ClusterSinkDecision``) on the ledger so later transfer decisions
     are priced against the residual station capacity."""
@@ -994,7 +1013,7 @@ def _naive_sink_slot_impl(
     otherwise silently drop out of the round); only when the horizon
     cannot grow further does it return None.
     """
-    def attempt():
+    def attempt() -> Tuple[Optional[int], bool]:
         starts, _ = predictor.plane_next_window_starts(plane, t_ready)
         eff = np.maximum(starts, t_ready)
         if np.any(np.isfinite(eff)):
@@ -1021,6 +1040,7 @@ class ClusterSinkDecision:
     candidates_considered: int
     # mid-window station handover legs (empty = single-window upload)
     segments: Tuple[TransferSegment, ...] = ()
+    payload_bits: Optional[float] = None
 
 
 def select_sink_cluster(
@@ -1094,7 +1114,7 @@ def _select_sink_cluster_impl(
         if handover else None
     )
 
-    def exchange_time(_gi: int, d: float):
+    def exchange_time(_gi: int, d: float) -> Tuple[float, float]:
         t_dl = downlink_time(link, payload_bits, d)
         need = t_dl
         if require_next_download:
@@ -1130,6 +1150,7 @@ def _select_sink_cluster_impl(
                 t_wait=max(0.0, w.t_start - float(t_ready[cand])),
                 candidates_considered=0,
                 segments=segments,
+                payload_bits=float(payload_bits),
             )
             # minimize completion; tie -> earliest window start
             if (

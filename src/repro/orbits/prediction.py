@@ -308,6 +308,20 @@ class VisibilityPredictor:
         vectorized scheduler."""
         return self._by_sat.get((plane, slot))
 
+    def _window_of(self, key: Tuple[int, int], j: int) -> VisibilityWindow:
+        """The satellite's j-th window (start order) as ONE
+        ``VisibilityWindow`` — reads the materialized ``windows_of``
+        cache when a caller already paid for it, else constructs just
+        this window from the table row.  The scalar queries
+        (``next_window`` & co) return exactly one window per call, so
+        materializing — and copying — the satellite's whole window list
+        per query is pure overhead (the predictor_queries regression)."""
+        wins = self._win_cache.get(key)
+        if wins is not None:
+            return wins[j]
+        rec = self._by_sat[key]
+        return self.table.window(int(rec["idx"][j]))
+
     def _first_index_ending_after(self, key, t: float) -> Optional[int]:
         """Index (in start order) of the first window with t_end > t."""
         rec = self._by_sat.get(key)
@@ -315,7 +329,7 @@ class VisibilityPredictor:
             return None
         # cummax_end is non-decreasing; the first index where it exceeds
         # t is exactly the first window whose own t_end exceeds t.
-        j = int(np.searchsorted(rec["cummax_end"], t, side="right"))
+        j = int(rec["cummax_end"].searchsorted(t, side="right"))
         if j >= rec["starts"].size:
             return None
         return j
@@ -329,11 +343,11 @@ class VisibilityPredictor:
         rec = self._by_sat.get(key)
         if rec is None:
             return None
-        wins = self.windows_of(sat)
-        i = int(np.searchsorted(rec["starts"], t, side="right")) - 1
+        starts, ends = rec["starts"], rec["ends"]
+        i = int(starts.searchsorted(t, side="right")) - 1
         while i >= 0 and rec["cummax_end"][i] >= t:
-            if wins[i].contains(t):
-                return wins[i]
+            if starts[i] <= t <= ends[i]:
+                return self._window_of(key, i)
             i -= 1
         return None
 
@@ -347,13 +361,16 @@ class VisibilityPredictor:
         ``max_horizon_s`` is exhausted).  A window still clipped at the
         built boundary is completed first — its true end lies in the
         next chunk — so the result matches a prebuilt table."""
+        key = (sat.plane, sat.slot)
         while True:
-            j = self._first_index_ending_after((sat.plane, sat.slot), t)
+            j = self._first_index_ending_after(key, t)
             if j is not None:
-                w = self.windows_of(sat)[j]
-                if w.t_end == self._built_end and self.extend_once():
+                if (
+                    self._by_sat[key]["ends"][j] == self._built_end
+                    and self.extend_once()
+                ):
                     continue               # boundary-clipped: complete it
-                return w
+                return self._window_of(key, j)
             if not self.extend_once():
                 return None
 
@@ -372,16 +389,15 @@ class VisibilityPredictor:
             j = self._first_index_ending_after(key, t)
             if j is not None:
                 rec = self._by_sat[key]
-                wins = self.windows_of(sat)
-                for i in range(j, len(wins)):
-                    if rec["ends"][i] <= t:
+                starts, ends = rec["starts"], rec["ends"]
+                for i in range(j, starts.size):
+                    if ends[i] <= t:
                         continue
-                    effective_start = max(rec["starts"][i], t)
-                    if rec["ends"][i] - effective_start >= min_duration:
-                        w = wins[i]
-                        if w.t_end == self._built_end and self.extend_once():
+                    effective_start = max(starts[i], t)
+                    if ends[i] - effective_start >= min_duration:
+                        if ends[i] == self._built_end and self.extend_once():
                             break          # clipped: complete it first
-                        return w
+                        return self._window_of(key, i)
                 else:
                     if not self.extend_once():
                         return None

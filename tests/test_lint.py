@@ -1,0 +1,215 @@
+"""repro.analysis.lint: each AST rule fires on a minimal synthetic
+violation, stays quiet on the compliant twin, and the real tree is
+clean (the CI gate, asserted here so a violation fails the tier-1
+suite locally too — mypy may not be installed, the lint always is).
+"""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint
+
+SRC_ROOT = Path(__file__).resolve().parent.parent / "src"
+
+
+def run_on(tmp_path, rel, code):
+    """Lint one synthetic file planted at repo-relative ``rel``."""
+    f = tmp_path / rel
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(code))
+    findings, n_files = lint.run_lint([tmp_path / "repro"])
+    assert n_files == 1
+    return findings
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+# --- rule 1: ledger encapsulation ---------------------------------------------
+def test_ledger_mutation_flagged_outside_session(tmp_path):
+    findings = run_on(tmp_path, "repro/core/foo.py", """
+        def book(ledger: object) -> None:
+            ledger.reserve(0, 1.0, 2.0)
+    """)
+    assert rules(findings) == ["ledger-encapsulation"]
+    assert "CommsEnvironment.commit" in findings[0].message
+
+
+def test_ledger_mutation_allowed_in_owner_files(tmp_path):
+    findings = run_on(tmp_path, "repro/comms/environment.py", """
+        def commit(self, legs: object) -> None:
+            for gi, t0, t1 in legs:
+                self.ledger.reserve(gi, t0, t1)
+    """)
+    assert rules(findings) == []
+
+
+def test_ledger_read_is_fine(tmp_path):
+    findings = run_on(tmp_path, "repro/core/foo.py", """
+        def fit(ledger: object) -> float:
+            return ledger.earliest_fit(0, 1.0, 2.0, 0.5)
+    """)
+    assert rules(findings) == []
+
+
+def test_reserve_transfer_shim_grandfathered():
+    """The one legacy booking function keeps its direct mutation."""
+    findings, _ = lint.run_lint([SRC_ROOT / "repro" / "core"
+                                 / "scheduling.py"])
+    assert "ledger-encapsulation" not in rules(findings)
+
+
+# --- rule 2: deprecated scheduling shims --------------------------------------
+def test_deprecated_shim_call_flagged(tmp_path):
+    findings = run_on(tmp_path, "repro/core/foo.py", """
+        from repro.core.scheduling import earliest_transfer
+
+        def plan(**kw: object) -> None:
+            earliest_transfer(**kw)
+    """)
+    assert rules(findings) == ["deprecated-shim"]
+
+
+def test_deprecated_shim_alias_and_module_call_flagged(tmp_path):
+    findings = run_on(tmp_path, "repro/orbits/foo.py", """
+        import repro.core.scheduling as sched
+        from repro.core.scheduling import select_sink as pick
+
+        def plan(**kw):
+            pick(**kw)
+            sched.naive_sink_slot(None, 0, 0.0)
+    """)
+    assert rules(findings).count("deprecated-shim") == 2
+
+
+def test_shim_import_alone_is_fine(tmp_path):
+    """Re-exports (core/__init__.py keeps the public names) don't call."""
+    findings = run_on(tmp_path, "repro/core/foo.py", """
+        from repro.core.scheduling import earliest_transfer, select_sink
+    """)
+    assert rules(findings) == []
+
+
+# --- rule 3: unit-suffix discipline -------------------------------------------
+def test_unitless_numeric_field_flagged(tmp_path):
+    findings = run_on(tmp_path, "repro/comms/link.py", """
+        import dataclasses
+
+        @dataclasses.dataclass(frozen=True)
+        class Budget:
+            duration: float
+            bandwidth_hz: float = 1.0e6
+            t_start: float = 0.0
+            gs_index: int = 0
+    """)
+    assert rules(findings) == ["unit-suffix"]
+    assert "Budget.duration" in findings[0].message
+
+
+def test_unit_rule_only_applies_to_scheduling_files(tmp_path):
+    findings = run_on(tmp_path, "repro/models/foo.py", """
+        import dataclasses
+
+        @dataclasses.dataclass
+        class Widths:
+            hidden: int = 32
+    """)
+    assert rules(findings) == []
+
+
+def test_exempt_fields_pass(tmp_path):
+    findings = run_on(tmp_path, "repro/comms/ledger.py", """
+        import dataclasses
+
+        @dataclasses.dataclass
+        class Rec:
+            rid: int
+            seed: int = 0
+            plane: int = 0
+    """)
+    assert rules(findings) == []
+
+
+# --- rule 4: wall-clock ban ---------------------------------------------------
+def test_wall_clock_flagged_in_sim_packages(tmp_path):
+    findings = run_on(tmp_path, "repro/orbits/foo.py", """
+        import time
+
+        def now() -> float:
+            return time.time()
+    """)
+    assert rules(findings) == ["wall-clock"]
+
+
+def test_wall_clock_fine_outside_sim_packages(tmp_path):
+    findings = run_on(tmp_path, "repro/launch/foo.py", """
+        import time
+
+        def now() -> float:
+            return time.perf_counter()
+    """)
+    assert rules(findings) == []
+
+
+# --- rule 5: annotation completeness ------------------------------------------
+def test_unannotated_def_flagged(tmp_path):
+    findings = run_on(tmp_path, "repro/core/foo.py", """
+        def f(x, y: int):
+            return x
+    """)
+    got = rules(findings)
+    assert got == ["annotation", "annotation"]   # params + return
+    assert "unannotated parameter(s): x" in findings[0].message
+
+
+def test_annotated_def_and_init_pass(tmp_path):
+    findings = run_on(tmp_path, "repro/core/foo.py", """
+        class C:
+            def __init__(self, x: int):
+                self.x = x
+
+            def get(self) -> int:
+                return self.x
+    """)
+    assert rules(findings) == []
+
+
+def test_annotation_rule_scoped_to_comms_and_core(tmp_path):
+    findings = run_on(tmp_path, "repro/orbits/foo.py", """
+        def f(x):
+            return x
+    """)
+    assert rules(findings) == []
+
+
+# --- infra --------------------------------------------------------------------
+def test_syntax_error_is_a_finding_not_a_crash(tmp_path):
+    findings = run_on(tmp_path, "repro/core/foo.py", "def broken(:\n")
+    assert rules(findings) == ["syntax"]
+
+
+def test_finding_str_format(tmp_path):
+    findings = run_on(tmp_path, "repro/core/foo.py", """
+        def f(x):
+            return x
+    """)
+    s = str(findings[0])
+    assert s.startswith("repro/core/foo.py:2: [annotation]")
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    ok = tmp_path / "repro" / "core"
+    ok.mkdir(parents=True)
+    (ok / "good.py").write_text("def f(x: int) -> int:\n    return x\n")
+    assert lint.main([str(tmp_path / "repro")]) == 0
+    (ok / "bad.py").write_text("def f(x):\n    return x\n")
+    assert lint.main([str(tmp_path / "repro")]) == 1
+
+
+def test_repo_tree_is_clean():
+    """The enforced gate: the real src/repro tree has zero findings."""
+    findings, n_files = lint.run_lint([SRC_ROOT / "repro"])
+    assert n_files > 50
+    assert findings == [], "\n".join(str(f) for f in findings)

@@ -1,0 +1,412 @@
+"""ScheduleSanitizer: real schedules pass, corrupted schedules fail.
+
+Two halves, mirroring the tool's contract:
+
+  * **Soundness on real schedules**: every strategy's planning surface
+    (FedLEO plane rounds, FedLEOGrid cluster rounds, the naive-sink /
+    async booking path and its release->readmit cycle) across 1-3
+    ground stations, ring and grid topologies, contention-free and
+    RB-contended arms, produces ZERO violations — the paper's
+    eqs. 13-16 / 15 / 21-22 hold on everything the planners emit.
+  * **Completeness on corrupted schedules**: hand-corrupted decisions
+    (oversubscribed RBs, a leg outside every visibility window,
+    non-conserved segment payload, overlapping / non-switching legs,
+    a regressive re-admission, a leaked reservation) are each rejected
+    with the right rule tag.
+
+The deterministic parametrized sweep runs everywhere; the hypothesis
+property test widens the same invariant over random (topology,
+capacity, train-time, probe-time) draws and auto-skips when hypothesis
+is not installed (tests/conftest.py shim) — CI's `property` job runs
+it for real.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis.sanitizer import (
+    ScheduleSanitizer,
+    ScheduleViolation,
+    Violation,
+)
+from repro.comms import CommsEnvironment, GSResourceLedger, LinkConfig
+from repro.comms.environment import PendingUpload, TransferDecision
+from repro.comms.isl import ISLConfig, isl_hop_time
+from repro.comms.routing import ISLPlan, get_routing_table
+from repro.core.fedleo import (
+    make_clusters,
+    plan_cluster_round,
+    plan_plane_round,
+)
+from repro.core.propagation import broadcast_schedule, ring_hops_matrix
+from repro.core.scheduling import TransferSegment
+from repro.orbits.constellation import (
+    ConstellationConfig,
+    GroundStation,
+    Satellite,
+    WalkerDelta,
+)
+from repro.orbits.prediction import VisibilityPredictor
+from repro.orbits.topology import TopologyConfig
+
+PAYLOAD = 3.2e7
+HORIZON_S = 24 * 3600.0
+CFG = ConstellationConfig(num_planes=3, sats_per_plane=6)
+
+
+@pytest.fixture(scope="module")
+def world():
+    walker = WalkerDelta(CFG)
+    a = GroundStation()
+    b = GroundStation(lat_deg=a.lat_deg + 4.0, lon_deg=a.lon_deg + 3.0,
+                      name="GS-B")
+    c = GroundStation(lat_deg=a.lat_deg - 6.0, lon_deg=a.lon_deg + 9.0,
+                      name="GS-C")
+    segments = {1: [a], 2: [a, b], 3: [a, b, c]}
+    preds = {
+        n: VisibilityPredictor(walker, gss, horizon_s=HORIZON_S)
+        for n, gss in segments.items()
+    }
+    return walker, segments, preds
+
+
+def _env(world, n_gs, capacity=None, handover=False, strict=True):
+    """A sanitized session over the shared predictor."""
+    walker, segments, preds = world
+    ledger = (
+        GSResourceLedger(n_gs, capacity) if capacity is not None else None
+    )
+    env = CommsEnvironment(
+        walker=walker, predictor=preds[n_gs], link=LinkConfig(),
+        isl=ISLConfig(), ledger=ledger, handover=handover,
+        gs=segments[n_gs],
+    )
+    ScheduleSanitizer.attach(env, strict=strict)
+    return env
+
+
+def _price_ring(env, train_time_s=600.0, t=0.0):
+    """Commit one FedLEO ring round through the sanitized session."""
+    K = env.walker.config.sats_per_plane
+    train = np.full(K, train_time_s)
+    done = []
+    for plane in range(env.walker.config.num_planes):
+        plan = plan_plane_round(
+            env=env, isl=env.isl, plane=plane, t=t,
+            payload_bits=PAYLOAD, train_times=train,
+        )
+        if plan is None:
+            return None
+        env.commit(plan.decision)
+        done.append(plan.decision.t_upload_done)
+    return max(done)
+
+
+def _price_grid(env, routing, cluster_planes=2, train_time_s=600.0, t=0.0):
+    """Commit one FedLEOGrid cluster round through the session."""
+    K = env.walker.config.sats_per_plane
+    done = []
+    for planes in make_clusters(env.walker.config.num_planes,
+                                cluster_planes):
+        train = np.full(len(planes) * K, train_time_s)
+        plan = plan_cluster_round(
+            env=env, routing=routing, planes=planes, t=t,
+            payload_bits=PAYLOAD, train_times=train,
+        )
+        if plan is None:
+            return None
+        env.commit(plan.decision)
+        done.append(plan.decision.t_upload_done)
+    return max(done)
+
+
+def _price_async(env, train_time_s=600.0, t=0.0, readmit=True):
+    """Naive-sink async booking: download -> flood -> train -> upload,
+    then a release event and (optionally) re-admission."""
+    K = env.walker.config.sats_per_plane
+    t_hop = isl_hop_time(env.isl, PAYLOAD)
+    hops = ring_hops_matrix(K)
+    pending = []
+    for plane in range(env.walker.config.num_planes):
+        dl = env.first_visible_download(plane, t, PAYLOAD)
+        if dl is None:
+            return None
+        src_slot, t_recv = dl
+        events = broadcast_schedule(K, [src_slot], [t_recv], PAYLOAD,
+                                    env.isl)
+        t_done = np.array(
+            [events[s].t_receive + train_time_s for s in range(K)]
+        )
+        sink = env.naive_sink_slot(plane, float(t_done.max()))
+        if sink is None:
+            return None
+        t_ready = float(np.max(t_done + hops[sink] * t_hop))
+        dec = env.plan_upload(Satellite(plane, sink), t_ready, PAYLOAD)
+        if dec is None:
+            return None
+        res = env.commit(dec)
+        pending.append(PendingUpload(
+            plane, Satellite(plane, sink), t_ready, PAYLOAD, dec, res
+        ))
+    victim = min(range(len(pending)),
+                 key=lambda i: (pending[i].decision.t_start, i))
+    env.release(pending[victim].reservation)
+    survivors = [p for i, p in enumerate(pending) if i != victim]
+    if readmit and survivors:
+        survivors, _ = env.readmit(survivors, t)
+    return max(p.decision.t_done for p in survivors) if survivors else None
+
+
+def _grid_routing():
+    return get_routing_table(
+        CFG, TopologyConfig(kind="grid"),
+        ISLPlan(intra=ISLConfig(), inter=ISLConfig()), PAYLOAD,
+    )
+
+
+# --- soundness: real schedules are sanitizer-clean ----------------------------
+@pytest.mark.parametrize("n_gs", [1, 2, 3])
+@pytest.mark.parametrize("capacity", [None, 8, 1])
+def test_ring_rounds_clean(world, n_gs, capacity):
+    env = _env(world, n_gs, capacity=capacity)
+    t_round = _price_ring(env)
+    assert t_round is not None
+    assert env.sanitizer.report() == []
+    assert env.finish_session(t_round) == []
+
+
+@pytest.mark.parametrize("n_gs", [1, 2, 3])
+@pytest.mark.parametrize("capacity", [None, 1])
+def test_grid_rounds_clean(world, n_gs, capacity):
+    env = _env(world, n_gs, capacity=capacity)
+    t_round = _price_grid(env, _grid_routing())
+    assert t_round is not None
+    assert env.sanitizer.report() == []
+    assert env.finish_session(t_round) == []
+
+
+@pytest.mark.parametrize("n_gs", [2, 3])
+def test_handover_rounds_clean(world, n_gs):
+    """Segmented (station-handover) uploads pass the segment rules."""
+    env = _env(world, n_gs, capacity=1, handover=True)
+    t_round = _price_ring(env, train_time_s=60.0)
+    assert t_round is not None
+    assert env.sanitizer.report() == []
+    assert env.finish_session(t_round) == []
+
+
+@pytest.mark.parametrize("n_gs", [1, 2])
+@pytest.mark.parametrize("readmit", [False, True])
+def test_async_booking_and_readmit_clean(world, n_gs, readmit):
+    """The async book/release/readmit cycle — including the eqs. 21-22
+    monotonicity check ``readmit`` runs under — is violation-free, and
+    the strategy-declared open queue is not a leak."""
+    env = _env(world, n_gs, capacity=1)
+    t_round = _price_async(env, readmit=readmit)
+    assert t_round is not None
+    assert env.sanitizer.report() == []
+    assert env.finish_session(t_round) == []
+
+
+def test_sanitized_run_is_bit_identical(world):
+    """Observing must never perturb: the same round priced with and
+    without the sanitizer produces the same completion times."""
+    plain = _env(world, 2, capacity=1)
+    plain.sanitizer = None
+    sanitized = _env(world, 2, capacity=1)
+    assert _price_ring(plain) == _price_ring(sanitized)
+
+
+# --- completeness: corrupted schedules are rejected ---------------------------
+def _upload(env, plane=0, slot=0, t=0.0):
+    dec = env.plan_upload(Satellite(plane, slot), t, PAYLOAD)
+    assert dec is not None
+    return dec
+
+
+def test_rejects_oversubscribed_station(world):
+    """Two identical bookings on a 1-RB station: the second commit
+    must fail eqs. 13-16 BEFORE touching the ledger."""
+    env = _env(world, 1, capacity=1)
+    dec = _upload(env)
+    env.commit(dec)
+    n_before = env.ledger.num_reserved()
+    with pytest.raises(ScheduleViolation, match="rb-capacity"):
+        env.commit(dec)
+    # strict rejection left the ledger exactly as it was
+    assert env.ledger.num_reserved() == n_before
+
+
+def test_oversubscription_within_capacity_is_clean(world):
+    """The same double booking is legal at capacity 2."""
+    env = _env(world, 1, capacity=2)
+    dec = _upload(env)
+    env.commit(dec)
+    env.commit(dec)
+    assert env.sanitizer.report() == []
+
+
+def test_rejects_leg_outside_visibility_window(world):
+    env = _env(world, 1, capacity=1)
+    dec = _upload(env)
+    w = dec.window
+    bad = dataclasses.replace(
+        dec, t_start=w.t_end + 100.0, t_done=w.t_end + 200.0
+    )
+    with pytest.raises(ScheduleViolation, match="window-containment"):
+        env.commit(bad)
+
+
+def test_rejects_nonconserved_segment_payload(world):
+    env = _env(world, 2, capacity=1)
+    dec = _upload(env)
+    w = dec.window
+    mid = (dec.t_start + dec.t_done) / 2.0
+    legs = (
+        TransferSegment(w.gs_index, dec.t_start, mid, 1.0,
+                        w.t_start, w.t_end),
+    )
+    bad = dataclasses.replace(dec, segments=legs)
+    with pytest.raises(ScheduleViolation, match="payload-conservation"):
+        env.commit(bad)
+
+
+def test_rejects_overlapping_segments(world):
+    env = _env(world, 2, capacity=None)
+    dec = _upload(env)
+    w = dec.window
+    t0, t1 = dec.t_start, dec.t_done
+    mid = (t0 + t1) / 2.0
+    legs = (
+        TransferSegment(w.gs_index, t0, mid + 1.0, PAYLOAD / 2,
+                        w.t_start, w.t_end),
+        # overlaps the first leg's tail (and on another station, so the
+        # station-switch rule stays satisfied: this isolates overlap)
+        TransferSegment((w.gs_index + 1) % 2, mid, t1, PAYLOAD / 2,
+                        w.t_start, w.t_end),
+    )
+    bad = dataclasses.replace(dec, segments=legs)
+    with pytest.raises(ScheduleViolation, match="segment-order"):
+        env.commit(bad)
+
+
+def test_rejects_non_switching_segments(world):
+    env = _env(world, 2, capacity=None)
+    dec = _upload(env)
+    w = dec.window
+    t0, t1 = dec.t_start, dec.t_done
+    mid = (t0 + t1) / 2.0
+    legs = (
+        TransferSegment(w.gs_index, t0, mid, PAYLOAD / 2,
+                        w.t_start, w.t_end),
+        TransferSegment(w.gs_index, mid, t1, PAYLOAD / 2,
+                        w.t_start, w.t_end),
+    )
+    bad = dataclasses.replace(dec, segments=legs)
+    with pytest.raises(ScheduleViolation,
+                       match="must switch stations"):
+        env.commit(bad)
+
+
+def test_rejects_readmit_regression(world):
+    env = _env(world, 1)
+    with pytest.raises(ScheduleViolation, match="readmit-regression"):
+        env.sanitizer.observe_readmit(
+            before=[("up-0", 100.0)], after=[("up-0", 250.0)],
+        )
+
+
+def test_reports_reservation_leak(world):
+    """A booking entirely beyond sim end, never released and not in
+    the strategy's open queue, is a leak — unless declared open, or
+    the leak check is waived for an aborted run."""
+    env = _env(world, 1, capacity=1, strict=False)
+    dec = _upload(env, t=3600.0)
+    res = env.commit(dec)
+    leaks = env.finish_session(dec.t_start - 10.0)
+    assert [v.rule for v in leaks] == ["reservation-leak"]
+    # the same booking declared as the async strategy's live queue
+    env2 = _env(world, 1, capacity=1, strict=False)
+    res2 = env2.commit(_upload(env2, t=3600.0))
+    assert env2.finish_session(
+        dec.t_start - 10.0, open_rids=frozenset({res2.rid})
+    ) == []
+    # ... or released in time
+    env3 = _env(world, 1, capacity=1, strict=False)
+    dec3 = _upload(env3, t=3600.0)
+    env3.release(env3.commit(dec3))
+    assert env3.finish_session(dec3.t_start - 10.0) == []
+
+
+def test_nonstrict_collects_instead_of_raising(world):
+    env = _env(world, 1, capacity=1, strict=False)
+    dec = _upload(env)
+    env.commit(dec)
+    env.commit(dec)                     # oversubscribes, but collects
+    report = env.sanitizer.report()
+    assert [v.rule for v in report] == ["rb-capacity"]
+    assert all(isinstance(v, Violation) for v in report)
+    assert "station 0" in str(report[0])
+
+
+def test_simconfig_wires_sanitizer():
+    """SimConfig.sanitize (the tier-1 default) attaches the sanitizer
+    through ``CommsEnvironment.from_sim``; sanitize=False does not."""
+    from repro.core.engine import SimConfig
+
+    sim = SimConfig(constellation=CFG, horizon_hours=6.0)
+    assert sim.sanitize
+    env = CommsEnvironment.from_sim(sim)
+    assert env.sanitizer is not None and env.sanitizer.strict
+    env_off = CommsEnvironment.from_sim(
+        dataclasses.replace(sim, sanitize=False)
+    )
+    assert env_off.sanitizer is None
+
+
+# --- property test: the invariant over random draws ---------------------------
+@given(
+    n_gs=st.integers(min_value=1, max_value=3),
+    capacity=st.sampled_from([None, 1, 2, 8]),
+    kind=st.sampled_from(["ring", "grid", "async"]),
+    train_time_s=st.floats(min_value=30.0, max_value=3600.0),
+    t0_hours=st.floats(min_value=0.0, max_value=6.0),
+)
+@settings(max_examples=20, deadline=None)
+def test_property_schedules_are_sanitizer_clean(
+    n_gs, capacity, kind, train_time_s, t0_hours
+):
+    """Any (ground segment, contention, strategy-surface, round-start)
+    draw yields a violation-free schedule."""
+    walker = WalkerDelta(CFG)
+    a = GroundStation()
+    gss = [
+        a,
+        GroundStation(lat_deg=a.lat_deg + 4.0, lon_deg=a.lon_deg + 3.0,
+                      name="GS-B"),
+        GroundStation(lat_deg=a.lat_deg - 6.0, lon_deg=a.lon_deg + 9.0,
+                      name="GS-C"),
+    ][:n_gs]
+    pred = VisibilityPredictor(walker, gss, horizon_s=HORIZON_S)
+    ledger = (
+        GSResourceLedger(n_gs, capacity) if capacity is not None else None
+    )
+    env = CommsEnvironment(
+        walker=walker, predictor=pred, link=LinkConfig(), isl=ISLConfig(),
+        ledger=ledger, gs=gss,
+    )
+    ScheduleSanitizer.attach(env)
+    t0 = t0_hours * 3600.0
+    if kind == "ring":
+        t_round = _price_ring(env, train_time_s=train_time_s, t=t0)
+    elif kind == "grid":
+        t_round = _price_grid(env, _grid_routing(),
+                              train_time_s=train_time_s, t=t0)
+    else:
+        t_round = _price_async(env, train_time_s=train_time_s, t=t0)
+    assert env.sanitizer.report() == []
+    if t_round is not None:
+        assert env.finish_session(t_round) == []
