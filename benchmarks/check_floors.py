@@ -10,6 +10,9 @@ record per ground-station set:
   * handover round <= no-handover round at 1-RB scarcity,
   * async re-admission round <= book-at-schedule baseline (and its
     mean no worse), when the record carries the async arms,
+  * tracing overhead (repro.obs TraceRecorder attached vs not, on the
+    contended pricing pass) <= 5% of plan wall, when the record
+    carries the overhead columns (schema >= 2),
 
 plus the predictor query-latency floor on the latest
 ``predictor_queries`` record (the 2.86 -> 16.77 us/query regression
@@ -35,6 +38,11 @@ from benchmarks.common import BENCH_TRAJECTORY
 # implementation sat at 16.77): catches an O(windows) query path
 # without flaking on a loaded CI runner
 US_PER_QUERY_FLOOR = 10.0
+
+# tracing must stay within 5% of the untraced plan wall (ISSUE 7
+# acceptance): the overhead pass takes min-of-3 on both sides, so a
+# sustained recorder slowdown trips this without CI-noise flakes
+TRACE_OVERHEAD_FLOOR = 0.05
 
 
 def load_latest_contention(path: str = BENCH_TRAJECTORY) -> List[Dict]:
@@ -131,6 +139,15 @@ def check(records: List[Dict]) -> List[str]:
                     f"{r['async_readmit_mean_s']}s > baseline mean "
                     f"{r['async_scarce_mean_s']}s"
                 )
+        # trace-overhead column exists only from schema 2 (PR 7) on
+        frac = r.get("trace_overhead_fraction")
+        if frac is not None and frac > TRACE_OVERHEAD_FLOOR:
+            failures.append(
+                f"{tag}: tracing overhead {frac * 100:.1f}% > floor "
+                f"{TRACE_OVERHEAD_FLOOR * 100:.0f}% "
+                f"({r.get('plan_wall_plain_s')}s -> "
+                f"{r.get('plan_wall_traced_s')}s)"
+            )
     return failures
 
 
@@ -142,9 +159,11 @@ def main() -> None:
             file=sys.stderr,
         )
         return
-    records = load_latest_contention()
+    # pass the module global explicitly: callers (and tests) may rebind
+    # BENCH_TRAJECTORY, which a def-time default would not see
+    records = load_latest_contention(BENCH_TRAJECTORY)
     failures = check(records)
-    pred = load_latest_predictor()
+    pred = load_latest_predictor(BENCH_TRAJECTORY)
     failures += check_predictor(pred)
     if pred is not None:
         print(
@@ -160,6 +179,12 @@ def main() -> None:
             f"scarce {r.get('ring_scarce_s')}/{r.get('grid_scarce_s')}s; "
             f"async {r.get('async_readmit_s')}s vs "
             f"{r.get('async_scarce_s')}s"
+            + (
+                f"; trace overhead "
+                f"{r['trace_overhead_fraction'] * 100:+.1f}% "
+                f"(floor {TRACE_OVERHEAD_FLOOR * 100:.0f}%)"
+                if r.get("trace_overhead_fraction") is not None else ""
+            )
         )
     if failures:
         for msg in failures:

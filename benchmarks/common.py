@@ -15,7 +15,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 FAST = os.environ.get("BENCH_FAST", "0") == "1"
 
@@ -26,15 +26,35 @@ PAYLOAD_BITS = int(4e6 * 32)
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_TRAJECTORY = os.path.join(REPO_ROOT, "BENCH_topology.json")
 
+# BENCH record schema: bumped when the row shape changes in a way
+# consumers may care about.  2 = ISSUE 7 (obs): rows carry schema +
+# run_id stamps and may carry decomposition/utilization columns.
+BENCH_SCHEMA = 2
+
+_RUN_ID: Optional[str] = None
+
+
+def bench_run_id() -> str:
+    """One id per benchmark process, stamped into every row it appends
+    — rows of one invocation are groupable in the append-only
+    trajectory, and obs-enriched (schema >= 2) rows are distinguishable
+    from pre-PR-7 history."""
+    global _RUN_ID
+    if _RUN_ID is None:
+        _RUN_ID = f"{os.getpid():x}-{time.time_ns():x}"
+    return _RUN_ID
+
 
 def append_bench(rec: Dict, path: Optional[str] = None) -> None:
     """Print a ``BENCH {json}`` line and append it to the repo-root
-    trajectory file (one JSON record per line).
+    trajectory file (one JSON record per line), stamped with the BENCH
+    ``schema`` version and this process's ``run_id``.
 
     Tolerant of a corrupt/truncated final line (e.g. a benchmark killed
     mid-write): the partial line is newline-quarantined so the appended
     record always starts a fresh, parseable line.
     """
+    rec = {**rec, "schema": BENCH_SCHEMA, "run_id": bench_run_id()}
     line = json.dumps(rec)
     print("BENCH " + line)
     target = path or BENCH_TRAJECTORY
@@ -96,7 +116,8 @@ def timed(fn: Callable) -> tuple:
 
 
 def make_comms_env(sim, *, predictor=None, walker=None, capacity=None,
-                   handover: bool = False, sanitize: bool = False):
+                   handover: bool = False, sanitize: bool = False,
+                   trace: bool = False):
     """A benchmark-arm ``CommsEnvironment``: share one (expensive)
     predictor across arms (pass the base arm's ``predictor``/
     ``walker``), give each arm its own fresh ledger and handover
@@ -104,7 +125,9 @@ def make_comms_env(sim, *, predictor=None, walker=None, capacity=None,
     construction is ``CommsEnvironment.from_sim`` — the one recipe —
     so benchmark arms and strategies always agree on the predictor.
     ``sanitize`` attaches a strict ``ScheduleSanitizer`` to the arm
-    (the ``--quick`` smoke configuration; timed arms leave it off)."""
+    (the ``--quick`` smoke configuration; timed arms leave it off);
+    ``trace`` a ``TraceRecorder`` (detach it — ``env.recorder.detach()``
+    — before pricing further untraced arms on the shared predictor)."""
     from repro.comms.environment import CommsEnvironment
     from repro.comms.ledger import GSResourceLedger
 
@@ -119,7 +142,8 @@ def make_comms_env(sim, *, predictor=None, walker=None, capacity=None,
         GSResourceLedger(len(env.ground_stations), capacity)
         if capacity is not None else None
     )
-    return env.derive(ledger=ledger, handover=handover, sanitize=sanitize)
+    return env.derive(ledger=ledger, handover=handover, sanitize=sanitize,
+                      trace=trace)
 
 
 def price_ring_round(
@@ -127,6 +151,7 @@ def price_ring_round(
     payload_bits: float = PAYLOAD_BITS,
     train_time_s: float = 600.0,
     t: float = 0.0,
+    groups: Optional[List] = None,
 ):
     """Full FedLEO ring round time via the pure plane planners (no JAX
     training): every plane needs its own GS download and sink upload.
@@ -135,10 +160,13 @@ def price_ring_round(
     against residual station capacity (no ledger = the pre-ledger
     contention-free pricing); the session's handover policy lets each
     upload split into station-handover segments.  None if any plane
-    stalls."""
+    stalls.  Pass a list as ``groups`` to collect each plane's typed
+    ``GroupDecomposition`` (repro.obs) — read-only on the plans, so
+    collection never changes the priced schedule."""
     import numpy as np
 
     from repro.core.fedleo import plan_plane_round
+    from repro.obs import decompose_group_plan
 
     K = env.walker.config.sats_per_plane
     train = np.full(K, train_time_s)
@@ -151,6 +179,8 @@ def price_ring_round(
         if plan is None:
             return None            # a plane stalls the whole round
         env.commit(plan.decision)
+        if groups is not None:
+            groups.append(decompose_group_plan(plan, t))
         done.append(plan.decision.t_upload_done)
     return max(done)
 
@@ -162,13 +192,15 @@ def price_grid_round(
     train_time_s: float = 600.0,
     dynamic: bool = False,
     t: float = 0.0,
+    groups: Optional[List] = None,
 ):
     """Full FedLEOGrid round time via the pure cluster planners: one
     download + one sink upload per cluster.  ``dynamic=True`` re-forms
     clusters from predicted window supply (the strategy default) —
     discounted by the session ledger's residual station capacity
     (formation feedback); ``False`` keeps the static adjacent-plane
-    grouping.  Session semantics as in ``price_ring_round``."""
+    grouping.  Session and ``groups`` semantics as in
+    ``price_ring_round``."""
     import numpy as np
 
     from repro.core.fedleo import (
@@ -176,6 +208,7 @@ def price_grid_round(
         plan_cluster_round,
         supply_driven_clusters,
     )
+    from repro.obs import decompose_group_plan
 
     K = env.walker.config.sats_per_plane
     L = env.walker.config.num_planes
@@ -196,6 +229,8 @@ def price_grid_round(
         if plan is None:
             return None
         env.commit(plan.decision)
+        if groups is not None:
+            groups.append(decompose_group_plan(plan, t))
         done.append(plan.decision.t_upload_done)
     return max(done)
 

@@ -43,6 +43,16 @@ ROADMAP's ledger-aware async re-admission).  Floors: the re-admission
 round completes no later than the baseline (guaranteed per-entry), and
 the mean upload completion — the async freshness signal — improves.
 
+Observability columns (repro.obs, ISSUE 7): the contended arms fold
+their typed per-group phase decomposition means into the row
+(``ring_contended_decomp``/``grid_contended_decomp``), the scarce
+arms their per-station RB-utilization over the priced round
+(``ring_scarce_rb_util``/``grid_scarce_rb_util``), and a dedicated
+overhead pass re-prices the contended ring+grid round untraced then
+traced on fresh unsanitized sessions (min of 3 repeats each) to record
+``trace_overhead_fraction`` — floored at <= 5% by
+``benchmarks.check_floors``.
+
 Usage: PYTHONPATH=src python -m benchmarks.gs_contention [--quick]
 """
 from __future__ import annotations
@@ -61,6 +71,7 @@ from benchmarks.common import (
 )
 from repro.comms.routing import ISLPlan, get_routing_table
 from repro.configs.constellations import make_sim_config
+from repro.obs import ledger_rb_utilization, mean_phase_seconds
 
 CONSTELLATION = "starlink-40x22"
 GS_SETS = (("rolla",), ("rolla", "punta-arenas"),
@@ -106,15 +117,28 @@ def run(gs_sets=GS_SETS, sanitize: bool = False) -> List[dict]:
             ("scarce", 1, False),                       # one RB per station
             ("handover", 1, True),                      # 1 RB + segmentation
         )
+        # typed per-group decomposition of the contended arms and the
+        # scarce arms' ledgers (for RB utilization) ride along — both
+        # are pure reads on the priced plans/bookings
+        decomp_groups = {"ring": [], "grid": []}
+        scarce_envs = {}
         for label, capacity, handover in modes:
+            ring_env = arm(capacity, handover)
             out[f"ring_{label}"] = price_ring_round(
-                arm(capacity, handover), train_time_s=TRAIN_TIME_S,
+                ring_env, train_time_s=TRAIN_TIME_S,
+                groups=(decomp_groups["ring"] if label == "contended"
+                        else None),
             )
+            grid_env = arm(capacity, handover)
             out[f"grid_{label}"] = price_grid_round(
-                arm(capacity, handover), routing,
+                grid_env, routing,
                 cluster_planes=CLUSTER_PLANES,
                 train_time_s=TRAIN_TIME_S, dynamic=True,
+                groups=(decomp_groups["grid"] if label == "contended"
+                        else None),
             )
+            if label == "scarce":
+                scarce_envs = {"ring": ring_env, "grid": grid_env}
         heavy = HEAVY_FACTOR * PAYLOAD_BITS
         for label, handover in (("heavy", False), ("heavy_handover", True)):
             out[f"ring_{label}"] = price_ring_round(
@@ -136,6 +160,17 @@ def run(gs_sets=GS_SETS, sanitize: bool = False) -> List[dict]:
             arm(1), train_time_s=TRAIN_TIME_S, readmit=True,
         )
         wall = time.perf_counter() - t0
+        # per-station RB utilization of the scarce round, read off the
+        # arm's ledger occupancy over [0, round end] before close-out
+        for kind in ("ring", "grid"):
+            t_end = out[f"{kind}_scarce"]
+            out[f"{kind}_scarce_rb_util"] = (
+                None if t_end is None else [
+                    round(u, 4) for u in ledger_rb_utilization(
+                        scarce_envs[kind].ledger, 0.0, t_end,
+                    )
+                ]
+            )
         # sanitized smokes: every arm's commits were invariant-checked
         # live (strict mode raises on violation); the pricing functions
         # never release their bookings, so run only the per-commit
@@ -143,8 +178,57 @@ def run(gs_sets=GS_SETS, sanitize: bool = False) -> List[dict]:
         for env in arms_made:
             env.finish_session(float("inf"), check_leaks=False)
 
+        # tracing-overhead pass: re-price the contended ring+grid round
+        # on fresh UNSANITIZED sessions so the sanitizer never pads the
+        # denominator.  A single pricing pass is only ~0.1 s of wall —
+        # far below this host's timer jitter — so each timed sample
+        # amortizes ITERS_PER_SAMPLE full passes, samples interleave
+        # plain/traced (drift hits both arms equally) and each arm
+        # keeps the min of 5 after a warmup pair.  A traced session
+        # attaches to the shared predictor — detached before the next
+        # sample's envs are built.
+        ITERS_PER_SAMPLE = 3
+
+        def overhead_pass(trace: bool) -> float:
+            w = 0.0
+            for _ in range(ITERS_PER_SAMPLE):
+                envs = [
+                    make_comms_env(
+                        sim, predictor=base_env.predictor,
+                        walker=base_env.walker,
+                        capacity=sim.link.num_resource_blocks,
+                        trace=trace,
+                    )
+                    for _ in range(2)
+                ]
+                t_pass = time.perf_counter()
+                price_ring_round(envs[0], train_time_s=TRAIN_TIME_S)
+                price_grid_round(
+                    envs[1], routing, cluster_planes=CLUSTER_PLANES,
+                    train_time_s=TRAIN_TIME_S, dynamic=True,
+                )
+                w += time.perf_counter() - t_pass
+                for env in envs:
+                    if trace:
+                        env.recorder.detach()
+                    env.finish_session(float("inf"), check_leaks=False)
+            return w
+
+        overhead_pass(trace=False)
+        overhead_pass(trace=True)
+        plain_walls, traced_walls = [], []
+        for _ in range(5):
+            plain_walls.append(overhead_pass(trace=False))
+            traced_walls.append(overhead_pass(trace=True))
+        plan_wall_plain = min(plain_walls)
+        plan_wall_traced = min(traced_walls)
+
         def _r(x):
             return None if x is None else round(x, 1)
+
+        def _rdecomp(groups):
+            return {k: round(v, 1)
+                    for k, v in mean_phase_seconds(groups).items()}
 
         ring_c, grid_c = out["ring_contended"], out["grid_contended"]
         rows.append({
@@ -199,7 +283,16 @@ def run(gs_sets=GS_SETS, sanitize: bool = False) -> List[dict]:
                 or out["async_scarce"] is None
                 else _r(out["async_scarce"] - out["async_readmit"])
             ),
+            "ring_contended_decomp": _rdecomp(decomp_groups["ring"]),
+            "grid_contended_decomp": _rdecomp(decomp_groups["grid"]),
+            "ring_scarce_rb_util": out["ring_scarce_rb_util"],
+            "grid_scarce_rb_util": out["grid_scarce_rb_util"],
             "plan_wall_s": round(wall, 3),
+            "plan_wall_plain_s": round(plan_wall_plain, 4),
+            "plan_wall_traced_s": round(plan_wall_traced, 4),
+            "trace_overhead_fraction": round(
+                (plan_wall_traced - plan_wall_plain) / plan_wall_plain, 4
+            ),
         })
     return rows
 
@@ -265,7 +358,9 @@ def main() -> None:
             f"async 1 RB round {r['async_scarce_s']}s -> "
             f"{r['async_readmit_s']}s, mean "
             f"{r['async_scarce_mean_s']}s -> {r['async_readmit_mean_s']}s "
-            f"({r['async_repriced']} re-priced)"
+            f"({r['async_repriced']} re-priced) | "
+            f"trace overhead {r['trace_overhead_fraction'] * 100:+.1f}% "
+            f"({r['plan_wall_plain_s']}s -> {r['plan_wall_traced_s']}s)"
         )
     print(f"# grid <= ring under contention — "
           f"{'OK' if ok else 'REGRESSION'}")

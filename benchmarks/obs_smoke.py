@@ -1,0 +1,47 @@
+"""CI observability smoke: record a short traced FedLEO run to JSONL.
+
+Runs a 2-round FedLEO fit with ``SimConfig.trace`` on (the full hook
+surface: plan/commit instants and spans, rolling-horizon extensions,
+predictor query counters, routing-cache counters, round spans with
+typed decompositions, structured verbose round logs) and writes the
+trace with ``repro.obs.export.write_trace``.  The CI job then replays
+the file through ``python -m repro.obs.report`` (and its Perfetto
+export) and uploads it as a build artifact — so every PR leaves an
+inspectable trace of the scheduler it shipped.
+
+Usage: PYTHONPATH=src python -m benchmarks.obs_smoke TRACE.jsonl
+       [--rounds N]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import make_task
+from repro.core import FedLEO, SimConfig
+from repro.obs.export import write_trace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out", help="JSONL trace path to write")
+    ap.add_argument("--rounds", type=int, default=2)
+    args = ap.parse_args()
+
+    sim = SimConfig(horizon_hours=72.0, trace=True)
+    leo = FedLEO(make_task(num_samples=800, sim_epochs=4), sim)
+    res = leo.run(max_rounds=args.rounds, verbose=True)
+    leo.recorder.detach()
+    n = write_trace(leo.recorder, args.out)
+    counters = leo.recorder.counters
+    if not res.history:
+        raise SystemExit("traced run produced no rounds")
+    if counters.get("rounds", 0) != len(res.history):
+        raise SystemExit("round events do not match history length")
+    print(
+        f"# wrote {n} events / {len(counters)} counters "
+        f"({len(res.history)} rounds) to {args.out}"
+    )
+
+
+if __name__ == "__main__":
+    main()

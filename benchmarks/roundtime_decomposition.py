@@ -1,52 +1,94 @@
 """Paper §IV-A analysis: the eq. (10) -> eq. (12) round-latency collapse.
 
-Computes, on the identical constellation state, the analytic per-round
-latency of (a) the sequential star schedule (eq. 10) and (b) FedLEO's
-propagate-train-relay-sink schedule (eq. 12), plus the realized FedLEO
-decomposition (broadcast / train / relay+wait / upload)."""
+Runs, on the identical constellation state, (a) the sequential star
+schedule (eq. 10, ``FedAvgStar``) and (b) FedLEO's propagate-train-
+relay-sink schedule (eq. 12), and reports the realized per-phase
+decomposition of the FedLEO rounds — read off the typed
+``RoundDecomposition`` every ``HistoryPoint`` now carries (repro.obs),
+not scraped from the legacy ``events`` dicts.
+
+The FedLEO arm runs with ``SimConfig.trace`` on, so the decomposition
+this benchmark reports is the same object a recorded trace carries
+(``python -m repro.obs.report`` renders it per round).
+
+Usage: PYTHONPATH=src python -m benchmarks.roundtime_decomposition
+[--quick]  (``--quick`` = 1 round on the FAST task sizing — the CI
+smoke configuration; full runs do 2 rounds at the standard sizing.)
+"""
 from __future__ import annotations
 
+import argparse
 from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import make_task
+from benchmarks.common import append_bench, make_task
 from repro.core import FedLEO, SimConfig
 from repro.core.baselines import FedAvgStar
+from repro.obs import mean_phase_seconds
 
 
-def run() -> Dict:
-    sim = SimConfig(horizon_hours=72.0)
+def run(quick: bool = False) -> Dict:
+    sim = SimConfig(horizon_hours=72.0, trace=True)
+    rounds = 1 if quick else 2
+    task_kw = dict(num_samples=800, sim_epochs=4) if quick else {}
 
-    leo = FedLEO(make_task(), sim)
-    res_leo = leo.run(max_rounds=2)
-    star = FedAvgStar(make_task(), sim)
-    res_star = star.run(max_rounds=2)
+    leo = FedLEO(make_task(**task_kw), sim)
+    res_leo = leo.run(max_rounds=rounds)
+    leo.recorder.detach()
+    star = FedAvgStar(make_task(**task_kw), SimConfig(horizon_hours=72.0))
+    res_star = star.run(max_rounds=rounds)
 
-    rows = []
-    for h in res_leo.history:
-        for p in h.events["planes"]:
-            rows.append(p)
-    waits = [p["t_wait_sink"] for p in rows]
+    decomps = [h.decomposition for h in res_leo.history]
+    groups = [g for d in decomps for g in d.groups]
+    phase = {
+        k: round(v, 1) for k, v in mean_phase_seconds(groups).items()
+    }
+    # every group's phases must tile its round span exactly — the
+    # decomposition is milestones, not estimates
+    for g in groups:
+        spans = g.phase_spans()
+        assert abs(sum(t1 - t0 for _, t0, t1 in spans) - g.round_s) < 1e-6
+        assert all(t1 >= t0 for _, t0, t1 in spans)
+
     out = {
+        "bench": "roundtime_decomposition",
+        "rounds": rounds,
         "fedleo_round_h_mean": float(
-            np.mean([
-                h.t_hours - (res_leo.history[i - 1].t_hours if i else 0.0)
-                for i, h in enumerate(res_leo.history)
-            ])
+            np.mean([d.round_s for d in decomps]) / 3600.0
         ),
         "star_round_h_mean": float(
-            np.mean([
-                h.t_hours - (res_star.history[i - 1].t_hours if i else 0.0)
-                for i, h in enumerate(res_star.history)
-            ])
+            np.mean([h.decomposition.round_s for h in res_star.history])
+            / 3600.0
         ),
-        "sink_wait_h_mean": float(np.mean(waits) / 3600.0),
-        "planes_per_round": len(res_leo.history[0].events["planes"]),
+        "sink_wait_h_mean": float(
+            np.mean([g.sink_wait_s for g in groups]) / 3600.0
+        ),
+        "planes_per_round": len(decomps[0].groups),
+        "trace_events": len(leo.recorder.events),
+        **{f"fedleo_{k}": v for k, v in phase.items()},
     }
-    out["speedup"] = out["star_round_h_mean"] / out["fedleo_round_h_mean"]
+    out["speedup"] = round(
+        out["star_round_h_mean"] / out["fedleo_round_h_mean"], 2
+    )
     return out
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="1 round on the FAST task sizing (CI smoke)")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    append_bench(out)
+    print(
+        f"# FedLEO round {out['fedleo_round_h_mean']:.2f}h vs star "
+        f"{out['star_round_h_mean']:.2f}h ({out['speedup']}x), "
+        f"sink wait {out['sink_wait_h_mean']:.2f}h over "
+        f"{out['planes_per_round']} planes/round, "
+        f"{out['trace_events']} trace events"
+    )
+
+
 if __name__ == "__main__":
-    print(run())
+    main()

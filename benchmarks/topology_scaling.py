@@ -36,6 +36,7 @@ from benchmarks.common import (
 from repro.comms.routing import ISLPlan, get_routing_table
 from repro.configs.constellations import make_sim_config
 from repro.core.fedleo import make_clusters
+from repro.obs import mean_phase_seconds
 
 CONSTELLATION = "starlink-40x22"
 GS_SETS = (("rolla",), ("rolla", "punta-arenas"),
@@ -64,8 +65,13 @@ def run(gs_sets=GS_SETS) -> List[dict]:
         # fresh env per arm: each must not see the other's bookings)
         base_env = make_comms_env(sim)
 
+        # typed phase decompositions (repro.obs) ride along — pure
+        # reads on each plane/cluster plan, negligible next to planning
+        ring_groups: List = []
+        grid_groups: List = []
         t0 = time.perf_counter()
-        ring = price_ring_round(base_env.derive(), train_time_s=TRAIN_TIME_S)
+        ring = price_ring_round(base_env.derive(), train_time_s=TRAIN_TIME_S,
+                                groups=ring_groups)
         t_ring = time.perf_counter() - t0
 
         if routing is None:
@@ -85,8 +91,13 @@ def run(gs_sets=GS_SETS) -> List[dict]:
         grid = price_grid_round(
             base_env.derive(), routing,
             cluster_planes=CLUSTER_PLANES, train_time_s=TRAIN_TIME_S,
+            groups=grid_groups,
         )
         t_grid = time.perf_counter() - t0
+
+        def _rdecomp(groups):
+            return {k: round(v, 1)
+                    for k, v in mean_phase_seconds(groups).items()}
 
         rows.append({
             "bench": "topology_scaling",
@@ -104,6 +115,8 @@ def run(gs_sets=GS_SETS) -> List[dict]:
             "gs_trips_grid": len(
                 make_clusters(sim.constellation.num_planes, CLUSTER_PLANES)
             ),
+            "ring_decomp": _rdecomp(ring_groups),
+            "grid_decomp": _rdecomp(grid_groups),
             "plan_wall_ring_s": round(t_ring, 3),
             "plan_wall_grid_s": round(t_grid, 3),
             "routing_build_s": round(t_routing, 3),

@@ -23,13 +23,16 @@ on (each with a narrow, justified allow-list):
                          mixed-unit bugs (seconds vs hours, bits vs
                          bytes) are the classic scheduling failure.
   wall-clock             no wall-clock reads (``time.time`` & friends)
-                         in ``core/``, ``comms/``, ``orbits/``: the
-                         simulation owns its clock; wall-clock in the
-                         sim path destroys reproducibility.
-  annotation             every function in ``comms/`` and ``core/`` is
-                         fully annotated — the local, dependency-free
-                         mirror of the CI mypy ``disallow_untyped_defs``
-                         gate.
+                         in ``core/``, ``comms/``, ``orbits/`` or
+                         ``obs/``: the simulation owns its clock;
+                         wall-clock in the sim path destroys
+                         reproducibility.  The single sanctioned shim
+                         is ``repro/obs/_walltime.py`` (trace-file
+                         provenance stamps only).
+  annotation             every function in ``comms/``, ``core/`` and
+                         ``obs/`` is fully annotated — the local,
+                         dependency-free mirror of the CI mypy
+                         ``disallow_untyped_defs`` gate.
 
 Exit status 1 when any finding is reported, 0 on a clean tree.
 """
@@ -121,16 +124,22 @@ _NUMERIC_ANNOTATIONS = {
 
 
 # --- rule 4: wall-clock ban ---------------------------------------------------
-_SIM_PACKAGES = ("repro/core/", "repro/comms/", "repro/orbits/")
+_SIM_PACKAGES = (
+    "repro/core/", "repro/comms/", "repro/orbits/", "repro/obs/",
+)
+# the ONE sanctioned wall-clock shim: repro.obs._walltime stamps
+# exported trace FILES with their recording time (file provenance, not
+# simulation state) — everything in obs/ must route through it
+_WALL_CLOCK_EXEMPT_FILES = ("repro/obs/_walltime.py",)
 _WALL_CLOCK_CALLS = {
     ("time", "time"), ("time", "perf_counter"), ("time", "monotonic"),
-    ("time", "process_time"), ("datetime", "now"), ("datetime", "today"),
-    ("datetime", "utcnow"),
+    ("time", "process_time"), ("time", "time_ns"), ("datetime", "now"),
+    ("datetime", "today"), ("datetime", "utcnow"),
 }
 
 
 # --- rule 5: annotation completeness ------------------------------------------
-_ANNOTATION_PACKAGES = ("repro/comms/", "repro/core/")
+_ANNOTATION_PACKAGES = ("repro/comms/", "repro/core/", "repro/obs/")
 
 
 def _enclosing_functions(tree: ast.Module) -> Dict[ast.AST, str]:
@@ -265,6 +274,8 @@ def _check_wall_clock(
     rel: str, tree: ast.Module, findings: List[Finding]
 ) -> None:
     if not rel.startswith(_SIM_PACKAGES):
+        return
+    if rel in _WALL_CLOCK_EXEMPT_FILES:
         return
     for node in ast.walk(tree):
         if not (isinstance(node, ast.Call)

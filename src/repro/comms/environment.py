@@ -71,6 +71,7 @@ from repro.orbits.visibility import VisibilityWindow
 if TYPE_CHECKING:
     from repro.analysis.sanitizer import ScheduleSanitizer, Violation
     from repro.core.engine import SimConfig
+    from repro.obs.trace import TraceRecorder
     from repro.core.scheduling import (
         ClusterSinkDecision,
         HandoverSpec,
@@ -222,6 +223,13 @@ class CommsEnvironment:
         # invariant checker (repro.analysis.sanitizer), installed by
         # from_sim/derive(sanitize=True) or ScheduleSanitizer.attach
         self.sanitizer: Optional["ScheduleSanitizer"] = None
+        # observability recorder (repro.obs), installed by
+        # from_sim(trace=True)/derive(trace=True) or
+        # TraceRecorder.attach.  Read-only observer: every hook site
+        # guards on None, so the untraced path pays one branch and the
+        # traced path stays bit-identical (the recorder never mutates
+        # scheduling state).
+        self.recorder: Optional["TraceRecorder"] = None
 
     @classmethod
     def from_sim(cls, sim: "SimConfig", walker: Optional[WalkerDelta] = None
@@ -260,6 +268,10 @@ class CommsEnvironment:
             from repro.analysis.sanitizer import ScheduleSanitizer
 
             ScheduleSanitizer.attach(env)
+        if getattr(sim, "trace", False):
+            from repro.obs.trace import TraceRecorder
+
+            TraceRecorder.attach(env)
         return env
 
     @property
@@ -268,14 +280,17 @@ class CommsEnvironment:
 
     def derive(self, *, ledger: Any = _UNSET, handover: Any = _UNSET,
                link: Any = _UNSET, isl: Any = _UNSET,
-               sanitize: bool = False) -> "CommsEnvironment":
+               sanitize: bool = False,
+               trace: bool = False) -> "CommsEnvironment":
         """Sibling session sharing this one's walker/predictor/budgets
         but with its OWN booking state: by default the new session gets
         a fresh, empty ledger of the parent's capacity (no ledger stays
         no ledger), so derived arms never see each other's bookings —
         how benchmarks price the same window table under different
         contention regimes.  Pass ``ledger=...`` to override;
-        ``sanitize=True`` attaches a fresh ``ScheduleSanitizer``."""
+        ``sanitize=True`` attaches a fresh ``ScheduleSanitizer``;
+        ``trace=True`` a fresh ``TraceRecorder`` (detach it before
+        reusing the shared predictor untraced)."""
         if ledger is _UNSET:
             ledger = (
                 GSResourceLedger(self.ledger.num_stations,
@@ -294,6 +309,10 @@ class CommsEnvironment:
             from repro.analysis.sanitizer import ScheduleSanitizer
 
             ScheduleSanitizer.attach(env)
+        if trace:
+            from repro.obs.trace import TraceRecorder
+
+            TraceRecorder.attach(env)
         return env
 
     # -- transfer planning -----------------------------------------------------
@@ -345,16 +364,20 @@ class CommsEnvironment:
             handover_spec=spec,
         )
         if hit is None:
-            return None
-        if spec is not None:
-            t0, t_done, w, segments = hit
+            decision = None
         else:
-            t0, t_done, w = hit
-            segments = ()
-        return TransferDecision(
-            "up", t0, t_done, w, tuple(segments),
-            payload_bits=float(payload_bits),
-        )
+            if spec is not None:
+                t0, t_done, w, segments = hit
+            else:
+                t0, t_done, w = hit
+                segments = ()
+            decision = TransferDecision(
+                "up", t0, t_done, w, tuple(segments),
+                payload_bits=float(payload_bits),
+            )
+        if self.recorder is not None:
+            self.recorder.on_plan("up", sat, t_ready, decision)
+        return decision
 
     def plan_download(
         self,
@@ -375,11 +398,15 @@ class CommsEnvironment:
             contended=False,
         )
         if hit is None:
-            return None
-        t0, t_done, w = hit
-        return TransferDecision(
-            "down", t0, t_done, w, payload_bits=float(payload_bits)
-        )
+            decision = None
+        else:
+            t0, t_done, w = hit
+            decision = TransferDecision(
+                "down", t0, t_done, w, payload_bits=float(payload_bits)
+            )
+        if self.recorder is not None:
+            self.recorder.on_plan("down", sat, t, decision)
+        return decision
 
     # -- sink selection --------------------------------------------------------
     def select_sink(
@@ -490,6 +517,10 @@ class CommsEnvironment:
         if self.ledger is not None:
             for gi, t0, t1 in legs:
                 self.ledger.reserve(gi, t0, t1)
+        if self.recorder is not None:
+            # record AFTER booking: a sanitizer-rejected commit leaves
+            # no trace event
+            self.recorder.on_commit(reservation)
         return reservation
 
     def release(
@@ -524,6 +555,8 @@ class CommsEnvironment:
         reservation.released = True
         if self.sanitizer is not None:
             self.sanitizer.observe_release(reservation, tuple(freed))
+        if self.recorder is not None and freed:
+            self.recorder.on_release(reservation, tuple(freed))
         if freed and self.ledger is not None:
             for cb in list(self._release_listeners):
                 cb(reservation, tuple(freed))
@@ -622,6 +655,8 @@ class CommsEnvironment:
             self.sanitizer.observe_readmit(
                 before, [(p.key, p.decision.t_done) for p in pending]
             )
+        if self.recorder is not None:
+            self.recorder.on_readmit(t_now, len(pending), repriced)
         return pending, repriced
 
     def finish_session(

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -170,7 +170,38 @@ class RoutingTable:
         return relay_arrivals(self.latency, sink, t_ready, rows)
 
 
+# cache hit/miss observers (repro.obs wires TraceRecorder counters in
+# here); a listener must never raise and must not call back into
+# get_routing_table
+_CACHE_LISTENERS: List[Callable[[bool], None]] = []
+
+
+def on_routing_cache(
+    callback: Callable[[bool], None],
+) -> Callable[[], None]:
+    """Register ``callback(hit)`` to observe every ``get_routing_table``
+    lookup (True = LRU cache hit).  Returns an unsubscribe function."""
+    _CACHE_LISTENERS.append(callback)
+
+    def unsubscribe() -> None:
+        if callback in _CACHE_LISTENERS:
+            _CACHE_LISTENERS.remove(callback)
+
+    return unsubscribe
+
+
 @functools.lru_cache(maxsize=32)
+def _routing_table_cached(
+    constellation: ConstellationConfig,
+    topology: TopologyConfig,
+    plan: ISLPlan,
+    payload_bits: float,
+) -> RoutingTable:
+    return RoutingTable(
+        get_isl_topology(constellation, topology), plan, payload_bits
+    )
+
+
 def get_routing_table(
     constellation: ConstellationConfig,
     topology: TopologyConfig,
@@ -182,7 +213,23 @@ def get_routing_table(
     static per scenario, so strategies and benchmark arms re-running
     the same topology share one table (and the hop-split computation
     behind it) instead of rebuilding it per run.  The table is
-    read-only by convention; callers must not mutate its matrices."""
-    return RoutingTable(
-        get_isl_topology(constellation, topology), plan, payload_bits
+    read-only by convention; callers must not mutate its matrices.
+    Registered ``on_routing_cache`` observers see each lookup's
+    hit/miss outcome."""
+    if not _CACHE_LISTENERS:
+        return _routing_table_cached(
+            constellation, topology, plan, payload_bits
+        )
+    before = _routing_table_cached.cache_info().hits
+    table = _routing_table_cached(
+        constellation, topology, plan, payload_bits
     )
+    hit = _routing_table_cached.cache_info().hits > before
+    for cb in list(_CACHE_LISTENERS):
+        cb(hit)
+    return table
+
+
+# back-compat: expose the underlying LRU controls on the public name
+get_routing_table.cache_info = _routing_table_cached.cache_info
+get_routing_table.cache_clear = _routing_table_cached.cache_clear

@@ -26,6 +26,14 @@ from repro.comms.environment import CommsEnvironment
 from repro.comms.isl import ISLConfig
 from repro.comms.link import LinkConfig
 from repro.core.fltask import FederatedTask
+from repro.obs import (
+    NULL_RECORDER,
+    GroupDecomposition,
+    RoundDecomposition,
+    TraceRecorder,
+    format_round_line,
+    round_log_record,
+)
 from repro.orbits.constellation import (
     ConstellationConfig,
     GroundStation,
@@ -98,6 +106,14 @@ class SimConfig:
     # On by default — tests and --quick benchmark smokes run sanitized;
     # timed benchmark arms turn it off.
     sanitize: bool = True
+    # Observability (repro.obs): attach a TraceRecorder to the
+    # strategy's CommsEnvironment — every plan/commit/release/readmit,
+    # rolling-horizon extension and FL round lands in a typed,
+    # sim-timestamped trace (export via repro.obs.export, report via
+    # ``python -m repro.obs.report``).  Tracing is zero-interference:
+    # a traced run is bit-identical to an untraced one (schedules,
+    # sink decisions, metrics) — equivalence-tested.  Off by default.
+    trace: bool = False
     seed: int = 0
 
     @property
@@ -111,6 +127,11 @@ class HistoryPoint:
     round_index: int
     metrics: Dict[str, float]
     events: Dict[str, Any]
+    # typed per-round phase decomposition (repro.obs) — the structured
+    # replacement for scraping the ``events`` dicts; always populated
+    # by ``FLStrategy.run`` (groups are empty for strategies without a
+    # group planner)
+    decomposition: Optional[RoundDecomposition] = None
 
 
 @dataclasses.dataclass
@@ -158,6 +179,16 @@ class FLStrategy:
         self.global_params = task.global_params
         self.rng = jax.random.PRNGKey(sim.seed)
         self.round_index = 0
+        # the session's trace recorder (attached by from_sim when
+        # SimConfig.trace), or the no-op NULL_RECORDER — engine-level
+        # call sites never branch
+        self.recorder: TraceRecorder = (
+            self.env.recorder if self.env.recorder is not None
+            else NULL_RECORDER
+        )
+        # per-round group decompositions, stashed by the round drivers
+        # (_SyncRoundMixin) and drained into each HistoryPoint
+        self._round_groups: List[GroupDecomposition] = []
 
     @property
     def predictor(self) -> Any:
@@ -191,6 +222,13 @@ class FLStrategy:
             p.reservation.rid for p in pending.values()
         )
 
+    def _take_round_groups(self) -> Tuple[GroupDecomposition, ...]:
+        """Drain the group decompositions the last ``step`` stashed
+        (empty for strategies without a group planner)."""
+        groups = tuple(self._round_groups)
+        self._round_groups = []
+        return groups
+
     # -- strategy API -----------------------------------------------------------
     def step(self, t: float) -> Tuple[float, Dict[str, Any]]:
         raise NotImplementedError
@@ -218,20 +256,28 @@ class FLStrategy:
                 break
             self.round_index += 1
             metrics = self.task.evaluate(self.global_params)
+            decomposition = RoundDecomposition(
+                round_index=self.round_index,
+                t_start=t,
+                t_end=t_next,
+                groups=self._take_round_groups(),
+            )
             history.append(
                 HistoryPoint(
                     t_hours=t_next / 3600.0,
                     round_index=self.round_index,
                     metrics=metrics,
                     events=events,
+                    decomposition=decomposition,
                 )
             )
+            self.recorder.on_round(decomposition, metrics)
             if verbose:
-                print(
-                    f"[{self.name}] round {self.round_index:3d} "
-                    f"t={t_next / 3600.0:7.2f}h acc={metrics['accuracy']:.4f} "
-                    f"loss={metrics['loss']:.4f}"
+                record = round_log_record(
+                    self.name, self.round_index, t_next / 3600.0, metrics
                 )
+                self.recorder.on_round_log(record)
+                print(format_round_line(record))
             t = t_next
         self.env.finish_session(
             t, open_rids=self.open_reservations(), check_leaks=completed

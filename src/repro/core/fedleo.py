@@ -51,6 +51,7 @@ from repro.core.engine import FLStrategy, SimConfig
 from repro.core.fltask import FederatedTask
 from repro.core.propagation import ring_hops_matrix
 from repro.core.scheduling import ClusterSinkDecision, SinkDecision
+from repro.obs import decompose_group_plan
 from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
 from repro.orbits.prediction import VisibilityPredictor
 from repro.orbits.topology import ISLTopology, get_isl_topology
@@ -399,6 +400,7 @@ class _SyncRoundMixin:
 
     def _sync_round(
         self,
+        t: float,
         groups: Sequence[Tuple[int, ...]],
         # (group, clients) -> PlanePlan | ClusterPlan | None
         plan_group: Callable[[Tuple[int, ...], List[int]], Optional[Any]],
@@ -414,6 +416,7 @@ class _SyncRoundMixin:
         partials = []
         group_counts: List[int] = []
         group_hists: List[np.ndarray] = []
+        self._round_groups = []
 
         for group in groups:
             # node-ordered client list (plane-major, slot order) so that
@@ -423,6 +426,9 @@ class _SyncRoundMixin:
             if plan is None:
                 return None, fail_event(group)
             self.env.commit(plan.decision)
+            # typed phase decomposition of the committed plan (read-only
+            # on the plan: schedules are unaffected)
+            self._round_groups.append(decompose_group_plan(plan, t))
 
             stacked = task.local_train(
                 self.global_params, clients, self._next_rng()
@@ -501,6 +507,7 @@ class FedLEO(_SyncRoundMixin, FLStrategy):
             }
 
         return self._sync_round(
+            t,
             [(p,) for p in range(sim.constellation.num_planes)],
             plan_group,
             lambda group: {"failed_plane": group[0]},
@@ -603,6 +610,7 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
             }
 
         return self._sync_round(
+            t,
             self.round_clusters(t),
             plan_group,
             lambda group: {"failed_cluster": group},

@@ -37,9 +37,12 @@ that never sees any station must not extend forever).
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+if TYPE_CHECKING:
+    from repro.obs.trace import TraceRecorder
 
 from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
 from repro.orbits.visibility import (
@@ -142,6 +145,10 @@ class VisibilityPredictor:
             self.chunk_s = None
             self.max_horizon_s = None
         self._station_tables: List[WindowTable] = []
+        # observability hook (repro.obs.TraceRecorder.attach): horizon
+        # extensions + per-method query counters; None = untraced (the
+        # query hot path pays one attribute check and nothing else)
+        self.recorder: Optional["TraceRecorder"] = None
 
         if engine == "vectorized":
             end0 = (
@@ -226,6 +233,8 @@ class VisibilityPredictor:
         if self._built_end >= limit - 1e-6:
             return False
         new_end = min(self._built_end + self.chunk_s, limit)
+        if self.recorder is not None:
+            self.recorder.on_horizon_extend(self._built_end, new_end)
         for i, g in enumerate(self.ground_stations):
             chunk = visibility_table(
                 self.walker, g, self._built_end, new_end,
@@ -291,6 +300,8 @@ class VisibilityPredictor:
         return self.table.to_windows()
 
     def windows_of(self, sat: Satellite) -> List[VisibilityWindow]:
+        if self.recorder is not None:
+            self.recorder.on_predictor_query("windows_of")
         key = (sat.plane, sat.slot)
         if key not in self._win_cache:
             rec = self._by_sat.get(key)
@@ -306,6 +317,8 @@ class VisibilityPredictor:
         """Raw per-satellite window arrays (starts, ends, cummax_end,
         gs_index) in start order — the batch-query surface used by the
         vectorized scheduler."""
+        if self.recorder is not None:
+            self.recorder.on_predictor_query("sat_arrays")
         return self._by_sat.get((plane, slot))
 
     def _window_of(self, key: Tuple[int, int], j: int) -> VisibilityWindow:
@@ -339,6 +352,8 @@ class VisibilityPredictor:
         self, sat: Satellite, t: float
     ) -> Optional[VisibilityWindow]:
         """Window containing t, if the satellite is visible right now."""
+        if self.recorder is not None:
+            self.recorder.on_predictor_query("current_window")
         key = (sat.plane, sat.slot)
         rec = self._by_sat.get(key)
         if rec is None:
@@ -361,6 +376,8 @@ class VisibilityPredictor:
         ``max_horizon_s`` is exhausted).  A window still clipped at the
         built boundary is completed first — its true end lies in the
         next chunk — so the result matches a prebuilt table."""
+        if self.recorder is not None:
+            self.recorder.on_predictor_query("next_window")
         key = (sat.plane, sat.slot)
         while True:
             j = self._first_index_ending_after(key, t)
@@ -384,6 +401,8 @@ class VisibilityPredictor:
         to exchange the partial global model with the GS.  Extends a
         rolling predictor when nothing fits inside the built horizon.
         """
+        if self.recorder is not None:
+            self.recorder.on_predictor_query("next_window_with_duration")
         key = (sat.plane, sat.slot)
         while True:
             j = self._first_index_ending_after(key, t)
@@ -434,6 +453,8 @@ class VisibilityPredictor:
         arrays instead of K scalar bisections).  Slots with no such
         window get t_start=inf (their index points at padding).
         """
+        if self.recorder is not None:
+            self.recorder.on_predictor_query("plane_next_window_starts")
         starts, cummax = self._plane_padded(plane)
         # cummax_end is non-decreasing per row, so the count of entries
         # <= t is exactly searchsorted(..., side="right")

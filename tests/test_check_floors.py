@@ -1,0 +1,150 @@
+"""benchmarks.check_floors: trajectory parsing tolerance and one test
+per floor rule (contention, handover, async, predictor latency, trace
+overhead)."""
+import json
+
+import pytest
+
+from benchmarks import check_floors
+from benchmarks.check_floors import (
+    TRACE_OVERHEAD_FLOOR,
+    US_PER_QUERY_FLOOR,
+    check,
+    check_predictor,
+    load_latest_contention,
+    load_latest_predictor,
+)
+
+
+def _rec(**over):
+    """A gs_contention record that satisfies every floor."""
+    base = {
+        "bench": "gs_contention",
+        "ground_stations": ["rolla", "punta-arenas"],
+        "ring_contended_s": 100.0, "grid_contended_s": 50.0,
+        "ring_scarce_s": 200.0, "grid_scarce_s": 120.0,
+        "ring_handover_s": 180.0, "grid_handover_s": 110.0,
+        "async_scarce_s": 300.0, "async_readmit_s": 280.0,
+        "async_scarce_mean_s": 250.0, "async_readmit_mean_s": 240.0,
+        "trace_overhead_fraction": 0.01,
+        "plan_wall_plain_s": 1.0, "plan_wall_traced_s": 1.01,
+    }
+    base.update(over)
+    return base
+
+
+# --- trajectory parsing ---------------------------------------------------------
+def _write_lines(path, lines):
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+
+
+def test_load_latest_skips_corrupt_tail(tmp_path):
+    path = str(tmp_path / "BENCH.json")
+    good = _rec()
+    _write_lines(path, [
+        json.dumps(_rec(ring_contended_s=1.0)),     # older: superseded
+        "not json at all",
+        json.dumps(good),
+        '{"bench": "gs_contention", "trunc',        # killed mid-write
+    ])
+    records = load_latest_contention(path)
+    assert len(records) == 1
+    assert records[0]["ring_contended_s"] == good["ring_contended_s"]
+
+
+def test_load_latest_keys_by_gs_set_and_ignores_other_benches(tmp_path):
+    path = str(tmp_path / "BENCH.json")
+    _write_lines(path, [
+        json.dumps(_rec(ground_stations=["rolla"])),
+        json.dumps(_rec()),
+        json.dumps({"bench": "topology_scaling", "ring_round_s": 1.0}),
+        json.dumps([1, 2, 3]),                      # non-dict line
+    ])
+    records = load_latest_contention(path)
+    assert len(records) == 2
+    assert load_latest_predictor(path) is None
+
+
+def test_load_missing_file_is_empty():
+    assert load_latest_contention("/nonexistent/BENCH.json") == []
+    assert load_latest_predictor("/nonexistent/BENCH.json") is None
+
+
+def test_main_warns_and_exits_zero_without_trajectory(
+    tmp_path, monkeypatch, capsys
+):
+    missing = str(tmp_path / "never_written.json")
+    monkeypatch.setattr(check_floors, "BENCH_TRAJECTORY", missing)
+    check_floors.main()                             # must NOT raise
+    assert "WARNING" in capsys.readouterr().err
+
+
+def test_main_passes_on_healthy_trajectory(tmp_path, monkeypatch, capsys):
+    path = str(tmp_path / "BENCH.json")
+    _write_lines(path, [
+        json.dumps(_rec()),
+        json.dumps({"bench": "predictor_queries", "us_per_query": 3.0}),
+    ])
+    monkeypatch.setattr(check_floors, "BENCH_TRAJECTORY", path)
+    check_floors.main()
+    assert "all gs_contention floors hold" in capsys.readouterr().out
+
+
+def test_main_fails_on_violation(tmp_path, monkeypatch, capsys):
+    path = str(tmp_path / "BENCH.json")
+    _write_lines(path, [json.dumps(_rec(grid_contended_s=150.0))])
+    monkeypatch.setattr(check_floors, "BENCH_TRAJECTORY", path)
+    with pytest.raises(SystemExit):
+        check_floors.main()
+    assert "FLOOR VIOLATION" in capsys.readouterr().err
+
+
+# --- one test per floor rule ----------------------------------------------------
+def test_floor_grid_beats_ring_under_contention():
+    assert check([_rec()]) == []
+    fails = check([_rec(grid_contended_s=150.0)])
+    assert any("under RB contention" in f for f in fails)
+    assert any("grid" in f for f in check([_rec(grid_contended_s=None)]))
+
+
+def test_floor_handover_never_worse_than_scarce():
+    fails = check([_rec(ring_handover_s=250.0)])
+    assert any("ring handover" in f for f in fails)
+    fails = check([_rec(grid_handover_s=130.0)])
+    assert any("grid handover" in f for f in fails)
+    # vacuous when the scarce side was not measured
+    assert check([_rec(ring_scarce_s=None)]) == []
+
+
+def test_floor_async_readmit_never_worse():
+    fails = check([_rec(async_readmit_s=301.0)])
+    assert any("async re-admission" in f for f in fails)
+    fails = check([_rec(async_readmit_mean_s=260.0)])
+    assert any("mean" in f for f in fails)
+    # pre-PR-5 records carry no async arms: rule is skipped entirely
+    old = _rec()
+    for k in list(old):
+        if k.startswith("async"):
+            del old[k]
+    assert check([old]) == []
+
+
+def test_floor_trace_overhead():
+    fails = check([_rec(trace_overhead_fraction=0.2)])
+    assert any("tracing overhead" in f for f in fails)
+    # exactly at the floor passes; absent column (schema < 2) skips
+    assert check([_rec(trace_overhead_fraction=TRACE_OVERHEAD_FLOOR)]) == []
+    assert check([_rec(trace_overhead_fraction=None)]) == []
+
+
+def test_floor_predictor_query_latency():
+    assert check_predictor(None) == []
+    assert check_predictor({"us_per_query": 3.0}) == []
+    assert check_predictor({"us_per_query": US_PER_QUERY_FLOOR}) == []
+    fails = check_predictor({"us_per_query": US_PER_QUERY_FLOOR + 1.0})
+    assert any("us/query" in f for f in fails)
+
+
+def test_no_records_is_a_failure():
+    assert check([]) != []

@@ -358,7 +358,7 @@ def test_fedleo_grid_dynamic_clusters_respond_to_supply():
 
 # --- benchmark substrate ------------------------------------------------------
 def test_append_bench_tolerates_truncated_last_line(tmp_path):
-    from benchmarks.common import append_bench
+    from benchmarks.common import BENCH_SCHEMA, append_bench
 
     path = tmp_path / "BENCH.json"
     path.write_text('{"bench": "old", "ok": true}\n{"bench": "trunc')
@@ -366,7 +366,11 @@ def test_append_bench_tolerates_truncated_last_line(tmp_path):
     append_bench(rec, str(path))
     lines = path.read_text().splitlines()
     assert json.loads(lines[0]) == {"bench": "old", "ok": True}
-    assert json.loads(lines[-1]) == rec                 # parseable append
+    last = json.loads(lines[-1])                        # parseable append,
+    assert last.pop("schema") == BENCH_SCHEMA           # stamped with the
+    assert last.pop("run_id")                           # schema + run id
+    assert last == rec                                  # (caller's dict kept)
+    assert rec == {"bench": "new", "x": 1}
     assert len(lines) == 3                              # partial quarantined
     # healthy files are appended without extra separators
     append_bench(rec, str(path))

@@ -1,0 +1,338 @@
+"""repro.obs: traced == untraced bit-identity, decomposition sanity,
+trace export/report round-trips (ISSUE 7 acceptance).
+
+The zero-interference contract: attaching a ``TraceRecorder``
+(``SimConfig.trace=True``) must not perturb a single schedule, sink
+decision, timestamp or metric — proven end-to-end here across the
+ring, grid, station-handover and async-re-admission configurations on
+real (tiny) JAX training runs.
+"""
+import dataclasses
+import functools
+import io
+import json
+
+import pytest
+
+from repro.core import FedLEO, FedLEOGrid, SimConfig
+from repro.core.baselines import ALL_BASELINES
+from repro.obs import (
+    NULL_RECORDER,
+    TRACE_SCHEMA_VERSION,
+    GroupDecomposition,
+    RoundDecomposition,
+    TraceRecorder,
+    format_round_line,
+    ledger_rb_utilization,
+    mean_phase_seconds,
+    round_log_record,
+)
+from repro.obs.export import read_trace, to_chrome_trace, write_trace
+from repro.obs.report import main as report_main
+from repro.obs.report import report, round_decompositions
+from repro.obs.utilization import occupancy_timeline, trace_rb_utilization
+from repro.orbits.constellation import ConstellationConfig, GroundStation
+from repro.orbits.topology import TopologyConfig
+
+
+def _small_task(num_planes=2, sats_per_plane=4):
+    from repro.core import FederatedTask, TrainHyperparams
+    from repro.data import make_classification_dataset, partition_iid
+    from repro.models.cnn import apply_cnn, init_cnn
+    from repro.optim import get_optimizer
+
+    n = num_planes * sats_per_plane * 4
+    ds = make_classification_dataset("mnist-like", num_samples=n, seed=0)
+    test = make_classification_dataset("mnist-like", num_samples=64, seed=7)
+    clients = partition_iid(ds, num_planes, sats_per_plane)
+    hp = TrainHyperparams(local_epochs=100, learning_rate=0.05,
+                          batch_size=16)
+    return FederatedTask(
+        init_fn=lambda r: init_cnn(r, (28, 28, 1), 10, widths=(4,),
+                                   hidden=16),
+        apply_fn=apply_cnn, clients=clients, test_set=test,
+        optimizer=get_optimizer("sgd", 0.05), hp=hp, sim_epochs=1,
+    )
+
+
+def _two_stations():
+    a = GroundStation()
+    b = GroundStation(lat_deg=a.lat_deg + 4.0, lon_deg=a.lon_deg + 3.0,
+                      name="GS-B")
+    return a, b
+
+
+_CFG = ConstellationConfig(num_planes=2, sats_per_plane=4)
+
+
+def _sim_configs():
+    """The four equivalence configurations of the acceptance criteria."""
+    a, b = _two_stations()
+    ring = SimConfig(constellation=_CFG, horizon_hours=48.0)
+    grid = SimConfig(constellation=_CFG, horizon_hours=48.0,
+                     topology=TopologyConfig(kind="grid"),
+                     gs_rb_capacity=1)
+    handover = SimConfig(constellation=_CFG, horizon_hours=48.0,
+                         ground_stations=(a, b), gs_rb_capacity=1,
+                         gs_handover=True)
+    async_ = SimConfig(constellation=_CFG, horizon_hours=48.0,
+                       gs_rb_capacity=1, async_readmit=True)
+    return {
+        "ring": (FedLEO, ring, {}),
+        "grid": (FedLEOGrid, grid, {"cluster_planes": 2}),
+        "handover": (FedLEO, handover, {}),
+        "async": (ALL_BASELINES["AsyncFLEO"], async_, {}),
+    }
+
+
+def _run(cls, sim, kw, trace):
+    strat = cls(_small_task(), dataclasses.replace(sim, trace=trace), **kw)
+    res = strat.run(max_rounds=2)
+    rec = strat.env.recorder
+    if rec is not None:
+        rec.detach()
+    return res, rec
+
+
+def _assert_identical(ra, rb):
+    assert len(ra.history) == len(rb.history) and ra.history
+    for ha, hb in zip(ra.history, rb.history):
+        assert ha.t_hours == hb.t_hours
+        assert ha.events == hb.events
+        assert ha.metrics == hb.metrics
+        assert ha.decomposition.as_dict() == hb.decomposition.as_dict()
+
+
+# --- the acceptance criterion: traced == untraced, end to end ------------------
+@pytest.mark.parametrize("config", ["ring", "grid", "handover", "async"])
+def test_traced_run_bit_identical(config):
+    cls, sim, kw = _sim_configs()[config]
+    assert SimConfig().trace is False               # default off
+    plain, rec_plain = _run(cls, sim, kw, trace=False)
+    traced, rec = _run(cls, sim, kw, trace=True)
+    assert rec_plain is None                        # untraced: no recorder
+    _assert_identical(plain, traced)
+    # and the trace actually recorded the session
+    assert rec is not None and rec.events
+    assert rec.counters.get("rounds") == len(traced.history)
+    assert rec.counters.get("commit", 0) > 0
+
+
+# --- decomposition sanity -------------------------------------------------------
+def test_round_decomposition_structure():
+    _, rec = _run(FedLEO, SimConfig(constellation=_CFG,
+                                    horizon_hours=48.0), {}, trace=True)
+    decomps = [
+        RoundDecomposition.from_dict(ev.attrs["decomposition"])
+        for ev in rec.events if ev.kind == "round"
+    ]
+    assert len(decomps) == 2
+    for d in decomps:
+        assert d.t_end > d.t_start and d.round_s > 0
+        assert len(d.groups) == _CFG.num_planes    # one group per plane
+        means = d.phase_means()
+        assert means["groups"] == float(_CFG.num_planes)
+        for g in d.groups:
+            spans = g.phase_spans()
+            # phases tile the group's round span exactly, in order
+            assert spans[0][1] == g.t_round_start
+            assert spans[-1][2] == g.t_upload_done
+            for (_, a0, a1), (_, b0, b1) in zip(spans, spans[1:]):
+                assert a1 == b0
+            assert all(t1 >= t0 for _, t0, t1 in spans)
+            assert g.queue_delay_s >= 0.0
+            assert g.window_wait_s >= 0.0
+            assert g.queue_delay_s <= g.sink_wait_s + 1e-9
+            # round-trip through the dict form
+            assert GroupDecomposition.from_dict(g.as_dict()) == g
+
+
+def test_mean_phase_seconds_empty_and_engine_population():
+    assert mean_phase_seconds([]) == {}
+    # every HistoryPoint carries the decomposition even when tracing
+    # is OFF (it replaces the events-dict scraping)
+    res, rec = _run(FedLEO, SimConfig(constellation=_CFG,
+                                      horizon_hours=48.0), {}, trace=False)
+    assert rec is None
+    for h in res.history:
+        assert h.decomposition is not None
+        assert h.decomposition.round_s == pytest.approx(
+            (h.t_hours - (h.decomposition.t_start / 3600.0)) * 3600.0
+        )
+        assert h.decomposition.groups
+
+
+# --- recorder primitives --------------------------------------------------------
+def test_null_recorder_is_inert():
+    before = len(NULL_RECORDER.events)
+    NULL_RECORDER.span("x", "rounds", "s", 0.0, 1.0)
+    NULL_RECORDER.instant("x", "rounds", "i", 0.0)
+    NULL_RECORDER.count("c")
+    NULL_RECORDER.on_round(
+        RoundDecomposition(round_index=1, t_start=0.0, t_end=1.0)
+    )
+    NULL_RECORDER.detach()
+    assert len(NULL_RECORDER.events) == before == 0
+    assert NULL_RECORDER.counters == {}
+
+
+def test_round_log_record_format_matches_legacy():
+    metrics = {"accuracy": 0.51234, "loss": 1.9875}
+    rec = round_log_record("fedleo", 3, 12.3456, metrics)
+    line = format_round_line(rec)
+    assert line == (
+        "[fedleo] round   3 t=  12.35h acc=0.5123 loss=1.9875"
+    )
+
+
+# --- export round-trips ---------------------------------------------------------
+@functools.lru_cache(maxsize=1)
+def _traced_fixture():
+    """One shared traced run: every consumer only READS the recorder."""
+    _, rec = _run(
+        FedLEO,
+        SimConfig(constellation=_CFG, horizon_hours=48.0,
+                  gs_rb_capacity=1),
+        {}, trace=True,
+    )
+    return rec
+
+
+def test_jsonl_write_read_round_trip(tmp_path):
+    rec = _traced_fixture()
+    path = str(tmp_path / "trace.jsonl")
+    n = write_trace(rec, path)
+    assert n == len(rec.events)
+    meta, counters, events = read_trace(path)
+    assert meta["schema"] == TRACE_SCHEMA_VERSION
+    assert meta["stations"] == rec.meta["stations"]
+    assert meta["rb_capacity"] == [1]
+    assert counters == rec.counters
+    assert [e.as_dict() for e in events] == [
+        e.as_dict() for e in rec.events
+    ]
+
+
+def test_jsonl_corrupt_tail_and_append_merge(tmp_path):
+    rec = _traced_fixture()
+    path = str(tmp_path / "trace.jsonl")
+    write_trace(rec, path)
+    # corrupt tail: a truncated half-line must be skipped, not fatal
+    with open(path, "a") as f:
+        f.write('{"kind": "commit", "seq": 99, "tru')
+    _, counters, events = read_trace(path)
+    assert len(events) == len(rec.events)
+    # append a second block: counters sum, events concatenate
+    write_trace(rec, path, append=True)
+    meta2, counters2, events2 = read_trace(path)
+    assert len(events2) == 2 * len(rec.events)
+    assert counters2 == {k: 2 * v for k, v in counters.items()}
+    assert meta2["schema"] == TRACE_SCHEMA_VERSION
+
+
+def test_chrome_trace_export_shape(tmp_path):
+    rec = _traced_fixture()
+    trace = to_chrome_trace(rec.meta, rec.events, rec.counters)
+    evs = trace["traceEvents"]
+    phases = {e["ph"] for e in evs}
+    assert {"M", "X", "i", "C"} <= phases
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["dur"] > 0 and e["ts"] >= 0
+        if e["ph"] == "C":
+            assert "booked_rbs" in e["args"]
+    # commit spans land on the station process with its name row
+    names = [e for e in evs if e["ph"] == "M"
+             and e["name"] == "thread_name"]
+    assert any(e["args"]["name"].startswith("Rolla") for e in names)
+    assert trace["otherData"]["schema"] == TRACE_SCHEMA_VERSION
+    json.dumps(trace)                          # serializable end to end
+
+
+# --- utilization ----------------------------------------------------------------
+def test_trace_rb_utilization_from_synthetic_spans():
+    rec = TraceRecorder()
+    # station 0: one RB booked for [0, 50] and [50, 100] back to back
+    rec.span("commit", "gs/0", "upload r1", 0.0, 50.0, rid=1)
+    rec.span("commit", "gs/0", "upload r2", 50.0, 100.0, rid=2)
+    # station 1: idle
+    timeline = occupancy_timeline(rec.events)
+    assert 0 in timeline and 1 not in timeline
+    util = trace_rb_utilization(rec.events, 0.0, 200.0, capacities=[1, 1])
+    assert util[0] == pytest.approx(0.5)
+    # a release span cancels its commit in the occupancy integral
+    rec.span("release", "gs/0", "release r2", 50.0, 100.0, rid=2)
+    util = trace_rb_utilization(rec.events, 0.0, 200.0, capacities=[1, 1])
+    assert util[0] == pytest.approx(0.25)
+
+
+def test_ledger_utilization_matches_trace_utilization():
+    rec = _traced_fixture()
+    spans = [e for e in rec.events if e.kind == "commit"]
+    t1 = max(e.t_end_s for e in spans)
+    from_trace = trace_rb_utilization(
+        rec.events, 0.0, t1, capacities=rec.meta["rb_capacity"]
+    )
+    assert from_trace and all(0.0 < u <= 1.0 for u in from_trace.values())
+
+
+def test_ledger_rb_utilization_direct():
+    from repro.comms.ledger import GSResourceLedger
+
+    led = GSResourceLedger(2, 2)
+    led.reserve(0, 0.0, 50.0)
+    led.reserve(0, 0.0, 100.0)
+    util = ledger_rb_utilization(led, 0.0, 100.0)
+    assert util[0] == pytest.approx((50.0 + 100.0) / (100.0 * 2))
+    assert util[1] == 0.0
+
+
+# --- reporter CLI ---------------------------------------------------------------
+def test_reporter_round_trip(tmp_path):
+    rec = _traced_fixture()
+    path = str(tmp_path / "trace.jsonl")
+    perfetto = str(tmp_path / "trace.perfetto.json")
+    write_trace(rec, path)
+    out = io.StringIO()
+    summary = report(path, perfetto_out=perfetto, out=out)
+    assert summary["rounds"] == 2
+    assert summary["events"] == len(rec.events)
+    text = out.getvalue()
+    assert "per-round phase decomposition" in text
+    assert "RB utilization" in text
+    assert "session counters" in text
+    with open(perfetto) as f:
+        loaded = json.load(f)
+    assert loaded["traceEvents"]
+    # the decompositions survive the file round-trip bit-exactly
+    _, _, events = read_trace(path)
+    decomps = round_decompositions(events)
+    assert [d.as_dict() for d in decomps] == [
+        ev.attrs["decomposition"] for ev in rec.events
+        if ev.kind == "round"
+    ]
+
+
+def test_reporter_main_exit_codes(tmp_path, capsys):
+    rec = _traced_fixture()
+    path = str(tmp_path / "trace.jsonl")
+    write_trace(rec, path)
+    assert report_main([path]) == 0
+    capsys.readouterr()
+    assert report_main([str(tmp_path / "missing.jsonl")]) == 2
+    assert "error" in capsys.readouterr().err
+
+
+# --- recorder lifecycle ---------------------------------------------------------
+def test_detach_unhooks_everything():
+    from repro.comms.environment import CommsEnvironment
+
+    sim = SimConfig(constellation=_CFG, horizon_hours=24.0, trace=True)
+    env = CommsEnvironment.from_sim(sim)
+    rec = env.recorder
+    assert rec is not None and env.predictor.recorder is rec
+    rec.detach()
+    assert env.recorder is None and env.predictor.recorder is None
+    rec.detach()                               # idempotent
+    # a detached recorder keeps its collected data readable
+    assert isinstance(rec.events, list) and isinstance(rec.counters, dict)
