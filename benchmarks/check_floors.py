@@ -40,9 +40,36 @@ from benchmarks.common import BENCH_TRAJECTORY
 US_PER_QUERY_FLOOR = 10.0
 
 # tracing must stay within 5% of the untraced plan wall (ISSUE 7
-# acceptance): the overhead pass takes min-of-3 on both sides, so a
-# sustained recorder slowdown trips this without CI-noise flakes
+# acceptance): the overhead estimate is a median of interleaved
+# samples clamped at >= 0, so a sustained recorder slowdown trips this
+# without CI-noise flakes
 TRACE_OVERHEAD_FLOOR = 0.05
+
+# mega-scale floors (ISSUE 8): the 72x22 predictor build must stay
+# within 4x the 40x22 build measured in the same process (1.8x the
+# satellite count — superlinear blowup means the scan stopped being
+# memory-bounded), and every row's build tracemalloc peak must stay
+# under the configured mem_budget_mb (the budget IS the contract).
+# The ratio floor gates only the constellation it was calibrated for;
+# larger presets (two-shell at 2.7x the baseline satellites) are
+# gated on memory and completion, not on this wall-clock ratio.
+MEGA_BUILD_RATIO_FLOOR = 4.0
+MEGA_RATIO_CONSTELLATION = "starlink-gen1"
+
+# near-floor early warning: any ceiling-floored metric within this
+# relative margin of its floor is reported (exit 0) so the regression
+# is visible one PR before it fails CI
+NEAR_FLOOR_MARGIN = 0.25
+
+
+def _near(value: Optional[float], floor: float) -> bool:
+    """True when ``value`` passes its ceiling ``floor`` but sits inside
+    the warning margin below it."""
+    return (
+        value is not None
+        and value <= floor
+        and value > floor * (1.0 - NEAR_FLOOR_MARGIN)
+    )
 
 
 def load_latest_contention(path: str = BENCH_TRAJECTORY) -> List[Dict]:
@@ -87,6 +114,102 @@ def load_latest_predictor(path: str = BENCH_TRAJECTORY) -> Optional[Dict]:
         if isinstance(rec, dict) and rec.get("bench") == "predictor_queries":
             latest = rec
     return latest
+
+
+def load_latest_mega(path: str = BENCH_TRAJECTORY) -> List[Dict]:
+    """Latest ``mega_scale`` record per constellation (same
+    append-only / skip-unparseable discipline as the contention
+    loader)."""
+    latest: Dict[str, Dict] = {}
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        return []
+    for line in lines:
+        try:
+            rec = json.loads(line.strip())
+        except json.JSONDecodeError:
+            continue
+        if not isinstance(rec, dict) or rec.get("bench") != "mega_scale":
+            continue
+        latest[str(rec.get("constellation"))] = rec
+    return [latest[k] for k in sorted(latest)]
+
+
+def check_mega(records: List[Dict]) -> List[str]:
+    """Mega-scale floors: build-scaling ratio and memory budget.  An
+    empty record list is fine — the mega smoke is optional per run."""
+    failures = []
+    for r in records:
+        tag = f"mega {r.get('constellation')}"
+        ratio = r.get("predictor_build_ratio_vs_40x22")
+        if r.get("constellation") != MEGA_RATIO_CONSTELLATION:
+            ratio = None
+        if ratio is not None and ratio > MEGA_BUILD_RATIO_FLOOR:
+            failures.append(
+                f"{tag}: predictor build {ratio}x the 40x22 build > "
+                f"floor {MEGA_BUILD_RATIO_FLOOR}x (scan no longer "
+                f"scales linearly in satellite count)"
+            )
+        peak = r.get("predictor_peak_mb")
+        budget = r.get("mem_budget_mb")
+        if peak is not None and budget is not None and peak > budget:
+            failures.append(
+                f"{tag}: predictor build peak {peak} MB > configured "
+                f"mem_budget_mb {budget} (chunking stopped bounding "
+                f"the scan transient)"
+            )
+        if r.get("plan_round_s") is None:
+            failures.append(f"{tag}: planning round did not complete")
+    return failures
+
+
+def near_floor_warnings(
+    records: List[Dict],
+    pred: Optional[Dict],
+    mega: List[Dict],
+) -> List[str]:
+    """Ceiling-floored metrics that pass but sit within
+    NEAR_FLOOR_MARGIN of their floor — reported without failing so the
+    drift is visible one PR before it trips CI."""
+    warnings = []
+    if pred is not None and _near(pred.get("us_per_query"),
+                                  US_PER_QUERY_FLOOR):
+        warnings.append(
+            f"predictor_queries: {pred['us_per_query']} us/query is "
+            f"within {NEAR_FLOOR_MARGIN:.0%} of floor "
+            f"{US_PER_QUERY_FLOOR}"
+        )
+    for r in records:
+        tag = f"{len(r.get('ground_stations', []))} GS"
+        if _near(r.get("trace_overhead_fraction"), TRACE_OVERHEAD_FLOOR):
+            warnings.append(
+                f"{tag}: tracing overhead "
+                f"{r['trace_overhead_fraction'] * 100:.1f}% is within "
+                f"{NEAR_FLOOR_MARGIN:.0%} of floor "
+                f"{TRACE_OVERHEAD_FLOOR * 100:.0f}%"
+            )
+    for r in mega:
+        tag = f"mega {r.get('constellation')}"
+        if (r.get("constellation") == MEGA_RATIO_CONSTELLATION
+                and _near(r.get("predictor_build_ratio_vs_40x22"),
+                          MEGA_BUILD_RATIO_FLOOR)):
+            warnings.append(
+                f"{tag}: build ratio "
+                f"{r['predictor_build_ratio_vs_40x22']}x is within "
+                f"{NEAR_FLOOR_MARGIN:.0%} of floor "
+                f"{MEGA_BUILD_RATIO_FLOOR}x"
+            )
+        budget = r.get("mem_budget_mb")
+        if budget is not None and _near(r.get("predictor_peak_mb"),
+                                        float(budget)):
+            warnings.append(
+                f"{tag}: predictor build peak "
+                f"{r['predictor_peak_mb']} MB is within "
+                f"{NEAR_FLOOR_MARGIN:.0%} of mem_budget_mb {budget}"
+            )
+    return warnings
 
 
 def check_predictor(rec: Optional[Dict]) -> List[str]:
@@ -165,6 +288,8 @@ def main() -> None:
     failures = check(records)
     pred = load_latest_predictor(BENCH_TRAJECTORY)
     failures += check_predictor(pred)
+    mega = load_latest_mega(BENCH_TRAJECTORY)
+    failures += check_mega(mega)
     if pred is not None:
         print(
             f"# checked predictor_queries: {pred.get('us_per_query')} "
@@ -186,6 +311,18 @@ def main() -> None:
                 if r.get("trace_overhead_fraction") is not None else ""
             )
         )
+    for r in mega:
+        print(
+            f"# checked mega {r.get('constellation')}: build "
+            f"{r.get('predictor_build_s')}s "
+            f"({r.get('predictor_build_ratio_vs_40x22')}x 40x22, floor "
+            f"{MEGA_BUILD_RATIO_FLOOR}x); peak "
+            f"{r.get('predictor_peak_mb')} MB (budget "
+            f"{r.get('mem_budget_mb')} MB); plan round "
+            f"{r.get('plan_round_s')}s"
+        )
+    for msg in near_floor_warnings(records, pred, mega):
+        print(f"FLOOR WARNING: {msg}", file=sys.stderr)
     if failures:
         for msg in failures:
             print(f"FLOOR VIOLATION: {msg}", file=sys.stderr)

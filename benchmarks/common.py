@@ -115,6 +115,74 @@ def timed(fn: Callable) -> tuple:
     return out, (time.time() - t0) * 1e6
 
 
+def measure_peak_mb(fn: Callable) -> tuple:
+    """Run ``fn`` and return ``(result, wall_us, peak_mb)``.
+
+    ``peak_mb`` is the tracemalloc high-water mark of the call: numpy
+    registers its buffer allocator with tracemalloc, so transient array
+    peaks (the thing ``mem_budget_mb`` bounds) are visible; allocations
+    inside C extensions that bypass it (some scipy internals) are not.
+    Tracing slows the call down — when a row's wall column must stay
+    honest, time an untraced run separately and use this one only for
+    the peak column.
+    """
+    import tracemalloc
+
+    was_tracing = tracemalloc.is_tracing()
+    if not was_tracing:
+        tracemalloc.start()
+    tracemalloc.reset_peak()
+    t0 = time.time()
+    out = fn()
+    wall_us = (time.time() - t0) * 1e6
+    _, peak = tracemalloc.get_traced_memory()
+    if not was_tracing:
+        tracemalloc.stop()
+    return out, wall_us, peak / 1e6
+
+
+def peak_rss_mb() -> float:
+    """Process-lifetime peak resident set size [MB].
+
+    ``ru_maxrss`` is kilobytes on Linux; the value is monotone over the
+    process lifetime, so per-phase attribution needs tracemalloc
+    (``measure_peak_mb``) — this column is the row-level "how big did
+    the whole process ever get" bound the mega-scale floors gate on.
+    """
+    import resource
+
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1e3
+
+
+def overhead_fraction(
+    plain: Callable, traced: Callable, samples: int = 5
+) -> tuple:
+    """Robust relative-overhead estimate of ``traced`` vs ``plain``.
+
+    Takes ``samples`` interleaved (plain, traced) wall-time pairs —
+    interleaving cancels slow drift (thermal, page-cache warmup) that
+    biases back-to-back batches — and compares the per-arm *medians*,
+    which single outlier samples cannot move.  The fraction is clamped
+    at >= 0: tracing cannot speed planning up, so a negative estimate
+    is measurement noise by construction and must not enter the BENCH
+    trajectory (the ≤5% overhead floor should gate signal, not jitter).
+
+    Returns ``(fraction, plain_wall_us, traced_wall_us)`` with the
+    median walls.
+    """
+    plain_walls: List[float] = []
+    traced_walls: List[float] = []
+    for _ in range(max(1, samples)):
+        _, w_p = timed(plain)
+        plain_walls.append(w_p)
+        _, w_t = timed(traced)
+        traced_walls.append(w_t)
+    med_p = sorted(plain_walls)[len(plain_walls) // 2]
+    med_t = sorted(traced_walls)[len(traced_walls) // 2]
+    frac = max(0.0, (med_t - med_p) / med_p) if med_p > 0 else 0.0
+    return frac, med_p, med_t
+
+
 def make_comms_env(sim, *, predictor=None, walker=None, capacity=None,
                    handover: bool = False, sanitize: bool = False,
                    trace: bool = False):

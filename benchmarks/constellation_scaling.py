@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import append_bench
+from benchmarks.common import append_bench, peak_rss_mb
 from repro.configs.constellations import (
     get_constellation,
     get_ground_stations,
@@ -52,6 +52,9 @@ def bench_constellation(name: str, with_reference: bool = True) -> dict:
         "horizon_s": HORIZON_S,
         "num_windows": len(vec),
         "vectorized_s": round(t_vec, 4),
+        # process-lifetime high-water mark when the row was produced:
+        # a visibility-scan transient blowup shows up here first
+        "peak_rss_mb": round(peak_rss_mb(), 1),
     }
     if with_reference:
         ref, t_ref = _time(
@@ -104,6 +107,7 @@ def bench_predictor_queries(name: str) -> dict:
         "build_s": round(t_build, 4),
         "queries": n_queries,
         "us_per_query": round(t_q / n_queries * 1e6, 2),
+        "peak_rss_mb": round(peak_rss_mb(), 1),
     }
 
 

@@ -65,6 +65,7 @@ from benchmarks.common import (
     PAYLOAD_BITS,
     append_bench,
     make_comms_env,
+    overhead_fraction,
     price_async_round,
     price_grid_round,
     price_ring_round,
@@ -182,15 +183,15 @@ def run(gs_sets=GS_SETS, sanitize: bool = False) -> List[dict]:
         # on fresh UNSANITIZED sessions so the sanitizer never pads the
         # denominator.  A single pricing pass is only ~0.1 s of wall —
         # far below this host's timer jitter — so each timed sample
-        # amortizes ITERS_PER_SAMPLE full passes, samples interleave
-        # plain/traced (drift hits both arms equally) and each arm
-        # keeps the min of 5 after a warmup pair.  A traced session
-        # attaches to the shared predictor — detached before the next
-        # sample's envs are built.
+        # amortizes ITERS_PER_SAMPLE full passes.  The estimate itself
+        # is ``overhead_fraction``'s median-of-k interleaved samples,
+        # clamped at >= 0 (min-of-k walls once recorded a *negative*
+        # fraction — traced "faster" than plain — which is pure noise
+        # and gates nothing).  A traced session attaches to the shared
+        # predictor — detached before the next sample's envs are built.
         ITERS_PER_SAMPLE = 3
 
-        def overhead_pass(trace: bool) -> float:
-            w = 0.0
+        def overhead_pass(trace: bool) -> None:
             for _ in range(ITERS_PER_SAMPLE):
                 envs = [
                     make_comms_env(
@@ -201,27 +202,25 @@ def run(gs_sets=GS_SETS, sanitize: bool = False) -> List[dict]:
                     )
                     for _ in range(2)
                 ]
-                t_pass = time.perf_counter()
                 price_ring_round(envs[0], train_time_s=TRAIN_TIME_S)
                 price_grid_round(
                     envs[1], routing, cluster_planes=CLUSTER_PLANES,
                     train_time_s=TRAIN_TIME_S, dynamic=True,
                 )
-                w += time.perf_counter() - t_pass
                 for env in envs:
                     if trace:
                         env.recorder.detach()
                     env.finish_session(float("inf"), check_leaks=False)
-            return w
 
-        overhead_pass(trace=False)
+        overhead_pass(trace=False)      # warmup pair
         overhead_pass(trace=True)
-        plain_walls, traced_walls = [], []
-        for _ in range(5):
-            plain_walls.append(overhead_pass(trace=False))
-            traced_walls.append(overhead_pass(trace=True))
-        plan_wall_plain = min(plain_walls)
-        plan_wall_traced = min(traced_walls)
+        trace_overhead, plain_us, traced_us = overhead_fraction(
+            lambda: overhead_pass(trace=False),
+            lambda: overhead_pass(trace=True),
+            samples=5,
+        )
+        plan_wall_plain = plain_us / 1e6
+        plan_wall_traced = traced_us / 1e6
 
         def _r(x):
             return None if x is None else round(x, 1)
@@ -290,9 +289,7 @@ def run(gs_sets=GS_SETS, sanitize: bool = False) -> List[dict]:
             "plan_wall_s": round(wall, 3),
             "plan_wall_plain_s": round(plan_wall_plain, 4),
             "plan_wall_traced_s": round(plan_wall_traced, 4),
-            "trace_overhead_fraction": round(
-                (plan_wall_traced - plan_wall_plain) / plan_wall_plain, 4
-            ),
+            "trace_overhead_fraction": round(trace_overhead, 4),
         })
     return rows
 

@@ -1,0 +1,178 @@
+"""Mega-constellation scale: the full scheduling stack at 1584+ sats.
+
+Every other benchmark runs at starlink-40x22 (880 sats).  This one
+exercises the binding mega-scale costs the ROADMAP tracks — visibility
+predictor construction, all-pairs routing build, and one full
+FedLEOGrid planning round — at Starlink gen1 (72x22, 1584 sats) and the
+two-shell preset (72x22 + 36x22, 2376 sats), with wall AND peak-memory
+columns:
+
+  * ``predictor_peak_mb`` — tracemalloc high-water mark of the build
+    (the transient the ``mem_budget_mb`` chunking bounds),
+  * ``peak_rss_mb``       — process-lifetime peak RSS at row end.
+
+Each row also re-measures the starlink-40x22 predictor build in the
+same process under the same tracer, so the scaling ratio
+(``predictor_build_ratio_vs_40x22``, floor-gated in ``check_floors``:
+<= 4x at 1.8x the satellite count) compares like with like.
+
+Usage: PYTHONPATH=src python -m benchmarks.mega_scale [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks.common import (
+    PAYLOAD_BITS,
+    append_bench,
+    make_comms_env,
+    measure_peak_mb,
+    peak_rss_mb,
+    price_grid_round,
+    timed,
+)
+
+GS_NAMES = ("rolla", "punta-arenas")   # 53 deg shells never rise at poles
+CONSTELLATIONS = ("starlink-gen1", "starlink-2shell")
+BASELINE = "starlink-40x22"
+HORIZON_HOURS = 24.0
+QUICK_HORIZON_HOURS = 4.0
+MEM_BUDGET_MB = 256.0
+CLUSTER_PLANES = 4
+TRAIN_TIME_S = 600.0
+LAZY_QUERY_SOURCES = 4                 # per-source Dijkstra rows to time
+
+
+def _build_predictor(name: str, horizon_hours: float):
+    """(walker, gs_list, predictor, build_wall_us, build_peak_mb) for a
+    preset — the predictor built exactly as ``from_sim`` would (1.5x
+    horizon), under tracemalloc so the scan transient is visible."""
+    from repro.configs.constellations import (
+        get_constellation,
+        get_ground_stations,
+    )
+    from repro.orbits.constellation import make_walker
+    from repro.orbits.prediction import VisibilityPredictor
+
+    cfg = get_constellation(name)
+    walker = make_walker(cfg)
+    gs_list = list(get_ground_stations(GS_NAMES))
+    pred, wall_us, peak_mb = measure_peak_mb(
+        lambda: VisibilityPredictor(
+            walker, gs_list,
+            horizon_s=horizon_hours * 3600.0 * 1.5,
+            mem_budget_mb=MEM_BUDGET_MB,
+        )
+    )
+    return walker, gs_list, pred, wall_us, peak_mb
+
+
+def bench_preset(
+    name: str,
+    horizon_hours: float,
+    baseline_build_us: float,
+    sanitize: bool,
+) -> Dict:
+    """One BENCH row: predictor + routing builds and a full FedLEOGrid
+    planning round at mega scale."""
+    from repro.comms.routing import ISLPlan, RoutingTable
+    from repro.configs.constellations import make_sim_config
+    from repro.orbits.topology import get_isl_topology
+
+    sim = make_sim_config(
+        name, GS_NAMES, topology="auto",
+        horizon_hours=horizon_hours, mem_budget_mb=MEM_BUDGET_MB,
+    )
+    walker, gs_list, pred, build_us, build_peak_mb = _build_predictor(
+        name, horizon_hours
+    )
+
+    topo, topo_wall_us = timed(
+        lambda: get_isl_topology(sim.constellation, sim.topology)
+    )
+    plan = ISLPlan(intra=sim.isl, inter=sim.isl_inter or sim.isl)
+    # eager all-pairs build (the first hop_split for this weight pair)
+    routing, routing_wall_us = timed(
+        lambda: RoutingTable(topo, plan, PAYLOAD_BITS)
+    )
+    # lazy option: per-source rows only — time a broadcast query from a
+    # handful of sources against a fresh lazy table
+    lazy = RoutingTable(topo, plan, PAYLOAD_BITS, lazy=True)
+    K = topo.sats_per_plane
+    sources = [p * K for p in range(LAZY_QUERY_SOURCES)]
+    _, lazy_query_us = timed(
+        lambda: lazy.broadcast_times(sources, [0.0] * len(sources))
+    )
+
+    env = make_comms_env(
+        sim, predictor=pred, walker=walker, sanitize=sanitize
+    )
+    round_s, plan_wall_us = timed(
+        lambda: price_grid_round(
+            env, routing, cluster_planes=CLUSTER_PLANES,
+            train_time_s=TRAIN_TIME_S, dynamic=True,
+        )
+    )
+    env.finish_session(float("inf"), check_leaks=False)
+
+    return {
+        "bench": "mega_scale",
+        "constellation": name,
+        "num_satellites": sim.constellation.num_satellites,
+        "num_planes": sim.constellation.num_planes,
+        "ground_stations": list(GS_NAMES),
+        "horizon_hours": horizon_hours,
+        "mem_budget_mb": MEM_BUDGET_MB,
+        "num_windows": len(pred.table),
+        "predictor_build_s": round(build_us / 1e6, 3),
+        "predictor_peak_mb": round(build_peak_mb, 1),
+        "baseline_40x22_build_s": round(baseline_build_us / 1e6, 3),
+        "predictor_build_ratio_vs_40x22": round(
+            build_us / baseline_build_us, 2
+        ),
+        "topology_build_s": round(topo_wall_us / 1e6, 3),
+        "routing_build_s": round(routing_wall_us / 1e6, 3),
+        "routing_lazy_query_s": round(lazy_query_us / 1e6, 4),
+        "cluster_planes": CLUSTER_PLANES,
+        "plan_round_s": None if round_s is None else round(round_s, 1),
+        "plan_wall_s": round(plan_wall_us / 1e6, 3),
+        "peak_rss_mb": round(peak_rss_mb(), 1),
+    }
+
+
+def run(
+    quick: bool = False,
+    constellations: Optional[Sequence[str]] = None,
+) -> List[Dict]:
+    horizon = QUICK_HORIZON_HOURS if quick else HORIZON_HOURS
+    # baseline measured once, same process / tracer / horizon / budget
+    _, _, _, baseline_us, _ = _build_predictor(BASELINE, horizon)
+    rows = []
+    for name in constellations or CONSTELLATIONS:
+        row = bench_preset(
+            name, horizon, baseline_us, sanitize=quick
+        )
+        row["quick"] = quick
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced horizon (CI smoke), sanitizer on")
+    args = ap.parse_args()
+    failures = []
+    for row in run(quick=args.quick):
+        append_bench(row)
+        if row["plan_round_s"] is None:
+            failures.append(
+                f"{row['constellation']}: planning round stalled"
+            )
+    if failures:
+        raise SystemExit("; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -97,7 +97,7 @@ _UNIT_FILES = {
 _UNIT_SUFFIXES = (
     "_s", "_bits", "_hz", "_bps", "_hours", "_m", "_deg",
     "_dbm", "_dbi", "_k", "_db", "_fraction", "_factor",
-    "_index", "_slot",
+    "_index", "_slot", "_mb",
 )
 _UNIT_PREFIXES = ("t_", "num_")
 # central exemption table: unit-free or self-describing numeric fields.
@@ -139,7 +139,10 @@ _WALL_CLOCK_CALLS = {
 
 
 # --- rule 5: annotation completeness ------------------------------------------
-_ANNOTATION_PACKAGES = ("repro/comms/", "repro/core/", "repro/obs/")
+_ANNOTATION_PACKAGES = (
+    "repro/comms/", "repro/configs/", "repro/core/", "repro/obs/",
+    "repro/orbits/",
+)
 
 
 def _enclosing_functions(tree: ast.Module) -> Dict[ast.AST, str]:

@@ -58,15 +58,17 @@ from repro.comms.ledger import GSResourceLedger
 from repro.comms.link import LinkConfig, downlink_time, uplink_time
 from repro.orbits.constellation import (
     GroundStation,
+    MultiShellWalker,
     Satellite,
     WalkerDelta,
+    make_walker,
 )
 from repro.orbits.prediction import (
     GroundStations,
     VisibilityPredictor,
     as_gs_list,
 )
-from repro.orbits.visibility import VisibilityWindow
+from repro.orbits.visibility import DEFAULT_MEM_BUDGET_MB, VisibilityWindow
 
 if TYPE_CHECKING:
     from repro.analysis.sanitizer import ScheduleSanitizer, Violation
@@ -194,7 +196,7 @@ class CommsEnvironment:
     def __init__(
         self,
         *,
-        walker: WalkerDelta,
+        walker: "WalkerDelta | MultiShellWalker",
         predictor: VisibilityPredictor,
         link: Optional[LinkConfig] = None,
         isl: Optional[ISLConfig] = None,
@@ -232,16 +234,18 @@ class CommsEnvironment:
         self.recorder: Optional["TraceRecorder"] = None
 
     @classmethod
-    def from_sim(cls, sim: "SimConfig", walker: Optional[WalkerDelta] = None
+    def from_sim(cls, sim: "SimConfig",
+                 walker: "WalkerDelta | MultiShellWalker | None" = None
                  ) -> "CommsEnvironment":
         """The session of one ``SimConfig``: predictor over the sim's
         ground segment (rolling when ``rolling_horizon_hours`` is set),
         a shared RB ledger when ``gs_rb_capacity`` caps station
         capacity, and the sim's handover policy."""
         if walker is None:
-            walker = WalkerDelta(sim.constellation)
+            walker = make_walker(sim.constellation)
         gs_list = list(sim.all_ground_stations)
         max_horizon_s = sim.horizon_hours * 3600.0 * 1.5
+        mem_budget_mb = getattr(sim, "mem_budget_mb", DEFAULT_MEM_BUDGET_MB)
         if sim.rolling_horizon_hours is not None:
             predictor = VisibilityPredictor(
                 walker,
@@ -250,11 +254,13 @@ class CommsEnvironment:
                 coarse_step_s=sim.coarse_step_s,
                 rolling=True,
                 max_horizon_s=max_horizon_s,
+                mem_budget_mb=mem_budget_mb,
             )
         else:
             predictor = VisibilityPredictor(
                 walker, gs_list, horizon_s=max_horizon_s,
                 coarse_step_s=sim.coarse_step_s,
+                mem_budget_mb=mem_budget_mb,
             )
         ledger = (
             GSResourceLedger(len(gs_list), sim.gs_rb_capacity)

@@ -21,7 +21,7 @@ import math
 from typing import TYPE_CHECKING, Any, Optional, Union
 
 if TYPE_CHECKING:
-    from repro.orbits.constellation import ConstellationConfig
+    from repro.orbits.constellation import ConstellationConfig, MultiShellConfig
     from repro.orbits.topology import ISLTopology, TopologyConfig
 
 # Inter-plane cross-links are optical (FSO): provision them at 1 Gbps
@@ -44,7 +44,7 @@ class ISLConfig:
     @classmethod
     def from_constellation(
         cls,
-        constellation: "ConstellationConfig",
+        constellation: "ConstellationConfig | MultiShellConfig",
         link_type: str = "intra",
         topology: "Optional[Union[ISLTopology, TopologyConfig]]" = None,
         **overrides: Any,

@@ -18,12 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.comms.isl import ISLConfig, isl_hop_time
-from repro.orbits.constellation import ConstellationConfig
+from repro.orbits.constellation import ConstellationConfig, MultiShellConfig
 from repro.orbits.topology import (
     ISLTopology,
     TopologyConfig,
@@ -98,26 +98,90 @@ class RoutingTable:
                (UNREACHABLE for disconnected pairs).
       latency: (N, N) float relay seconds along the min-latency path
                (inf for disconnected pairs).
+
+    With ``lazy=True`` the (N, N) matrices are not built up front:
+    queries that only touch source rows (``broadcast_times``,
+    ``submatrix``, ``relay_times`` via the undirected symmetry
+    ``latency[:, sink] == latency[sink, :]``) run per-source Dijkstra
+    (``ISLTopology.hop_split_rows``) and cache the rows; directly
+    reading ``.hops``/``.latency`` materializes the full matrices on
+    first access.  The eager default is byte-for-byte the historical
+    behavior.
     """
+
+    _LAZY_ATTRS = ("hops_intra", "hops_inter", "hops", "latency")
 
     def __init__(
         self,
         topology: ISLTopology,
         plan: ISLPlan,
         payload_bits: float,
+        lazy: bool = False,
     ):
         self.topology = topology
         self.plan = plan
         self.payload_bits = float(payload_bits)
         t_a, t_b = plan.hop_times(payload_bits)
         self.t_hop_intra, self.t_hop_inter = t_a, t_b
-        h_a, h_b = topology.hop_split(t_a, t_b)
+        self.lazy = bool(lazy)
+        self._row_cache: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        if not self.lazy:
+            self._materialize()
+
+    def _materialize(self) -> None:
+        t_a, t_b = self.t_hop_intra, self.t_hop_inter
+        h_a, h_b = self.topology.hop_split(t_a, t_b)
         self.hops_intra, self.hops_inter = h_a, h_b
         unreachable = h_a == UNREACHABLE
         self.hops = np.where(unreachable, UNREACHABLE, h_a + h_b)
         self.latency = np.where(
             unreachable, np.inf, h_a * t_a + h_b * t_b
         )
+
+    def __getattr__(self, name: str) -> np.ndarray:
+        # only reached when normal lookup misses: a lazy table's full
+        # matrices materialize on first direct access
+        if name in RoutingTable._LAZY_ATTRS:
+            self._materialize()
+            return getattr(self, name)
+        raise AttributeError(name)
+
+    @property
+    def materialized(self) -> bool:
+        """True once the full (N, N) matrices exist."""
+        return "latency" in self.__dict__
+
+    def _row_metrics(
+        self, sources: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(hops, latency) rows (S, N) for the given source nodes.
+
+        Eager (or already-materialized) tables slice the full matrices
+        — bit-identical to historical behavior; lazy tables run
+        per-source Dijkstra and cache each row.
+        """
+        src = np.asarray(sources, dtype=np.intp)
+        if self.materialized:
+            return self.hops[src], self.latency[src]
+        missing = [int(s) for s in src if int(s) not in self._row_cache]
+        if missing:
+            r_a, r_b = self.topology.hop_split_rows(
+                np.asarray(missing, dtype=np.intp),
+                self.t_hop_intra,
+                self.t_hop_inter,
+            )
+            for k, s in enumerate(missing):
+                self._row_cache[s] = (r_a[k], r_b[k])
+        h_a = np.stack([self._row_cache[int(s)][0] for s in src])
+        h_b = np.stack([self._row_cache[int(s)][1] for s in src])
+        unreachable = h_a == UNREACHABLE
+        hops = np.where(unreachable, UNREACHABLE, h_a + h_b)
+        lat = np.where(
+            unreachable,
+            np.inf,
+            h_a * self.t_hop_intra + h_b * self.t_hop_inter,
+        )
+        return hops, lat
 
     @property
     def num_nodes(self) -> int:
@@ -132,6 +196,10 @@ class RoutingTable:
         """(hops, latency) restricted to a node subset — paths may still
         transit nodes outside the subset (ISLs are dedicated links; a
         relay through a neighboring plane costs nothing extra here)."""
+        nodes = np.asarray(nodes, dtype=np.intp)
+        if not self.materialized:
+            hops_rows, lat_rows = self._row_metrics(nodes)
+            return hops_rows[:, nodes], lat_rows[:, nodes]
         ix = np.ix_(nodes, nodes)
         return self.hops[ix], self.latency[ix]
 
@@ -152,8 +220,11 @@ class RoutingTable:
             np.arange(self.num_nodes) if nodes is None
             else np.asarray(nodes, dtype=np.intp)
         )
-        t_recv, pick = flood_times(self.latency, sources, t_source, cols)
-        hops = self.hops[sources[pick], cols]
+        hops_rows, lat_rows = self._row_metrics(sources)
+        t_recv, pick = flood_times(
+            lat_rows, np.arange(sources.size), t_source, cols
+        )
+        hops = hops_rows[pick, cols]
         return t_recv, hops, pick
 
     def relay_times(
@@ -167,6 +238,11 @@ class RoutingTable:
             np.arange(self.num_nodes) if nodes is None
             else np.asarray(nodes, dtype=np.intp)
         )
+        if not self.materialized:
+            # undirected graph: latency[:, sink] == latency[sink, :]
+            _, lat_sink = self._row_metrics(np.asarray([sink]))
+            t_arr = np.asarray(list(t_ready), dtype=np.float64)
+            return t_arr + lat_sink[0, rows]
         return relay_arrivals(self.latency, sink, t_ready, rows)
 
 
@@ -192,21 +268,24 @@ def on_routing_cache(
 
 @functools.lru_cache(maxsize=32)
 def _routing_table_cached(
-    constellation: ConstellationConfig,
+    constellation: "ConstellationConfig | MultiShellConfig",
     topology: TopologyConfig,
     plan: ISLPlan,
     payload_bits: float,
+    lazy: bool = False,
 ) -> RoutingTable:
     return RoutingTable(
-        get_isl_topology(constellation, topology), plan, payload_bits
+        get_isl_topology(constellation, topology), plan, payload_bits,
+        lazy=lazy,
     )
 
 
 def get_routing_table(
-    constellation: ConstellationConfig,
+    constellation: "ConstellationConfig | MultiShellConfig",
     topology: TopologyConfig,
     plan: ISLPlan,
     payload_bits: float,
+    lazy: bool = False,
 ) -> RoutingTable:
     """Cached ``RoutingTable`` per (constellation, topology, plan,
     payload) — every argument is frozen/hashable and the graph is
@@ -215,14 +294,16 @@ def get_routing_table(
     behind it) instead of rebuilding it per run.  The table is
     read-only by convention; callers must not mutate its matrices.
     Registered ``on_routing_cache`` observers see each lookup's
-    hit/miss outcome."""
+    hit/miss outcome.  ``lazy=True`` defers the (N, N) matrices to
+    per-source rows (see ``RoutingTable``) and caches separately from
+    the eager table."""
     if not _CACHE_LISTENERS:
         return _routing_table_cached(
-            constellation, topology, plan, payload_bits
+            constellation, topology, plan, payload_bits, lazy
         )
     before = _routing_table_cached.cache_info().hits
     table = _routing_table_cached(
-        constellation, topology, plan, payload_bits
+        constellation, topology, plan, payload_bits, lazy
     )
     hit = _routing_table_cached.cache_info().hits > before
     for cb in list(_CACHE_LISTENERS):

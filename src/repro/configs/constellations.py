@@ -13,9 +13,16 @@ scheduling scenarios are one call away.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import TYPE_CHECKING, Dict, Optional, Sequence, Tuple, Union
 
-from repro.orbits.constellation import ConstellationConfig, GroundStation
+if TYPE_CHECKING:
+    from repro.core.engine import SimConfig
+
+from repro.orbits.constellation import (
+    ConstellationConfig,
+    GroundStation,
+    MultiShellConfig,
+)
 from repro.orbits.topology import TopologyConfig, get_topology
 
 CONSTELLATION_PRESETS: Dict[str, ConstellationConfig] = {
@@ -32,6 +39,12 @@ CONSTELLATION_PRESETS: Dict[str, ConstellationConfig] = {
         num_planes=40, sats_per_plane=22, altitude_m=550.0e3,
         inclination_deg=53.0, phasing_factor=13,
     ),
+    # Starlink gen1 full first shell: 1584 sats in 72 planes at 550 km
+    # / 53 deg (the mega-constellation scale target)
+    "starlink-gen1": ConstellationConfig(
+        num_planes=72, sats_per_plane=22, altitude_m=550.0e3,
+        inclination_deg=53.0, phasing_factor=39,
+    ),
     # Kuiper first shell-like: 34 planes x 34 sats at 630 km / 51.9 deg
     "kuiper-34x34": ConstellationConfig(
         num_planes=34, sats_per_plane=34, altitude_m=630.0e3,
@@ -41,6 +54,27 @@ CONSTELLATION_PRESETS: Dict[str, ConstellationConfig] = {
     "oneweb-12x49": ConstellationConfig(
         num_planes=12, sats_per_plane=49, altitude_m=1200.0e3,
         inclination_deg=87.9, phasing_factor=1,
+    ),
+}
+
+MULTI_SHELL_PRESETS: Dict[str, MultiShellConfig] = {
+    # Starlink gen1 shell + an idealized higher-inclination 570 km shell
+    # (Walker idealization of the gen2 "550-ish + 570/70 deg" layering;
+    # sats_per_plane kept at 22 so the (plane, slot) grid stays
+    # rectangular across shells — 2376 satellites total).
+    "starlink-2shell": MultiShellConfig(
+        shells=(
+            ConstellationConfig(
+                num_planes=72, sats_per_plane=22, altitude_m=550.0e3,
+                inclination_deg=53.0, phasing_factor=39,
+            ),
+            ConstellationConfig(
+                num_planes=36, sats_per_plane=22, altitude_m=570.0e3,
+                inclination_deg=70.0, phasing_factor=5,
+            ),
+        ),
+        cross_max_range_m=1500.0e3,
+        cross_links_per_sat=1,
     ),
 }
 
@@ -68,11 +102,15 @@ GROUND_STATION_PRESETS: Dict[str, GroundStation] = {
 }
 
 
-def get_constellation(name: str) -> ConstellationConfig:
+def get_constellation(
+    name: str,
+) -> "ConstellationConfig | MultiShellConfig":
+    if name in MULTI_SHELL_PRESETS:
+        return MULTI_SHELL_PRESETS[name]
     if name not in CONSTELLATION_PRESETS:
         raise ValueError(
             f"unknown constellation {name!r}; have "
-            f"{sorted(CONSTELLATION_PRESETS)}"
+            f"{sorted(CONSTELLATION_PRESETS) + sorted(MULTI_SHELL_PRESETS)}"
         )
     return CONSTELLATION_PRESETS[name]
 
@@ -100,8 +138,10 @@ CONSTELLATION_TOPOLOGY: Dict[str, str] = {
     "paper-5x8": "ring",
     "walker-12x12": "grid",
     "starlink-40x22": "grid",
+    "starlink-gen1": "grid",
     "kuiper-34x34": "grid",
     "oneweb-12x49": "ring",
+    "starlink-2shell": "grid",
 }
 
 
@@ -111,8 +151,8 @@ def make_sim_config(
     topology: Optional[Union[str, TopologyConfig]] = None,
     rb_contention: bool = False,
     handover: bool = False,
-    **overrides,
-):
+    **overrides: object,
+) -> "SimConfig":
     """SimConfig from presets: FedLEO and every baseline in
     ``core/baselines.py`` run on any constellation/ground-segment pair.
 

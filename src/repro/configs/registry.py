@@ -41,7 +41,7 @@ def build_model(
     ssd_impl: str = "xla",
     dtype: Any = None,
     sliding_window: Optional[int] = None,
-):
+) -> Any:
     """Instantiate the model class for a config.
 
     sliding_window: pass cfg.sliding_window to build the sub-quadratic

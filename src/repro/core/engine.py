@@ -37,6 +37,7 @@ from repro.obs import (
 from repro.orbits.constellation import (
     ConstellationConfig,
     GroundStation,
+    MultiShellConfig,
 )
 from repro.orbits.topology import TopologyConfig
 
@@ -45,8 +46,8 @@ PyTree = Any
 
 @dataclasses.dataclass
 class SimConfig:
-    constellation: ConstellationConfig = dataclasses.field(
-        default_factory=ConstellationConfig
+    constellation: "ConstellationConfig | MultiShellConfig" = (
+        dataclasses.field(default_factory=ConstellationConfig)
     )
     ground_station: GroundStation = dataclasses.field(
         default_factory=GroundStation
@@ -66,6 +67,11 @@ class SimConfig:
     isl_inter: Optional[ISLConfig] = None
     horizon_hours: float = 72.0           # paper simulates 3 days
     coarse_step_s: float = 10.0
+    # Peak-transient budget for the vectorized visibility scan: chunk
+    # lengths adapt to (num satellites, horizon) to stay under this
+    # many MB of concurrent scan arrays (results are bit-identical
+    # across budgets — chunking only partitions evaluation).
+    mem_budget_mb: float = 256.0
     # Per-station downlink resource-block cap (eq. 13-16: N RBs of B_D
     # each).  None = contention-free (the pre-ledger degenerate case:
     # concurrent sink uploads never compete); an int enables the shared

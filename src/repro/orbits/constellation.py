@@ -289,3 +289,148 @@ class WalkerDelta:
         """Chord length between adjacent satellites in the same plane."""
         K = self.config.sats_per_plane
         return 2.0 * self.radius * math.sin(math.pi / K)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiShellConfig:
+    """Several Walker-delta shells flown as one constellation.
+
+    Planes are numbered globally: shell 0 owns planes
+    ``[0, shells[0].num_planes)``, shell 1 the next block, and so on.
+    Every shell must share ``sats_per_plane`` so the (plane, slot) grid —
+    and everything built on it (visibility tables, ring topologies,
+    cluster planners) — stays rectangular.
+
+    ``cross_max_range_m`` bounds the slant range of inter-shell links;
+    ``cross_links_per_sat`` caps how many cross-shell neighbours each
+    satellite may connect to (nearest-first at t=0).
+    """
+
+    shells: tuple[ConstellationConfig, ...]
+    cross_max_range_m: float = 1500.0e3
+    cross_links_per_sat: int = 1
+
+    def __post_init__(self) -> None:
+        if not self.shells:
+            raise ValueError("MultiShellConfig needs at least one shell")
+        ks = {s.sats_per_plane for s in self.shells}
+        if len(ks) != 1:
+            raise ValueError(
+                f"all shells must share sats_per_plane, got {sorted(ks)}"
+            )
+
+    @property
+    def num_planes(self) -> int:
+        return sum(s.num_planes for s in self.shells)
+
+    @property
+    def sats_per_plane(self) -> int:
+        return self.shells[0].sats_per_plane
+
+    @property
+    def num_satellites(self) -> int:
+        return self.num_planes * self.sats_per_plane
+
+    @property
+    def altitude_m(self) -> float:
+        """Reference altitude (first shell); per-shell values differ."""
+        return self.shells[0].altitude_m
+
+    @property
+    def period_s(self) -> float:
+        """Slowest shell's period — conservative for supply cadences."""
+        return max(s.period_s for s in self.shells)
+
+    @property
+    def plane_offsets(self) -> tuple[int, ...]:
+        """Global plane index where each shell's block starts."""
+        offs, acc = [], 0
+        for s in self.shells:
+            offs.append(acc)
+            acc += s.num_planes
+        return tuple(offs)
+
+    def shell_of_plane(self, plane: int) -> int:
+        """Shell index owning a global plane index."""
+        if not 0 <= plane < self.num_planes:
+            raise ValueError(f"plane {plane} out of range")
+        for i, off in enumerate(self.plane_offsets):
+            if plane < off + self.shells[i].num_planes:
+                return i
+        raise AssertionError("unreachable")
+
+
+class MultiShellWalker:
+    """Propagator for a multi-shell constellation.
+
+    Presents the same surface the scheduling stack consumes from
+    :class:`WalkerDelta` — ``config``, ``positions_batch``,
+    ``position_of``, ``elevations_from``, ``satellites`` — by
+    dispatching on the global plane index to per-shell propagators.
+    """
+
+    def __init__(self, config: MultiShellConfig):
+        self.config = config
+        self._walkers = [WalkerDelta(s) for s in config.shells]
+        self._offsets = np.asarray(config.plane_offsets, dtype=np.intp)
+        # shell index per global plane, for vectorized dispatch
+        self._shell_of = np.concatenate(
+            [
+                np.full(s.num_planes, i, dtype=np.intp)
+                for i, s in enumerate(config.shells)
+            ]
+        )
+
+    @property
+    def satellites(self) -> Sequence[Satellite]:
+        return [
+            Satellite(plane=p, slot=s)
+            for p in range(self.config.num_planes)
+            for s in range(self.config.sats_per_plane)
+        ]
+
+    def positions_batch(
+        self,
+        planes: np.ndarray,
+        slots: np.ndarray,
+        t: np.ndarray,
+    ) -> np.ndarray:
+        """ECI positions for arbitrary global (plane, slot, time) triples."""
+        planes = np.asarray(planes, dtype=np.intp)
+        slots = np.asarray(slots, dtype=np.intp)
+        t = np.asarray(t, dtype=np.float64)
+        planes, slots, t = np.broadcast_arrays(planes, slots, t)
+        out = np.empty(planes.shape + (3,), dtype=np.float64)
+        shell = self._shell_of[planes]
+        for i, w in enumerate(self._walkers):
+            sel = shell == i
+            if not np.any(sel):
+                continue
+            out[sel] = w.positions_batch(
+                planes[sel] - self._offsets[i], slots[sel], t[sel]
+            )
+        return out
+
+    def position_of(self, sat: Satellite, t: np.ndarray) -> np.ndarray:
+        i = int(self._shell_of[sat.plane])
+        local = Satellite(
+            plane=sat.plane - int(self._offsets[i]), slot=sat.slot
+        )
+        return self._walkers[i].position_of(local, t)
+
+    def elevations_from(
+        self, gs: GroundStation, t: np.ndarray
+    ) -> np.ndarray:
+        """Elevation (L_total, K, T) stacked along the global plane axis."""
+        return np.concatenate(
+            [w.elevations_from(gs, t) for w in self._walkers], axis=0
+        )
+
+
+def make_walker(
+    config: "ConstellationConfig | MultiShellConfig",
+) -> "WalkerDelta | MultiShellWalker":
+    """Propagator factory: dispatch on single- vs multi-shell config."""
+    if isinstance(config, MultiShellConfig):
+        return MultiShellWalker(config)
+    return WalkerDelta(config)

@@ -37,15 +37,30 @@ that never sees any station must not extend forever).
 from __future__ import annotations
 
 import math
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (
+    TYPE_CHECKING,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
 
 import numpy as np
 
 if TYPE_CHECKING:
     from repro.obs.trace import TraceRecorder
 
-from repro.orbits.constellation import GroundStation, Satellite, WalkerDelta
+from repro.orbits.constellation import (
+    GroundStation,
+    MultiShellWalker,
+    Satellite,
+    WalkerDelta,
+)
 from repro.orbits.visibility import (
+    DEFAULT_MEM_BUDGET_MB,
     VisibilityWindow,
     WindowTable,
     visibility_table,
@@ -100,7 +115,7 @@ def _merge_at_boundary(
 class VisibilityPredictor:
     def __init__(
         self,
-        walker: WalkerDelta,
+        walker: "WalkerDelta | MultiShellWalker",
         gs: GroundStations,
         horizon_s: float,
         t0: float = 0.0,
@@ -108,6 +123,7 @@ class VisibilityPredictor:
         engine: str = "vectorized",
         rolling: bool = False,
         max_horizon_s: Optional[float] = None,
+        mem_budget_mb: float = DEFAULT_MEM_BUDGET_MB,
     ):
         """Args:
           gs: one ground station, or a sequence for union-of-windows
@@ -129,6 +145,7 @@ class VisibilityPredictor:
         self.t0 = t0
         self.horizon_s = horizon_s
         self.coarse_step_s = coarse_step_s
+        self.mem_budget_mb = float(mem_budget_mb)
         self.rolling = bool(rolling)
         if self.rolling:
             if engine != "vectorized":
@@ -159,6 +176,7 @@ class VisibilityPredictor:
                 visibility_table(
                     walker, g, t0, end0,
                     coarse_step_s=coarse_step_s, gs_index=i,
+                    mem_budget_mb=self.mem_budget_mb,
                 )
                 for i, g in enumerate(gss)
             ]
@@ -239,6 +257,7 @@ class VisibilityPredictor:
             chunk = visibility_table(
                 self.walker, g, self._built_end, new_end,
                 coarse_step_s=self.coarse_step_s, gs_index=i,
+                mem_budget_mb=self.mem_budget_mb,
             )
             self._station_tables[i] = _merge_at_boundary(
                 self._station_tables[i], chunk, self._built_end,
@@ -259,7 +278,9 @@ class VisibilityPredictor:
                 return False
         return True
 
-    def retry_extending(self, attempt):
+    def retry_extending(
+        self, attempt: "Callable[[], Tuple[object, bool]]"
+    ) -> object:
         """Run ``attempt() -> (result, retry)`` against the currently
         built table, growing the horizon one chunk and re-running while
         ``retry`` is truthy — the shared extend-and-retry discipline of
@@ -335,7 +356,9 @@ class VisibilityPredictor:
         rec = self._by_sat[key]
         return self.table.window(int(rec["idx"][j]))
 
-    def _first_index_ending_after(self, key, t: float) -> Optional[int]:
+    def _first_index_ending_after(
+        self, key: Tuple[int, int], t: float
+    ) -> Optional[int]:
         """Index (in start order) of the first window with t_end > t."""
         rec = self._by_sat.get(key)
         if rec is None:

@@ -38,10 +38,28 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.orbits.constellation import ConstellationConfig
+from repro.orbits.constellation import (
+    R_EARTH,
+    ConstellationConfig,
+    MultiShellConfig,
+)
 
 INTRA, INTER = 0, 1      # edge types
 UNREACHABLE = -1         # hop-count sentinel for disconnected pairs
+
+# first-hop selection works on (N, D, block) float64 slabs instead of the
+# full (N, D, N) candidate tensor (~3 GB at N=2376, D=4+)
+_FIRST_HOP_BLOCK_BYTES = 64e6
+
+
+def _count_dtype(num_nodes: int) -> "type[np.signedinteger]":
+    """Smallest signed dtype holding hop counts (path edges <= N-1).
+
+    int16 up to 2**14 nodes leaves headroom for ``h_a + h_b`` sums;
+    beyond that int32.  Quarters the footprint of the four all-pairs
+    count matrices at mega-constellation N versus int64.
+    """
+    return np.int16 if num_nodes <= 2**14 else np.int32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +79,7 @@ class TopologyConfig:
     inter_plane_offsets: Optional[Tuple[int, ...]] = None
     seam_cut: bool = False
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.kind not in ("ring", "grid", "motif"):
             raise ValueError(f"unknown topology kind {self.kind!r}")
 
@@ -95,6 +113,45 @@ def phased_slot_shift(
     return int(round(F * (plane_from - plane_to) / L))
 
 
+def _add_shell_edges(
+    edges: Dict[Tuple[int, int], int],
+    constellation: ConstellationConfig,
+    cfg: TopologyConfig,
+    node_offset: int,
+) -> None:
+    """Add one Walker shell's intra/inter-plane edges into ``edges``,
+    with the shell's nodes shifted by ``node_offset`` (0 for a
+    single-shell topology; the shell's global block start otherwise)."""
+    L, K = constellation.num_planes, constellation.sats_per_plane
+
+    def node(p: int, s: int) -> int:
+        return node_offset + p * K + s
+
+    def add(i: int, j: int, kind: int) -> None:
+        if i == j:
+            return
+        key = (min(i, j), max(i, j))
+        edges.setdefault(key, kind)
+
+    for off in cfg.resolved_intra_offsets:
+        for p in range(L):
+            for s in range(K):
+                add(node(p, s), node(p, (s + off) % K), INTRA)
+    for d in cfg.resolved_inter_offsets:
+        for p in range(L):
+            q = (p + d) % L
+            if q == p:
+                continue
+            # the signed offset keeps the stepping direction, so the
+            # seam test is representation-independent: d=-1 wraps at
+            # p=0 exactly where d=+1 wraps at p=L-1
+            if cfg.seam_cut and not 0 <= p + d < L:
+                continue            # link would wrap the polar seam
+            shift = phased_slot_shift(constellation, p, q)
+            for s in range(K):
+                add(node(p, s), node(q, (s + shift) % K), INTER)
+
+
 class ISLTopology:
     """The ISL graph of one constellation + topology config.
 
@@ -104,7 +161,7 @@ class ISLTopology:
 
     def __init__(
         self,
-        constellation: ConstellationConfig,
+        constellation: "ConstellationConfig | MultiShellConfig",
         config: TopologyConfig = TopologyConfig(),
     ):
         self.constellation = constellation
@@ -147,33 +204,9 @@ class ISLTopology:
         return divmod(node, self.sats_per_plane)
 
     def _build_edges(self) -> Dict[Tuple[int, int], int]:
-        L, K = self.num_planes, self.sats_per_plane
-        cfg = self.config
         edges: Dict[Tuple[int, int], int] = {}
-
-        def add(i: int, j: int, kind: int) -> None:
-            if i == j:
-                return
-            key = (min(i, j), max(i, j))
-            edges.setdefault(key, kind)
-
-        for off in cfg.resolved_intra_offsets:
-            for p in range(L):
-                for s in range(K):
-                    add(self.node(p, s), self.node(p, (s + off) % K), INTRA)
-        for d in cfg.resolved_inter_offsets:
-            for p in range(L):
-                q = (p + d) % L
-                if q == p:
-                    continue
-                # the signed offset keeps the stepping direction, so the
-                # seam test is representation-independent: d=-1 wraps at
-                # p=0 exactly where d=+1 wraps at p=L-1
-                if cfg.seam_cut and not 0 <= p + d < L:
-                    continue            # link would wrap the polar seam
-                shift = phased_slot_shift(self.constellation, p, q)
-                for s in range(K):
-                    add(self.node(p, s), self.node(q, (s + shift) % K), INTER)
+        assert isinstance(self.constellation, ConstellationConfig)
+        _add_shell_edges(edges, self.constellation, self.config, 0)
         return edges
 
     def edges(self, kind: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
@@ -206,6 +239,60 @@ class ISLTopology:
         self._split_cache[key] = split
         return split
 
+    def hop_split_rows(
+        self,
+        sources: np.ndarray,
+        w_intra: float = 1.0,
+        w_inter: float = 1.0,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-source shortest-path decompositions: lazy counterpart of
+        :meth:`hop_split`.
+
+        Runs Dijkstra only from ``sources`` and decomposes each
+        predecessor chain with per-row pointer doubling, so the working
+        set scales with (S, N) instead of (N, N) and the (N, D, N)
+        first-hop tensor is never formed.  Returns ``(h_intra, h_inter)``
+        of shape (S, N); the unreachable mask matches :meth:`hop_split`
+        exactly and ``h_intra*w_intra + h_inter*w_inter`` equals the
+        optimal cost (equal-cost paths may decompose differently from
+        the all-pairs solver's tie-break).
+        """
+        src = np.atleast_1d(np.asarray(sources, dtype=np.intp))
+        N = self.num_nodes
+        ct = _count_dtype(N)
+        try:
+            from scipy.sparse import csr_matrix
+            from scipy.sparse.csgraph import dijkstra
+        except ImportError:          # no scipy: slice the full solver
+            h_a, h_b = self.hop_split(w_intra, w_inter)
+            return h_a[src].copy(), h_b[src].copy()
+
+        i, j = np.nonzero(self.adjacency >= 0)          # directed both ways
+        w_edge = np.where(
+            self.adjacency[i, j] == INTRA, float(w_intra), float(w_inter)
+        )
+        dist, pred = dijkstra(
+            csr_matrix((w_edge, (i, j)), shape=(N, N)),
+            directed=False,
+            indices=src,
+            return_predecessors=True,
+        )                                               # (S, N) each
+        cols = np.arange(N)[None, :]
+        valid = pred >= 0                               # scipy pads -9999
+        jmp = np.where(valid, pred, cols).astype(np.int64, copy=False)
+        step_type = self.adjacency[jmp, cols]           # edge pred[j] -> j
+        step_a = ((step_type == INTRA) & valid).astype(ct)
+        h_a, h_b = step_a, ((step_type == INTER) & valid).astype(ct)
+        # pointer doubling along predecessor chains, per row
+        for _ in range(int(np.ceil(np.log2(max(N, 2)))) + 1):
+            h_a = h_a + np.take_along_axis(h_a, jmp, axis=1)
+            h_b = h_b + np.take_along_axis(h_b, jmp, axis=1)
+            jmp = np.take_along_axis(jmp, jmp, axis=1)
+        unreachable = ~np.isfinite(dist)
+        h_a = np.where(unreachable, UNREACHABLE, h_a).astype(ct, copy=False)
+        h_b = np.where(unreachable, UNREACHABLE, h_b).astype(ct, copy=False)
+        return h_a, h_b
+
     def _hop_split_dijkstra(
         self, w_intra: float, w_inter: float
     ) -> Tuple[np.ndarray, np.ndarray]:
@@ -230,15 +317,24 @@ class ISLTopology:
 
         # first hop of one optimal path per (node, destination): the
         # neighbor minimizing w(step) + dist(neighbor, dest) (argmin =
-        # first index, deterministic)
+        # first index, deterministic).  Destination columns are
+        # independent, so the (N, D, N) candidate tensor is evaluated in
+        # budget-bounded column blocks — bit-identical argmins, bounded
+        # transient instead of N*D*N*8 bytes at once.
+        ct = _count_dtype(N)
         w_step = np.where(ntype == INTRA, float(w_intra), float(w_inter))
         w_step = np.where(ntype < 0, np.inf, w_step)    # (N, D)
-        cand = dist[nbr] + w_step[:, :, None]           # (N, D, N)
-        d = np.argmin(cand, axis=1)                     # (N, N)
+        deg = nbr.shape[1]
+        block = max(1, int(_FIRST_HOP_BLOCK_BYTES / max(1, N * deg * 8)))
+        d = np.empty((N, N), dtype=np.int32)
+        for c0 in range(0, N, block):
+            c1 = min(N, c0 + block)
+            cand = dist[:, c0:c1][nbr] + w_step[:, :, None]   # (N, D, C)
+            d[:, c0:c1] = np.argmin(cand, axis=1)
         rows = np.arange(N)
-        nxt = nbr[rows[:, None], d]
-        step_inter = (ntype == INTER).astype(np.int64)[rows[:, None], d]
-        step_a = 1 - step_inter
+        nxt = nbr[rows[:, None], d].astype(np.int32, copy=False)
+        step_inter = (ntype == INTER)[rows[:, None], d].astype(ct)
+        step_a = (1 - step_inter).astype(ct, copy=False)
         # fixpoint at the destination: no further steps, no counts
         nxt[rows, rows] = rows
         step_a[rows, rows] = 0
@@ -254,8 +350,8 @@ class ISLTopology:
             jmp = jmp[jmp, cols]
 
         unreachable = ~np.isfinite(dist)
-        h_a = np.where(unreachable, UNREACHABLE, h_a)
-        h_b = np.where(unreachable, UNREACHABLE, h_b)
+        h_a = np.where(unreachable, UNREACHABLE, h_a).astype(ct, copy=False)
+        h_b = np.where(unreachable, UNREACHABLE, h_b).astype(ct, copy=False)
         np.fill_diagonal(h_a, 0)
         np.fill_diagonal(h_b, 0)
         return h_a, h_b
@@ -268,12 +364,13 @@ class ISLTopology:
         key = (float(w_intra), float(w_inter))
         N = self.num_nodes
         nbr, ntype = self.neighbors, self.neighbor_types
+        ct = _count_dtype(N)
         w_step = np.where(ntype == INTRA, float(w_intra), float(w_inter))
         w_step = np.where(ntype < 0, np.inf, w_step)    # (N, D)
-        step_inter = (ntype == INTER).astype(np.int64)  # (N, D)
+        step_inter = (ntype == INTER).astype(ct)        # (N, D)
 
-        h_a = np.full((N, N), UNREACHABLE, dtype=np.int64)
-        h_b = np.full((N, N), UNREACHABLE, dtype=np.int64)
+        h_a = np.full((N, N), UNREACHABLE, dtype=ct)
+        h_b = np.full((N, N), UNREACHABLE, dtype=ct)
         np.fill_diagonal(h_a, 0)
         np.fill_diagonal(h_b, 0)
         # cost is always REBUILT from the counts (h_a*w_a + h_b*w_b),
@@ -346,25 +443,126 @@ class ISLTopology:
         """Mean chord length [m] over the edges of one type at t=0 (the
         Walker geometry is rigid, so inter-plane spacing at t=0 is
         representative of the per-link mean over an orbit)."""
-        from repro.orbits.constellation import WalkerDelta
+        from repro.orbits.constellation import make_walker
 
         i, j = self.edges(kind)
         if i.size == 0:
             raise ValueError(f"topology has no edges of kind {kind}")
-        walker = WalkerDelta(self.constellation)
+        walker = make_walker(self.constellation)
         K = self.sats_per_plane
         r_i = walker.positions_batch(i // K, i % K, np.zeros(i.size))
         r_j = walker.positions_batch(j // K, j % K, np.zeros(j.size))
         return float(np.mean(np.linalg.norm(r_i - r_j, axis=-1)))
 
 
+def _earth_clear(pos_a: np.ndarray, pos_b: np.ndarray) -> np.ndarray:
+    """(Na, Nb) bool: which segments pos_a[i] -> pos_b[j] clear Earth.
+
+    Closest approach of each chord to the geocenter must stay above
+    ``R_EARTH``; endpoints are satellites, so only the interior of the
+    segment can graze the sphere.
+    """
+    d = pos_b[None, :, :] - pos_a[:, None, :]            # (Na, Nb, 3)
+    dd = np.einsum("abk,abk->ab", d, d)
+    u = -np.einsum("ak,abk->ab", pos_a, d) / np.maximum(dd, 1.0)
+    u = np.clip(u, 0.0, 1.0)
+    closest = pos_a[:, None, :] + u[..., None] * d
+    r_min2 = np.einsum("abk,abk->ab", closest, closest)
+    return r_min2 > R_EARTH**2
+
+
+class MultiShellTopology(ISLTopology):
+    """ISL graph stitching several Walker shells into one node space.
+
+    Each shell carries its own intra/inter-plane pattern (the shared
+    :class:`TopologyConfig`, applied per shell with that shell's Walker
+    phasing); shells are joined by cross-shell ISLs typed ``INTER``.
+    Every satellite *proposes* links to its ``cross_links_per_sat``
+    nearest cross-shell neighbors that are within
+    ``cross_max_range_m`` and have Earth-unobstructed line of sight at
+    t=0 (the rigid Walker geometry makes t=0 representative); the union
+    of proposals forms the cross-shell edge set.  With a single shell
+    the graph degenerates to exactly the :class:`ISLTopology` edge set.
+    """
+
+    def __init__(
+        self,
+        constellation: MultiShellConfig,
+        config: TopologyConfig = TopologyConfig(),
+    ):
+        if not isinstance(constellation, MultiShellConfig):
+            raise TypeError(
+                f"MultiShellTopology needs a MultiShellConfig, got "
+                f"{type(constellation).__name__}"
+            )
+        super().__init__(constellation, config)
+
+    def _build_edges(self) -> Dict[Tuple[int, int], int]:
+        from repro.orbits.constellation import make_walker
+
+        cfg = self.constellation
+        assert isinstance(cfg, MultiShellConfig)
+        K = self.sats_per_plane
+        edges: Dict[Tuple[int, int], int] = {}
+        for shell, plane_off in zip(cfg.shells, cfg.plane_offsets):
+            _add_shell_edges(edges, shell, self.config, plane_off * K)
+        if len(cfg.shells) == 1 or cfg.cross_links_per_sat <= 0:
+            return edges
+
+        def add(i: int, j: int, kind: int) -> None:
+            if i != j:
+                edges.setdefault((min(i, j), max(i, j)), kind)
+
+        walker = make_walker(cfg)
+        nodes = np.arange(cfg.num_satellites)
+        pos = walker.positions_batch(
+            nodes // K, nodes % K, np.zeros(nodes.size)
+        )                                                # (N, 3)
+        shell_of_node = np.repeat(
+            np.concatenate(
+                [
+                    np.full(s.num_planes, idx, dtype=np.intp)
+                    for idx, s in enumerate(cfg.shells)
+                ]
+            ),
+            K,
+        )
+        kcap = cfg.cross_links_per_sat
+        for a in range(len(cfg.shells)):
+            for b in range(a + 1, len(cfg.shells)):
+                ia = np.flatnonzero(shell_of_node == a)
+                ib = np.flatnonzero(shell_of_node == b)
+                delta = pos[ib][None, :, :] - pos[ia][:, None, :]
+                dist = np.sqrt(np.einsum("abk,abk->ab", delta, delta))
+                feasible = (dist <= cfg.cross_max_range_m) & _earth_clear(
+                    pos[ia], pos[ib]
+                )
+                dist = np.where(feasible, dist, np.inf)
+                # nearest-first proposals from both sides
+                near_b = np.argsort(dist, axis=1)[:, :kcap]   # (Na, kcap)
+                for r in range(ia.size):
+                    for c in near_b[r]:
+                        if np.isfinite(dist[r, c]):
+                            add(int(ia[r]), int(ib[c]), INTER)
+                near_a = np.argsort(dist, axis=0)[:kcap, :]   # (kcap, Nb)
+                for c in range(ib.size):
+                    for r in near_a[:, c]:
+                        if np.isfinite(dist[r, c]):
+                            add(int(ia[r]), int(ib[c]), INTER)
+        return edges
+
+
 @functools.lru_cache(maxsize=16)
 def get_isl_topology(
-    constellation: ConstellationConfig, config: TopologyConfig
+    constellation: "ConstellationConfig | MultiShellConfig",
+    config: TopologyConfig,
 ) -> ISLTopology:
     """Cached ISLTopology (both configs are frozen/hashable): the
     strategy, the presets' link-length derivation and the benchmarks all
-    share one graph — and its all-pairs metric cache — per scenario."""
+    share one graph — and its all-pairs metric cache — per scenario.
+    Multi-shell configs dispatch to :class:`MultiShellTopology`."""
+    if isinstance(constellation, MultiShellConfig):
+        return MultiShellTopology(constellation, config)
     return ISLTopology(constellation, config)
 
 
@@ -377,7 +575,7 @@ TOPOLOGY_PRESETS: Dict[str, TopologyConfig] = {
 }
 
 
-def get_topology(name_or_config) -> TopologyConfig:
+def get_topology(name_or_config: "str | TopologyConfig") -> TopologyConfig:
     """Resolve a preset name (or pass a TopologyConfig through)."""
     if isinstance(name_or_config, TopologyConfig):
         return name_or_config

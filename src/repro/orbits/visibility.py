@@ -31,15 +31,45 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List
+from typing import Callable, List
 
 import numpy as np
 
-from repro.orbits.constellation import GroundStation, WalkerDelta
+from repro.orbits.constellation import (
+    GroundStation,
+    MultiShellWalker,
+    WalkerDelta,
+)
 
-# Time-chunk length for the coarse elevation scan: bounds the transient
-# (L, K, chunk, 3) position tensor to ~100 MB at Starlink scale.
-_SCAN_CHUNK_T = 2048
+# Transient memory budget [MB] for the coarse elevation scan.  The scan
+# is evaluated in time chunks whose length adapts to the constellation
+# size so the per-chunk float64 working set stays under this budget at
+# ANY scale (the pre-budget code pinned the chunk length at 2048
+# samples, which over-allocated at paper scale and under-utilized —
+# then overflowed transients at multi-shell scale).
+DEFAULT_MEM_BUDGET_MB = 256.0
+
+# Divisor turning a byte budget into a chunk length.  Measured on the
+# 72x22 preset: ``WalkerDelta.elevations_from`` holds ~6.3 concurrently
+# live (num_sats, chunk) float64 arrays (theta, trig temporaries, dot,
+# |d|^2, sin_el); the rest of the headroom covers what chunking cannot
+# shrink — the full-horizon boolean mask, the comparison slice, and the
+# per-plane GS projection — so the whole table build (not just one
+# chunk) peaks under the budget at 24 h+ horizons.
+_SCAN_ARRAYS_PER_SAMPLE = 12
+_MIN_CHUNK_T = 16
+
+
+def scan_chunk_len(num_sats: int, mem_budget_mb: float) -> int:
+    """Time-chunk length keeping the elevation scan's transient float64
+    working set (~``_SCAN_ARRAYS_PER_SAMPLE`` arrays of shape
+    ``(num_sats, chunk)``) under ``mem_budget_mb``.  Never below
+    ``_MIN_CHUNK_T`` samples, so a tiny budget degrades to many small
+    chunks instead of failing."""
+    if mem_budget_mb <= 0:
+        raise ValueError(f"mem_budget_mb must be positive, got {mem_budget_mb}")
+    bytes_per_sample = max(1, int(num_sats)) * 8 * _SCAN_ARRAYS_PER_SAMPLE
+    return max(_MIN_CHUNK_T, int(mem_budget_mb * 1e6 / bytes_per_sample))
 
 
 def elevation_angle(r_sat: np.ndarray, r_gs: np.ndarray) -> np.ndarray:
@@ -61,25 +91,32 @@ def elevation_angle(r_sat: np.ndarray, r_gs: np.ndarray) -> np.ndarray:
 
 
 def visibility_mask(
-    walker: WalkerDelta,
+    walker: "WalkerDelta | MultiShellWalker",
     gs: GroundStation,
     t: np.ndarray,
+    mem_budget_mb: float = DEFAULT_MEM_BUDGET_MB,
 ) -> np.ndarray:
     """Boolean visibility (L, K, T) of every satellite at every time.
 
-    Evaluated in time chunks: the (L, K, Tc, 3) position tensor is the
-    only large intermediate, so a 40x22 constellation over a 108 h
-    horizon needs ~100 MB transient instead of ~7 GB.
+    Evaluated in time chunks sized by ``scan_chunk_len``: the
+    ``(L, K, Tc)`` float64 elevation transients are the only large
+    intermediates and stay under ``mem_budget_mb`` at any
+    constellation scale (the boolean output mask is 1/48th of the
+    per-sample transient and is the only full-horizon allocation).
+    Chunking only partitions the evaluation grid — every time sample
+    is computed identically — so the mask is bit-identical across
+    budgets.
     """
     scalar = np.ndim(t) == 0
     t = np.atleast_1d(np.asarray(t, dtype=np.float64))
     min_el = np.radians(gs.min_elevation_deg)
     L, K = walker.config.num_planes, walker.config.sats_per_plane
+    chunk = scan_chunk_len(L * K, mem_budget_mb)
     mask = np.empty((L, K, t.size), dtype=bool)
-    for i in range(0, t.size, _SCAN_CHUNK_T):
-        tc = t[i : i + _SCAN_CHUNK_T]
+    for i in range(0, t.size, chunk):
+        tc = t[i : i + chunk]
         el = walker.elevations_from(gs, tc)     # (L, K, Tc)
-        mask[:, :, i : i + _SCAN_CHUNK_T] = el >= min_el
+        mask[:, :, i : i + chunk] = el >= min_el
     return mask[:, :, 0] if scalar else mask
 
 
@@ -186,7 +223,7 @@ class WindowTable:
 
 
 def _elevation_margin(
-    walker: WalkerDelta,
+    walker: "WalkerDelta | MultiShellWalker",
     gs: GroundStation,
     planes: np.ndarray,
     slots: np.ndarray,
@@ -200,7 +237,7 @@ def _elevation_margin(
 
 
 def _refine_crossings_batched(
-    walker: WalkerDelta,
+    walker: "WalkerDelta | MultiShellWalker",
     gs: GroundStation,
     planes: np.ndarray,
     slots: np.ndarray,
@@ -209,35 +246,52 @@ def _refine_crossings_batched(
     rising: bool,
     min_el: float,
     iters: int = 40,
+    mem_budget_mb: float = DEFAULT_MEM_BUDGET_MB,
 ) -> np.ndarray:
     """Bisection of EVERY elevation-threshold crossing simultaneously.
 
     Identical iteration count and update rule as the scalar
     ``_refine_crossing``, evaluated for all C crossings per step — the
     whole refinement is ``iters`` vectorized elevation evaluations
-    instead of ``iters * C`` scalar ones.
+    instead of ``iters * C`` scalar ones.  Crossings are processed in
+    budget-bounded batches (each crossing's bisection is independent,
+    so batching is result-invariant): ``positions_batch`` materializes
+    several ``(C, 3)`` float64 temporaries per evaluation, which at
+    multi-shell scale would otherwise rival the scan transient.
     """
     lo = np.array(lo, dtype=np.float64)
     hi = np.array(hi, dtype=np.float64)
-    for _ in range(iters):
-        mid = 0.5 * (lo + hi)
-        above = (
-            _elevation_margin(walker, gs, planes, slots, mid, min_el) >= 0.0
-        )
-        go_hi = above == rising     # crossing is in [lo, mid]
-        hi = np.where(go_hi, mid, hi)
-        lo = np.where(go_hi, lo, mid)
-    return 0.5 * (lo + hi)
+    out = np.empty_like(lo)
+    # ~12 live float64 arrays per crossing per evaluation ((C, 3)
+    # positions + trig temporaries), vs _SCAN_ARRAYS_PER_SAMPLE flat
+    # ones in the scan — reuse the same budget arithmetic scaled by 2
+    batch = max(_MIN_CHUNK_T, int(mem_budget_mb * 1e6 / (8 * 12)))
+    for b in range(0, lo.size, batch):
+        s = slice(b, b + batch)
+        blo, bhi = lo[s], hi[s]
+        bplanes, bslots = planes[s], slots[s]
+        for _ in range(iters):
+            mid = 0.5 * (blo + bhi)
+            above = (
+                _elevation_margin(walker, gs, bplanes, bslots, mid, min_el)
+                >= 0.0
+            )
+            go_hi = above == rising     # crossing is in [lo, mid]
+            bhi = np.where(go_hi, mid, bhi)
+            blo = np.where(go_hi, blo, mid)
+        out[s] = 0.5 * (blo + bhi)
+    return out
 
 
 def visibility_table(
-    walker: WalkerDelta,
+    walker: "WalkerDelta | MultiShellWalker",
     gs: GroundStation,
     t_start: float,
     t_end: float,
     coarse_step_s: float = 10.0,
     refine: bool = True,
     gs_index: int = 0,
+    mem_budget_mb: float = DEFAULT_MEM_BUDGET_MB,
 ) -> WindowTable:
     """All access windows of every satellite within [t_start, t_end],
     as a structured ``WindowTable`` (the vectorized engine).
@@ -245,28 +299,38 @@ def visibility_table(
     Coarse grid scan + one batched bisection over every rise/set
     crossing of every satellite (the deterministic analogue of the
     visibility prediction method of Ali et al. [11] used by the paper's
-    scheduler, at constellation scale).
+    scheduler, at constellation scale).  ``mem_budget_mb`` bounds the
+    transient working set of the scan and the bisection batches; the
+    returned table is bit-identical across budgets.
     """
     t = _time_grid(t_start, t_end, coarse_step_s)
-    mask = visibility_mask(walker, gs, t)          # (L, K, T)
+    mask = visibility_mask(walker, gs, t, mem_budget_mb=mem_budget_mb)
     min_el = float(np.radians(gs.min_elevation_deg))
     K = walker.config.sats_per_plane
 
-    dm = np.diff(mask.astype(np.int8), axis=-1)
-    rise_p, rise_s, rise_i = np.nonzero(dm == 1)
-    set_p, set_s, set_i = np.nonzero(dm == -1)
+    # Transition extraction on boolean views (rise = below->above,
+    # set = above->below): one (L, K, T-1) bool temporary at a time,
+    # freed before the next — the historical int8 ``np.diff`` held an
+    # int8 copy of the whole mask PLUS the diff output concurrently.
+    prev, nxt = mask[:, :, :-1], mask[:, :, 1:]     # views, no copies
+    rise = ~prev & nxt
+    rise_p, rise_s, rise_i = np.nonzero(rise)
+    del rise
+    fall = prev & ~nxt
+    set_p, set_s, set_i = np.nonzero(fall)
+    del fall
 
     if refine and rise_i.size:
         rise_t = _refine_crossings_batched(
             walker, gs, rise_p, rise_s, t[rise_i], t[rise_i + 1],
-            rising=True, min_el=min_el,
+            rising=True, min_el=min_el, mem_budget_mb=mem_budget_mb,
         )
     else:
         rise_t = t[rise_i + 1]
     if refine and set_i.size:
         set_t = _refine_crossings_batched(
             walker, gs, set_p, set_s, t[set_i], t[set_i + 1],
-            rising=False, min_el=min_el,
+            rising=False, min_el=min_el, mem_budget_mb=mem_budget_mb,
         )
     else:
         set_t = t[set_i]
@@ -309,12 +373,13 @@ def visibility_table(
 
 
 def visibility_windows(
-    walker: WalkerDelta,
+    walker: "WalkerDelta | MultiShellWalker",
     gs: GroundStation,
     t_start: float,
     t_end: float,
     coarse_step_s: float = 10.0,
     refine: bool = True,
+    mem_budget_mb: float = DEFAULT_MEM_BUDGET_MB,
 ) -> List[VisibilityWindow]:
     """Vectorized access-window extraction, legacy list-of-dataclass API.
 
@@ -322,13 +387,17 @@ def visibility_windows(
     """
     return visibility_table(
         walker, gs, t_start, t_end, coarse_step_s=coarse_step_s,
-        refine=refine,
+        refine=refine, mem_budget_mb=mem_budget_mb,
     ).to_windows()
 
 
 # --- scalar reference implementation (equivalence oracle + benchmark baseline) ---
 def _refine_crossing(
-    f, lo: float, hi: float, rising: bool, iters: int = 40
+    f: "Callable[[float], float]",
+    lo: float,
+    hi: float,
+    rising: bool,
+    iters: int = 40,
 ) -> float:
     """Bisection root of the elevation-threshold crossing in [lo, hi]."""
     for _ in range(iters):
@@ -343,7 +412,7 @@ def _refine_crossing(
 
 
 def visibility_windows_reference(
-    walker: WalkerDelta,
+    walker: "WalkerDelta | MultiShellWalker",
     gs: GroundStation,
     t_start: float,
     t_end: float,

@@ -1,18 +1,24 @@
 """benchmarks.check_floors: trajectory parsing tolerance and one test
 per floor rule (contention, handover, async, predictor latency, trace
-overhead)."""
+overhead, mega-scale build ratio + memory budget), plus the near-floor
+early-warning band."""
 import json
 
 import pytest
 
 from benchmarks import check_floors
 from benchmarks.check_floors import (
+    MEGA_BUILD_RATIO_FLOOR,
+    NEAR_FLOOR_MARGIN,
     TRACE_OVERHEAD_FLOOR,
     US_PER_QUERY_FLOOR,
     check,
+    check_mega,
     check_predictor,
     load_latest_contention,
+    load_latest_mega,
     load_latest_predictor,
+    near_floor_warnings,
 )
 
 
@@ -148,3 +154,128 @@ def test_floor_predictor_query_latency():
 
 def test_no_records_is_a_failure():
     assert check([]) != []
+
+
+# --- mega-scale floors ----------------------------------------------------------
+def _mega(**over):
+    """A mega_scale record that satisfies every floor with margin."""
+    base = {
+        "bench": "mega_scale",
+        "constellation": "starlink-gen1",
+        "mem_budget_mb": 256.0,
+        "predictor_build_ratio_vs_40x22": 1.6,
+        "predictor_peak_mb": 170.0,
+        "plan_round_s": 13627.3,
+    }
+    base.update(over)
+    return base
+
+
+def test_load_latest_mega_keys_by_constellation(tmp_path):
+    path = str(tmp_path / "BENCH.json")
+    _write_lines(path, [
+        json.dumps(_mega(predictor_peak_mb=999.0)),   # superseded
+        json.dumps(_mega()),
+        json.dumps(_mega(constellation="starlink-2shell")),
+        json.dumps(_rec()),                           # other bench: ignored
+    ])
+    records = load_latest_mega(path)
+    assert [r["constellation"] for r in records] == \
+        ["starlink-2shell", "starlink-gen1"]
+    assert records[1]["predictor_peak_mb"] == 170.0
+    assert load_latest_mega("/nonexistent/BENCH.json") == []
+
+
+def test_floor_mega_build_ratio():
+    assert check_mega([_mega()]) == []
+    assert check_mega([]) == []                       # mega smoke optional
+    fails = check_mega([_mega(
+        predictor_build_ratio_vs_40x22=MEGA_BUILD_RATIO_FLOOR + 0.1
+    )])
+    assert any("40x22" in f for f in fails)
+    # exactly at the floor passes; absent column is vacuous
+    assert check_mega([_mega(
+        predictor_build_ratio_vs_40x22=MEGA_BUILD_RATIO_FLOOR
+    )]) == []
+    assert check_mega([_mega(predictor_build_ratio_vs_40x22=None)]) == []
+
+
+def test_floor_mega_ratio_scoped_to_gen1():
+    """The 4x wall-clock ratio was calibrated at 1.8x the baseline's
+    satellites; a 2.7x two-shell row must not trip (or warn on) it."""
+    big = _mega(
+        constellation="starlink-2shell",
+        predictor_build_ratio_vs_40x22=MEGA_BUILD_RATIO_FLOOR + 1.0,
+    )
+    assert check_mega([big]) == []
+    near = _mega(
+        constellation="starlink-2shell",
+        predictor_build_ratio_vs_40x22=MEGA_BUILD_RATIO_FLOOR * 0.9,
+    )
+    assert near_floor_warnings([], None, [near]) == []
+
+
+def test_floor_mega_peak_under_budget():
+    fails = check_mega([_mega(predictor_peak_mb=300.0)])
+    assert any("mem_budget_mb" in f for f in fails)
+    assert check_mega([_mega(predictor_peak_mb=256.0)]) == []
+
+
+def test_floor_mega_plan_round_completed():
+    fails = check_mega([_mega(plan_round_s=None)])
+    assert any("planning round" in f for f in fails)
+
+
+# --- near-floor warning band ----------------------------------------------------
+def test_near_floor_warns_inside_margin_only():
+    edge = US_PER_QUERY_FLOOR * (1.0 - NEAR_FLOOR_MARGIN)
+    warns = near_floor_warnings([], {"us_per_query": edge + 0.1}, [])
+    assert any("us/query" in w for w in warns)
+    # at or below the band edge: quiet; above the floor: a violation,
+    # not a warning (check_predictor owns it)
+    assert near_floor_warnings([], {"us_per_query": edge}, []) == []
+    assert near_floor_warnings(
+        [], {"us_per_query": US_PER_QUERY_FLOOR + 1.0}, []
+    ) == []
+
+
+def test_near_floor_covers_all_gated_metrics():
+    rec = _rec(trace_overhead_fraction=TRACE_OVERHEAD_FLOOR * 0.9)
+    mega = _mega(
+        predictor_build_ratio_vs_40x22=MEGA_BUILD_RATIO_FLOOR * 0.9,
+        predictor_peak_mb=0.9 * 256.0,
+    )
+    warns = near_floor_warnings([rec], None, [mega])
+    assert len(warns) == 3
+    assert any("tracing overhead" in w for w in warns)
+    assert any("build ratio" in w for w in warns)
+    assert any("mem_budget_mb" in w for w in warns)
+    # comfortably clear of every floor: no warnings at all
+    assert near_floor_warnings([_rec()], None, [_mega()]) == []
+
+
+def test_main_prints_warning_but_exits_zero(tmp_path, monkeypatch, capsys):
+    path = str(tmp_path / "BENCH.json")
+    _write_lines(path, [
+        json.dumps(_rec()),
+        json.dumps(_mega(
+            predictor_build_ratio_vs_40x22=MEGA_BUILD_RATIO_FLOOR * 0.9
+        )),
+    ])
+    monkeypatch.setattr(check_floors, "BENCH_TRAJECTORY", path)
+    check_floors.main()                               # must NOT raise
+    captured = capsys.readouterr()
+    assert "FLOOR WARNING" in captured.err
+    assert "all gs_contention floors hold" in captured.out
+
+
+def test_main_fails_on_mega_violation(tmp_path, monkeypatch, capsys):
+    path = str(tmp_path / "BENCH.json")
+    _write_lines(path, [
+        json.dumps(_rec()),
+        json.dumps(_mega(predictor_peak_mb=400.0)),
+    ])
+    monkeypatch.setattr(check_floors, "BENCH_TRAJECTORY", path)
+    with pytest.raises(SystemExit):
+        check_floors.main()
+    assert "FLOOR VIOLATION" in capsys.readouterr().err

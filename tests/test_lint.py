@@ -176,12 +176,23 @@ def test_annotated_def_and_init_pass(tmp_path):
     assert rules(findings) == []
 
 
-def test_annotation_rule_scoped_to_comms_and_core(tmp_path):
-    findings = run_on(tmp_path, "repro/orbits/foo.py", """
+def test_annotation_rule_skips_learning_substrate(tmp_path):
+    # the learning substrate (models/, kernels/, ...) stays outside
+    # the annotation gate
+    findings = run_on(tmp_path, "repro/models/foo.py", """
         def f(x):
             return x
     """)
     assert rules(findings) == []
+
+
+def test_annotation_rule_covers_orbits(tmp_path):
+    # orbits/ and configs/ joined the gate in PR 8
+    findings = run_on(tmp_path, "repro/orbits/foo.py", """
+        def f(x):
+            return x
+    """)
+    assert rules(findings) == ["annotation", "annotation"]
 
 
 # --- infra --------------------------------------------------------------------

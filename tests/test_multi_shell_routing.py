@@ -1,0 +1,333 @@
+"""ISSUE 8 tentpole: multi-shell topology + memory-lean routing.
+
+Covers the four equivalence contracts the refactor must hold:
+
+  * single-shell ``MultiShellTopology`` is the exact degenerate case of
+    ``ISLTopology`` (edge set, hop matrices, schedules — bit-identical),
+  * ``RoutingTable(lazy=True)`` answers broadcast/submatrix/relay
+    queries identically to the eager all-pairs build,
+  * ``hop_split_rows`` (per-source Dijkstra) matches the full solver's
+    rows (exact unreachable masks, optimal costs),
+  * ``MultiShellWalker`` dispatches to the same geometry the per-shell
+    ``WalkerDelta`` computes,
+
+plus the benchmark-side helpers (``overhead_fraction`` clamping,
+``measure_peak_mb``) and the compact hop dtypes.
+"""
+import numpy as np
+import pytest
+
+from repro.comms.isl import ISLConfig
+from repro.comms.routing import ISLPlan, RoutingTable
+from repro.orbits import (
+    INTER,
+    INTRA,
+    ConstellationConfig,
+    GroundStation,
+    ISLTopology,
+    MultiShellConfig,
+    MultiShellTopology,
+    MultiShellWalker,
+    Satellite,
+    TopologyConfig,
+    WalkerDelta,
+    get_isl_topology,
+    make_walker,
+)
+from repro.orbits.topology import UNREACHABLE, _count_dtype
+
+PAYLOAD = 1.28e8
+
+SHELL_A = ConstellationConfig(
+    num_planes=8, sats_per_plane=11, altitude_m=550e3,
+    inclination_deg=53.0, phasing_factor=3,
+)
+SHELL_B = ConstellationConfig(
+    num_planes=6, sats_per_plane=11, altitude_m=570e3,
+    inclination_deg=70.0, phasing_factor=1,
+)
+
+
+@pytest.fixture(scope="module")
+def two_shell():
+    return MultiShellConfig(shells=(SHELL_A, SHELL_B))
+
+
+@pytest.fixture(scope="module")
+def grid_cfg():
+    return TopologyConfig(kind="grid")
+
+
+# --- config surface ---------------------------------------------------------------
+def test_multi_shell_config_properties(two_shell):
+    assert two_shell.num_planes == 14
+    assert two_shell.sats_per_plane == 11
+    assert two_shell.num_satellites == 154
+    assert two_shell.plane_offsets == (0, 8)
+    assert two_shell.shell_of_plane(0) == 0
+    assert two_shell.shell_of_plane(7) == 0
+    assert two_shell.shell_of_plane(8) == 1
+    assert two_shell.shell_of_plane(13) == 1
+    with pytest.raises(ValueError):
+        two_shell.shell_of_plane(14)
+    # the slowest (highest) shell sets the conservative period
+    assert two_shell.period_s == SHELL_B.period_s
+    assert two_shell.altitude_m == SHELL_A.altitude_m
+
+
+def test_multi_shell_config_rejects_ragged_grid():
+    with pytest.raises(ValueError):
+        MultiShellConfig(shells=(
+            SHELL_A,
+            ConstellationConfig(num_planes=4, sats_per_plane=9),
+        ))
+    with pytest.raises(ValueError):
+        MultiShellConfig(shells=())
+
+
+# --- walker dispatch --------------------------------------------------------------
+def test_multi_shell_walker_matches_per_shell_walkers(two_shell):
+    msw = MultiShellWalker(two_shell)
+    wa, wb = WalkerDelta(SHELL_A), WalkerDelta(SHELL_B)
+    t = np.linspace(0.0, 5400.0, 7)
+
+    # positions: global plane p >= 8 is shell B's plane p - 8
+    for p_global, walker, p_local in ((2, wa, 2), (10, wb, 2)):
+        got = msw.positions_batch(
+            np.array([p_global]), np.array([5]), t[None, :]
+        )
+        want = walker.positions_batch(
+            np.array([p_local]), np.array([5]), t[None, :]
+        )
+        assert np.array_equal(got, want)
+        sat = Satellite(plane=p_global, slot=5)
+        local = Satellite(plane=p_local, slot=5)
+        assert np.array_equal(
+            msw.position_of(sat, t), walker.position_of(local, t)
+        )
+
+    gs = GroundStation(lat_deg=38.0, lon_deg=-91.8)
+    el = msw.elevations_from(gs, t)
+    assert el.shape == (14, 11, 7)
+    assert np.array_equal(el[:8], wa.elevations_from(gs, t))
+    assert np.array_equal(el[8:], wb.elevations_from(gs, t))
+
+
+def test_make_walker_dispatch(two_shell):
+    assert isinstance(make_walker(two_shell), MultiShellWalker)
+    assert isinstance(make_walker(SHELL_A), WalkerDelta)
+
+
+# --- degenerate single shell: bit-identical to ISLTopology ------------------------
+@pytest.mark.parametrize("kind", ["ring", "grid"])
+def test_single_shell_multi_topology_is_degenerate(kind, grid_cfg):
+    tcfg = TopologyConfig(kind=kind)
+    single = ISLTopology(SHELL_A, tcfg)
+    multi = MultiShellTopology(MultiShellConfig(shells=(SHELL_A,)), tcfg)
+    assert np.array_equal(multi.adjacency, single.adjacency)
+    for k in (None, INTRA, INTER):
+        for a, b in zip(multi.edges(k), single.edges(k)):
+            assert np.array_equal(a, b)
+    h_a1, h_b1 = single.hop_split(256.0, 0.13)
+    h_a2, h_b2 = multi.hop_split(256.0, 0.13)
+    assert np.array_equal(h_a1, h_a2)
+    assert np.array_equal(h_b1, h_b2)
+
+
+def test_single_shell_schedules_bit_identical(grid_cfg):
+    """Routing built through the multi-shell path must reproduce the
+    single-shell planner's broadcast/relay times exactly."""
+    plan = ISLPlan(intra=ISLConfig())
+    rt_single = RoutingTable(
+        ISLTopology(SHELL_A, grid_cfg), plan, PAYLOAD
+    )
+    rt_multi = RoutingTable(
+        MultiShellTopology(MultiShellConfig(shells=(SHELL_A,)), grid_cfg),
+        plan, PAYLOAD,
+    )
+    sources = [0, 23, 47]
+    t_src = [10.0, 20.0, 30.0]
+    for a, b in zip(
+        rt_single.broadcast_times(sources, t_src),
+        rt_multi.broadcast_times(sources, t_src),
+    ):
+        assert np.array_equal(a, b)
+    t_ready = [float(i) for i in range(rt_single.num_nodes)]
+    assert np.array_equal(
+        rt_single.relay_times(5, t_ready), rt_multi.relay_times(5, t_ready)
+    )
+
+
+def test_get_isl_topology_dispatches_multi_shell(two_shell, grid_cfg):
+    topo = get_isl_topology(two_shell, grid_cfg)
+    assert isinstance(topo, MultiShellTopology)
+    # cached: same object back for the same (config, topology) pair
+    assert get_isl_topology(two_shell, grid_cfg) is topo
+
+
+# --- two-shell stitching ----------------------------------------------------------
+def test_two_shell_graph_connected_with_typed_cross_links(
+    two_shell, grid_cfg
+):
+    topo = MultiShellTopology(two_shell, grid_cfg)
+    assert topo.num_nodes == 154
+    assert topo.is_connected()
+    off = two_shell.plane_offsets[1] * two_shell.sats_per_plane
+    i, j = topo.edges()
+    cross = (i < off) != (j < off)
+    # the shells are linked, and only via INTER-typed edges
+    assert np.count_nonzero(cross) > 0
+    kinds = topo.adjacency[i[cross], j[cross]]
+    assert np.all(kinds == INTER)
+    # cross-link cap: each sat gets at most cross_links_per_sat
+    # proposals per side, union-merged
+    deg = np.bincount(
+        np.concatenate([i[cross], j[cross]]), minlength=topo.num_nodes
+    )
+    assert deg.max() <= 2 * two_shell.cross_links_per_sat
+
+
+def test_two_shell_range_gate_can_sever_shells(grid_cfg):
+    """An impossible cross-shell range budget leaves the shells as two
+    disconnected components — the feasibility gate is real."""
+    cfg = MultiShellConfig(
+        shells=(SHELL_A, SHELL_B), cross_max_range_m=1.0
+    )
+    topo = MultiShellTopology(cfg, grid_cfg)
+    assert not topo.is_connected()
+
+
+def test_multi_shell_topology_rejects_single_shell_config(grid_cfg):
+    with pytest.raises(TypeError):
+        MultiShellTopology(SHELL_A, grid_cfg)
+
+
+# --- compact hop dtypes -----------------------------------------------------------
+def test_count_dtype_thresholds():
+    assert _count_dtype(88) is np.int16
+    assert _count_dtype(2**14) is np.int16
+    assert _count_dtype(2**14 + 1) is np.int32
+
+
+def test_hop_matrices_use_compact_dtype(grid_cfg):
+    topo = ISLTopology(SHELL_A, grid_cfg)
+    h_a, h_b = topo.hop_split(256.0, 0.13)
+    assert h_a.dtype == np.int16 and h_b.dtype == np.int16
+    rt = RoutingTable(topo, ISLPlan(intra=ISLConfig()), PAYLOAD)
+    # summed hop counts stay integral; latency stays float64
+    assert np.issubdtype(rt.hops.dtype, np.integer)
+    assert rt.latency.dtype == np.float64
+
+
+# --- per-source rows vs full solver -----------------------------------------------
+@pytest.mark.parametrize("weights", [(256.0, 0.13), (1.0, 1.0)])
+def test_hop_split_rows_matches_full_solver(weights, grid_cfg):
+    topo = ISLTopology(SHELL_A, grid_cfg)
+    w_a, w_b = weights
+    h_a, h_b = topo.hop_split(w_a, w_b)
+    src = np.asarray([0, 17, 43, 87])
+    r_a, r_b = topo.hop_split_rows(src, w_a, w_b)
+    # unreachable masks exactly equal; costs to optimum (equal-cost
+    # ties may decompose hops differently between solvers)
+    assert np.array_equal(r_a == UNREACHABLE, h_a[src] == UNREACHABLE)
+    cost_full = np.where(
+        h_a[src] == UNREACHABLE, np.inf,
+        h_a[src] * w_a + h_b[src] * w_b,
+    )
+    cost_rows = np.where(
+        r_a == UNREACHABLE, np.inf, r_a * w_a + r_b * w_b
+    )
+    assert np.allclose(cost_rows, cost_full, atol=1e-9)
+
+
+def test_hop_split_rows_on_disconnected_ring():
+    topo = ISLTopology(SHELL_A, TopologyConfig(kind="ring"))
+    src = np.asarray([0])
+    r_a, r_b = topo.hop_split_rows(src, 1.0, 1.0)
+    K = SHELL_A.sats_per_plane
+    assert np.all(r_a[0, :K] != UNREACHABLE)
+    assert np.all(r_a[0, K:] == UNREACHABLE)
+    assert np.all(r_b[0, K:] == UNREACHABLE)
+
+
+# --- lazy routing table -----------------------------------------------------------
+def test_lazy_routing_matches_eager(grid_cfg):
+    topo = ISLTopology(SHELL_A, grid_cfg)
+    plan = ISLPlan(intra=ISLConfig())
+    eager = RoutingTable(topo, plan, PAYLOAD)
+    lazy = RoutingTable(topo, plan, PAYLOAD, lazy=True)
+    assert not lazy.materialized
+
+    sources = [0, 12, 55]
+    t_src = [0.0, 5.0, 9.0]
+    for a, b in zip(
+        eager.broadcast_times(sources, t_src),
+        lazy.broadcast_times(sources, t_src),
+    ):
+        assert np.array_equal(a, b)
+    nodes = np.asarray(sources)
+    for a, b in zip(eager.submatrix(nodes), lazy.submatrix(nodes)):
+        assert np.allclose(a, b, atol=1e-9)
+    t_ready = [1.0] * eager.num_nodes
+    assert np.allclose(
+        eager.relay_times(12, t_ready), lazy.relay_times(12, t_ready),
+        atol=1e-9,
+    )
+    # row queries alone never built the (N, N) matrices...
+    assert not lazy.materialized
+    assert set(lazy._row_cache) == {0, 12, 55}
+    # ...but direct attribute access materializes them, exactly
+    assert np.array_equal(lazy.latency, eager.latency)
+    assert np.array_equal(lazy.hops, eager.hops)
+    assert lazy.materialized
+
+
+def test_lazy_routing_on_two_shell(two_shell, grid_cfg):
+    topo = MultiShellTopology(two_shell, grid_cfg)
+    plan = ISLPlan(intra=ISLConfig())
+    eager = RoutingTable(topo, plan, PAYLOAD)
+    lazy = RoutingTable(topo, plan, PAYLOAD, lazy=True)
+    # one source per shell, receivers across both shells
+    sources = [0, 8 * 11]
+    for a, b in zip(
+        eager.broadcast_times(sources, [0.0, 0.0]),
+        lazy.broadcast_times(sources, [0.0, 0.0]),
+    ):
+        assert np.allclose(a, b, atol=1e-9)
+
+
+# --- benchmark helpers ------------------------------------------------------------
+def test_overhead_fraction_clamps_and_medians():
+    from benchmarks.common import overhead_fraction
+
+    def spin(iters):
+        x = 0
+        for i in range(iters):
+            x += i
+        return x
+
+    # identical arms: noise must clamp to >= 0, never the seed's -7.7%
+    frac, plain_us, traced_us = overhead_fraction(
+        lambda: spin(20000), lambda: spin(20000), samples=5
+    )
+    assert frac >= 0.0
+    assert plain_us > 0.0 and traced_us > 0.0
+
+    # a genuinely slower traced arm shows up as positive overhead
+    frac_slow, p_us, t_us = overhead_fraction(
+        lambda: spin(20000), lambda: spin(400000), samples=3
+    )
+    assert frac_slow > 1.0
+    assert t_us > p_us
+
+
+def test_measure_peak_mb_sees_transient():
+    from benchmarks.common import measure_peak_mb, peak_rss_mb
+
+    out, wall_us, peak_mb = measure_peak_mb(
+        lambda: np.zeros(2_000_000, dtype=np.float64).sum()
+    )
+    assert out == 0.0
+    assert wall_us > 0.0
+    assert peak_mb >= 16.0          # the 16 MB transient is visible
+    assert peak_rss_mb() > 0.0

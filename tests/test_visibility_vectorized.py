@@ -326,6 +326,85 @@ def test_earliest_transfer_is_true_minimum_multi_gs():
                 assert hit[1] == pytest.approx(best, abs=1e-6)
 
 
+# --- memory-bounded chunking (ISSUE 8 tentpole) ------------------------------------
+def test_scan_chunk_len_scales_with_budget():
+    from repro.orbits.visibility import (
+        _MIN_CHUNK_T,
+        DEFAULT_MEM_BUDGET_MB,
+        scan_chunk_len,
+    )
+
+    # tighter budget -> shorter chunks, monotonically
+    assert scan_chunk_len(1584, 1.0) < scan_chunk_len(1584, 16.0)
+    assert scan_chunk_len(1584, 16.0) < scan_chunk_len(1584, 256.0)
+    # more satellites under the same budget -> shorter chunks
+    assert scan_chunk_len(2376, 64.0) <= scan_chunk_len(880, 64.0)
+    # the floor keeps pathological budgets from degenerating to 1-sample
+    # chunks (bisection needs a neighborhood)
+    assert scan_chunk_len(10**6, 0.001) == _MIN_CHUNK_T
+    assert scan_chunk_len(1584, DEFAULT_MEM_BUDGET_MB) >= _MIN_CHUNK_T
+
+
+def test_chunking_equivalence_72x22_across_budgets():
+    """mem_budget_mb partitions EVALUATION, never results: the 72x22
+    window table must be bit-identical under a budget that forces many
+    tiny chunks (windows straddling chunk boundaries merged) and under
+    the default budget that fits the whole scan in one chunk."""
+    from repro.orbits.visibility import scan_chunk_len
+
+    cfg = get_constellation("starlink-gen1")
+    walker = WalkerDelta(cfg)
+    gs = get_ground_stations(("rolla",))[0]
+    horizon_s = 3 * 3600.0
+    n_samples = int(horizon_s / 60.0) + 1
+
+    tables = {}
+    for budget in (0.2, 2.0, 256.0):
+        tables[budget] = visibility_table(
+            walker, gs, 0.0, horizon_s, coarse_step_s=60.0,
+            mem_budget_mb=budget,
+        )
+    # the scenario exercises real chunking: tightest budget splits the
+    # scan, loosest covers it whole
+    assert scan_chunk_len(cfg.num_satellites, 0.2) < n_samples
+    assert scan_chunk_len(cfg.num_satellites, 256.0) >= n_samples
+
+    ref = tables[256.0]
+    assert len(ref) > 0
+    for budget, table in tables.items():
+        for field in ("plane", "slot", "t_start", "t_end"):
+            assert np.array_equal(
+                getattr(table, field), getattr(ref, field)
+            ), f"budget {budget} MB diverged on {field}"
+
+
+def test_chunk_boundary_windows_not_split():
+    """A window open across a chunk boundary must come back as ONE
+    window, not two abutting at the boundary sample."""
+    cfg = ConstellationConfig(num_planes=4, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    gs = GroundStation()
+    ref = visibility_table(walker, gs, 0.0, 6 * 3600.0,
+                           coarse_step_s=30.0, mem_budget_mb=256.0)
+    tiny = visibility_table(walker, gs, 0.0, 6 * 3600.0,
+                            coarse_step_s=30.0, mem_budget_mb=0.001)
+    assert len(tiny) == len(ref)
+    assert np.array_equal(tiny.t_start, ref.t_start)
+    assert np.array_equal(tiny.t_end, ref.t_end)
+
+
+def test_predictor_budget_passthrough_identical():
+    cfg = ConstellationConfig(num_planes=3, sats_per_plane=6)
+    walker = WalkerDelta(cfg)
+    gs = GroundStation()
+    tight = VisibilityPredictor(walker, gs, horizon_s=12 * 3600.0,
+                                mem_budget_mb=0.01)
+    loose = VisibilityPredictor(walker, gs, horizon_s=12 * 3600.0)
+    assert len(tight.table) == len(loose.table)
+    assert np.array_equal(tight.table.t_start, loose.table.t_start)
+    assert np.array_equal(tight.table.t_end, loose.table.t_end)
+
+
 def test_presets_registry():
     assert "starlink-40x22" in CONSTELLATION_PRESETS
     cfg = get_constellation("starlink-40x22")
