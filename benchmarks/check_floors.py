@@ -56,6 +56,11 @@ TRACE_OVERHEAD_FLOOR = 0.05
 MEGA_BUILD_RATIO_FLOOR = 4.0
 MEGA_RATIO_CONSTELLATION = "starlink-gen1"
 
+# multi-tenant floors (ISSUE 9): the swap re-packer's per-entry
+# completions may never exceed their monotone floor — zero regret up
+# to float noise
+REPACK_REGRET_EPS = 1e-6
+
 # near-floor early warning: any ceiling-floored metric within this
 # relative margin of its floor is reported (exit 0) so the regression
 # is visible one PR before it fails CI
@@ -135,6 +140,65 @@ def load_latest_mega(path: str = BENCH_TRAJECTORY) -> List[Dict]:
             continue
         latest[str(rec.get("constellation"))] = rec
     return [latest[k] for k in sorted(latest)]
+
+
+def load_latest_multi_tenant(path: str = BENCH_TRAJECTORY) -> Optional[Dict]:
+    """Latest ``multi_tenant`` record, or None (the multi-tenant smoke
+    is optional per run — same append-only / skip-unparseable
+    discipline as the other loaders)."""
+    latest: Optional[Dict] = None
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        return None
+    for line in lines:
+        try:
+            rec = json.loads(line.strip())
+        except json.JSONDecodeError:
+            continue
+        if isinstance(rec, dict) and rec.get("bench") == "multi_tenant":
+            latest = rec
+    return latest
+
+
+def check_multi_tenant(rec: Optional[Dict]) -> List[str]:
+    """ISSUE 9 floors: single-job transparency, Poisson-vs-serial p95,
+    and the re-packer's monotone per-entry floor."""
+    if rec is None:
+        return []
+    failures = []
+    if rec.get("single_job_equal") is False:
+        failures.append(
+            "multi_tenant: single job through JobScheduler diverged "
+            "from the standalone strategy run (must be bit-identical)"
+        )
+    p95_c, p95_s = rec.get("concurrent_p95_s"), rec.get("serial_p95_s")
+    if p95_c is not None and p95_s is not None and p95_c > p95_s:
+        failures.append(
+            f"multi_tenant: concurrent p95 {p95_c}s > serial p95 "
+            f"{p95_s}s (multiplexing lost to head-of-line blocking)"
+        )
+    cr, sr = rec.get("concurrent_rounds"), rec.get("serial_rounds")
+    if cr is not None and sr is not None and cr < sr:
+        failures.append(
+            f"multi_tenant: concurrent arm completed {cr} rounds < "
+            f"serial {sr} on the same workload"
+        )
+    regret = rec.get("repack_max_regret_s")
+    if regret is not None and regret > REPACK_REGRET_EPS:
+        failures.append(
+            f"multi_tenant: repack per-entry regret {regret}s > "
+            f"{REPACK_REGRET_EPS} vs the monotone floor (swap adopted "
+            f"a regressing completion)"
+        )
+    rep, mono = rec.get("async_repack_s"), rec.get("async_monotone_s")
+    if rep is not None and mono is not None and rep > mono:
+        failures.append(
+            f"multi_tenant: repack round {rep}s > monotone round "
+            f"{mono}s (the monotone result is the re-packer's floor)"
+        )
+    return failures
 
 
 def check_mega(records: List[Dict]) -> List[str]:
@@ -290,6 +354,8 @@ def main() -> None:
     failures += check_predictor(pred)
     mega = load_latest_mega(BENCH_TRAJECTORY)
     failures += check_mega(mega)
+    tenant = load_latest_multi_tenant(BENCH_TRAJECTORY)
+    failures += check_multi_tenant(tenant)
     if pred is not None:
         print(
             f"# checked predictor_queries: {pred.get('us_per_query')} "
@@ -320,6 +386,14 @@ def main() -> None:
             f"{r.get('predictor_peak_mb')} MB (budget "
             f"{r.get('mem_budget_mb')} MB); plan round "
             f"{r.get('plan_round_s')}s"
+        )
+    if tenant is not None:
+        print(
+            f"# checked multi_tenant: p95 {tenant.get('concurrent_p95_s')}s"
+            f" vs serial {tenant.get('serial_p95_s')}s; repack regret "
+            f"{tenant.get('repack_max_regret_s')}s (eps "
+            f"{REPACK_REGRET_EPS}); single-job equal: "
+            f"{tenant.get('single_job_equal')}"
         )
     for msg in near_floor_warnings(records, pred, mega):
         print(f"FLOOR WARNING: {msg}", file=sys.stderr)

@@ -309,6 +309,8 @@ def price_async_round(
     train_time_s: float = 600.0,
     readmit: bool = False,
     t: float = 0.0,
+    policy: str = "monotone",
+    completions: Optional[List] = None,
 ):
     """AsyncFLEO-style async 'round' pricing (no JAX training): every
     plane schedules download -> ring flood -> training -> naive-sink
@@ -327,6 +329,12 @@ def price_async_round(
     cascade up into the freed capacity — the round never finishes
     later, and the server receives updates earlier on average (fresher
     async mixing).
+
+    ``policy`` is forwarded to ``readmit`` ("monotone" per-entry
+    repair, or "repack" for the regret-based swap re-packer whose
+    per-entry floor IS the monotone result).  ``completions``, when a
+    list, receives the surviving ``(plane, t_done)`` pairs — the
+    per-entry surface the multi_tenant repack floor gates on.
 
     Returns ``(t_round, t_mean, repriced)`` — when every surviving
     plane's upload lands, the mean upload completion, and how many
@@ -377,6 +385,8 @@ def price_async_round(
         return None, None, 0        # single-plane round: nothing left
     repriced = 0
     if readmit:
-        survivors, repriced = env.readmit(survivors, t)
+        survivors, repriced = env.readmit(survivors, t, policy=policy)
+    if completions is not None:
+        completions.extend((p.key, p.decision.t_done) for p in survivors)
     done = [p.decision.t_done for p in survivors]
     return max(done), sum(done) / len(done), repriced

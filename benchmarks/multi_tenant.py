@@ -1,0 +1,338 @@
+"""Multi-tenant scheduling benchmark: concurrent FL jobs on one
+constellation vs running them serially (ISSUE 9 tentpole).
+
+Three arms, one BENCH record:
+
+  single-job equivalence (paper 5x8, real JAX training)
+      One FedAvgStar job pushed through ``JobScheduler`` must
+      reproduce the standalone ``FLStrategy.run`` EXACTLY — same round
+      times, same metrics, bit for bit.  The scheduler's concurrency
+      machinery (shared ledger, release floor, fairness metering) must
+      be invisible when there is nothing to share.  Floor:
+      ``single_job_equal``.
+
+  Poisson arrivals vs serial (starlink-40x22, planner-level jobs)
+      J tenants arrive by a seeded Poisson process, each running R
+      FedLEOGrid cluster rounds with its own payload size, priority
+      tier and fairness weight, under 1-RB-per-station scarcity (the
+      regime where sharing matters).  The concurrent arm multiplexes
+      them over ONE shared ``GSResourceLedger``; the serial baseline
+      gives each job a private ledger but makes job i wait for job
+      i-1 to finish — today's "one FL job owns the constellation"
+      deployment.  Metrics: job throughput (rounds per simulated hour
+      over the makespan) and p95 round-completion latency measured
+      from job arrival.  Floor: concurrent p95 <= serial p95 —
+      multiplexing idle RB windows must beat head-of-line blocking.
+
+  repack floor (starlink-40x22, async re-admission)
+      The ``price_async_round`` release scenario re-admitted with
+      ``policy="monotone"`` vs ``policy="repack"``.  The swap
+      re-packer accepts regret-reducing pairwise swaps ONLY when
+      neither entry regresses its monotone completion, so per-entry
+      ``t_done(repack) <= t_done(monotone)`` is a hard floor
+      (``repack_max_regret_s <= 0``), and the round itself can only
+      shrink.
+
+Appends the record to ``BENCH_topology.json``; floors are gated in
+``benchmarks.check_floors``.
+
+  PYTHONPATH=src:. python -m benchmarks.multi_tenant [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from benchmarks.common import (
+    PAYLOAD_BITS,
+    append_bench,
+    make_comms_env,
+    make_task,
+    price_async_round,
+    price_grid_round,
+)
+
+CONSTELLATION = "starlink-40x22"
+GS_NAMES = ("rolla", "punta-arenas")
+HORIZON_HOURS = 24.0
+CLUSTER_PLANES = 4
+TRAIN_TIME_S = 600.0
+
+# per-tenant diversity: payload multipliers (model sizes), priority
+# tiers and fairness weights cycle over arrival order
+PAYLOAD_MULTIPLIERS = (0.5, 1.0, 2.0)
+TIERS = (0, 0, 1)
+WEIGHTS = (1.0, 2.0, 1.0)
+ARRIVAL_MEAN_S = 1800.0
+ARRIVAL_SEED = 9
+
+
+class PlannerJob:
+    """Planner-level tenant for the 40x22 arms: each ``run_round`` is
+    one FedLEOGrid cluster round priced through the job's session
+    (committing its bookings on the shared ledger).  Satisfies the
+    ``repro.multitenant`` ``RoundRunner`` protocol without paying JAX
+    training at 880 satellites."""
+
+    def __init__(self, env, routing, *, payload_bits: float,
+                 cluster_planes: int = CLUSTER_PLANES,
+                 train_time_s: float = TRAIN_TIME_S):
+        self.env = env
+        self.routing = routing
+        self.payload_bits = payload_bits
+        self.cluster_planes = cluster_planes
+        self.train_time_s = train_time_s
+        self.release_floor_fn: Optional[Callable[[float], float]] = None
+
+    def run_round(self, t: float, verbose: bool = False) -> Optional[float]:
+        floor = t if self.release_floor_fn is None else self.release_floor_fn(t)
+        self.env.release_before(floor)
+        return price_grid_round(
+            self.env, self.routing, cluster_planes=self.cluster_planes,
+            payload_bits=self.payload_bits, train_time_s=self.train_time_s,
+            t=t,
+        )
+
+    def finish(self, t: float) -> None:
+        # planner rounds book-and-leave (uploads stay on the ledger as
+        # spent capacity): no leak report, violations still attributed
+        self.env.finish_session(t, check_leaks=False)
+
+
+def _poisson_specs(num_jobs: int, rounds: int):
+    """Seeded Poisson arrival plan: (arrival_s, payload_bits, tier,
+    weight) per job, deterministic across runs."""
+    rng = np.random.default_rng(ARRIVAL_SEED)
+    arrivals = np.cumsum(rng.exponential(ARRIVAL_MEAN_S, size=num_jobs))
+    plan = []
+    for i, arr in enumerate(arrivals):
+        plan.append({
+            "arrival_s": float(arr),
+            "payload_bits": PAYLOAD_BITS * PAYLOAD_MULTIPLIERS[
+                i % len(PAYLOAD_MULTIPLIERS)],
+            "tier": TIERS[i % len(TIERS)],
+            "weight": WEIGHTS[i % len(WEIGHTS)],
+            "rounds": rounds,
+        })
+    return plan
+
+
+def _p95(latencies: List[float]) -> Optional[float]:
+    if not latencies:
+        return None
+    return float(np.percentile(np.asarray(latencies), 95))
+
+
+def bench_single_job_equivalence(quick: bool) -> dict:
+    """Arm 1: scheduler-with-one-job vs standalone run, bit for bit."""
+    from repro.core.baselines import FedAvgStar
+    from repro.core.engine import SimConfig
+    from repro.multitenant import JobScheduler, JobSpec
+
+    rounds = 2 if quick else 3
+    kwargs = dict(num_samples=200, sim_epochs=2) if quick else {}
+    sim = SimConfig()
+
+    standalone = FedAvgStar(make_task(**kwargs), sim)
+    result = standalone.run(max_rounds=rounds)
+
+    sched = JobScheduler(sim)
+    runners: List[FedAvgStar] = []
+
+    def factory(env):
+        s = FedAvgStar(make_task(**kwargs), sim, env)
+        runners.append(s)
+        return s
+
+    sched.submit(JobSpec(name="solo", rounds=rounds), factory)
+    rec = sched.run()[0]
+
+    h_a = result.history
+    h_b = runners[0].history
+    equal = (
+        rec.status == "finished"
+        and len(h_a) == len(h_b)
+        and all(
+            a.t_hours == b.t_hours
+            and a.round_index == b.round_index
+            and a.metrics == b.metrics
+            for a, b in zip(h_a, h_b)
+        )
+    )
+    return {
+        "single_job_equal": bool(equal),
+        "single_job_rounds": rec.rounds_done,
+        "single_job_final_t_hours": round(result.final_time_hours, 6),
+    }
+
+
+def bench_poisson_vs_serial(quick: bool, sanitize: bool) -> dict:
+    """Arm 2: J Poisson-arriving planner jobs, shared ledger vs serial
+    head-of-line baseline."""
+    from repro.comms.routing import (
+        ISLPlan,
+        get_routing_table,
+        resolve_lazy_routing,
+    )
+    from repro.configs.constellations import make_sim_config
+    from repro.multitenant import JobScheduler, JobSpec
+
+    num_jobs = 3 if quick else 6
+    rounds = 1 if quick else 2
+    sim = make_sim_config(
+        CONSTELLATION, ground_stations=GS_NAMES, topology="grid",
+        horizon_hours=HORIZON_HOURS,
+    )
+    plan = ISLPlan(intra=sim.isl, inter=sim.isl_inter)
+    lazy = resolve_lazy_routing(sim.constellation)
+    specs = _poisson_specs(num_jobs, rounds)
+
+    # one predictor for every arm; 1 RB per station (scarcity)
+    base_env = make_comms_env(sim, capacity=1, sanitize=sanitize)
+
+    def routing_for(payload_bits: float):
+        return get_routing_table(
+            sim.constellation, sim.topology, plan, payload_bits, lazy=lazy
+        )
+
+    # concurrent arm: one shared ledger, one session per job
+    sched = JobScheduler(sim, base_env=base_env, sanitize=sanitize)
+    for i, s in enumerate(specs):
+        def factory(env, payload=s["payload_bits"]):
+            return PlannerJob(env, routing_for(payload), payload_bits=payload)
+        sched.submit(
+            JobSpec(
+                name=f"job{i}", arrival_s=s["arrival_s"],
+                rounds=s["rounds"], tier=s["tier"], weight=s["weight"],
+                payload_bits=s["payload_bits"],
+            ),
+            factory,
+        )
+    records = sched.run()
+    conc_lat: List[float] = []
+    for r in records:
+        conc_lat.extend(r.round_latencies_s())
+    conc_finished = [r for r in records if r.status == "finished"]
+    conc_rounds = sum(r.rounds_done for r in records)
+    conc_makespan = (
+        max(r.finished_at_s for r in conc_finished)
+        - min(r.arrival_s for r in records)
+    ) if conc_finished else None
+
+    # serial baseline: private ledger per job, job i waits for job i-1
+    serial_lat: List[float] = []
+    serial_rounds = 0
+    t_free = 0.0
+    horizon_s = HORIZON_HOURS * 3600.0
+    for s in specs:
+        env = make_comms_env(
+            sim, predictor=base_env.predictor, walker=base_env.walker,
+            capacity=1, sanitize=sanitize,
+        )
+        runner = PlannerJob(
+            env, routing_for(s["payload_bits"]),
+            payload_bits=s["payload_bits"],
+        )
+        t = max(s["arrival_s"], t_free)
+        for _ in range(s["rounds"]):
+            if t >= horizon_s:
+                break
+            t_done = runner.run_round(t)
+            if t_done is None:
+                break
+            serial_lat.append(t_done - s["arrival_s"])
+            serial_rounds += 1
+            t = t_done
+        runner.finish(t)
+        t_free = t
+    serial_makespan = (
+        (t_free - specs[0]["arrival_s"]) if serial_rounds else None
+    )
+
+    def _rph(rounds_done: int, makespan: Optional[float]):
+        if not makespan:
+            return None
+        return round(rounds_done / (makespan / 3600.0), 4)
+
+    return {
+        "jobs": num_jobs,
+        "rounds_per_job": rounds,
+        "concurrent_rounds": conc_rounds,
+        "concurrent_finished": len(conc_finished),
+        "concurrent_p95_s": _p95(conc_lat) and round(_p95(conc_lat), 1),
+        "concurrent_makespan_s": conc_makespan and round(conc_makespan, 1),
+        "concurrent_throughput_rph": _rph(conc_rounds, conc_makespan),
+        "serial_rounds": serial_rounds,
+        "serial_p95_s": _p95(serial_lat) and round(_p95(serial_lat), 1),
+        "serial_makespan_s": serial_makespan and round(serial_makespan, 1),
+        "serial_throughput_rph": _rph(serial_rounds, serial_makespan),
+    }
+
+
+def bench_repack_floor(sanitize: bool) -> dict:
+    """Arm 3: async re-admission, monotone vs swap re-packer — the
+    monotone result is the re-packer's per-entry floor."""
+    from repro.configs.constellations import make_sim_config
+
+    sim = make_sim_config(
+        CONSTELLATION, ground_stations=GS_NAMES, topology="grid",
+        horizon_hours=HORIZON_HOURS,
+    )
+    base_env = make_comms_env(sim, capacity=1, sanitize=sanitize)
+
+    def arm(policy: str):
+        env = make_comms_env(
+            sim, predictor=base_env.predictor, walker=base_env.walker,
+            capacity=1, sanitize=sanitize,
+        )
+        done: List = []
+        t_round, t_mean, repriced = price_async_round(
+            env, readmit=True, policy=policy, completions=done,
+        )
+        return t_round, t_mean, repriced, dict(done)
+
+    mono_round, mono_mean, mono_repriced, mono = arm("monotone")
+    rep_round, rep_mean, rep_repriced, rep = arm("repack")
+    regrets = [
+        rep[k] - mono[k] for k in mono if k in rep
+    ] if mono and rep else []
+    return {
+        "async_monotone_s": mono_round and round(mono_round, 1),
+        "async_monotone_mean_s": mono_mean and round(mono_mean, 1),
+        "async_monotone_repriced": mono_repriced,
+        "async_repack_s": rep_round and round(rep_round, 1),
+        "async_repack_mean_s": rep_mean and round(rep_mean, 1),
+        "async_repack_repriced": rep_repriced,
+        "repack_max_regret_s": (
+            round(max(regrets), 6) if regrets else None
+        ),
+    }
+
+
+def run(quick: bool = False) -> dict:
+    sanitize = quick           # smoke configuration checks the books
+    row = {
+        "bench": "multi_tenant",
+        "constellation": CONSTELLATION,
+        "ground_stations": list(GS_NAMES),
+        "quick": bool(quick),
+    }
+    row.update(bench_poisson_vs_serial(quick, sanitize))
+    row.update(bench_repack_floor(sanitize))
+    row.update(bench_single_job_equivalence(quick))
+    append_bench(row)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer/smaller jobs, sanitizers on")
+    args = ap.parse_args()
+    run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -57,7 +57,7 @@ class Finding:
 
 
 # --- rule 1: ledger encapsulation ---------------------------------------------
-_LEDGER_MUTATORS = {"reserve", "release", "release_before"}
+_LEDGER_MUTATORS = {"reserve", "release", "release_booking", "release_before"}
 # files allowed to mutate ledger state directly: the ledger itself, the
 # session that owns it, and the PR-5 legacy booking shim
 # (``reserve_transfer`` in core/scheduling.py) kept solely for the

@@ -66,15 +66,21 @@ class ScheduleViolation(AssertionError):
 
 @dataclasses.dataclass(frozen=True)
 class Violation:
-    """One broken invariant: which rule, where, and what happened."""
+    """One broken invariant: which rule, where, and what happened.
+    ``job`` attributes the violation to the owning multi-tenant job
+    (the session's ``CommsEnvironment.job`` label; None standalone) —
+    a leak report over N concurrent sessions names the job that leaked.
+    """
 
     rule: str                            # e.g. "rb-capacity"
     message: str
     rid: Optional[int] = None            # offending reservation, if any
+    job: Optional[str] = None            # owning multi-tenant job, if any
 
     def __str__(self) -> str:
         where = f" (reservation {self.rid})" if self.rid is not None else ""
-        return f"[{self.rule}]{where} {self.message}"
+        owner = f" job={self.job}" if self.job is not None else ""
+        return f"[{self.rule}]{where}{owner} {self.message}"
 
 
 @dataclasses.dataclass
@@ -172,7 +178,10 @@ class ScheduleSanitizer:
 
     def _fail(self, rule: str, message: str,
               rid: Optional[int] = None) -> None:
-        v = Violation(rule=rule, message=message, rid=rid)
+        v = Violation(
+            rule=rule, message=message, rid=rid,
+            job=getattr(self.env, "job", None),
+        )
         self.violations.append(v)
         if self.strict:
             raise ScheduleViolation(str(v))

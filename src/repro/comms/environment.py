@@ -134,12 +134,18 @@ class TransferDecision:
 @dataclasses.dataclass
 class Reservation:
     """A committed booking: the ledger intervals one decision occupies.
-    Handed back to ``release`` to free the capacity again."""
+    Handed back to ``release`` to free the capacity again.
+
+    ``bids`` are the per-leg ledger booking ids (None for legs that
+    occupied nothing — downloads, no ledger): under multi-tenancy two
+    sessions can book IDENTICAL intervals on one shared station, so
+    releases are keyed on id, never on interval equality."""
 
     rid: int
     legs: Tuple[Leg, ...]
     decision: Any = None
     released: bool = False
+    bids: Tuple[Optional[int], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,7 +227,14 @@ class CommsEnvironment:
         self.ledger = ledger
         self.handover = bool(handover)
         self._release_listeners: List[Callable] = []
+        self._commit_listeners: List[Callable] = []
         self._next_rid = 0
+        # multi-tenant job label: set by ``derive(job=...)`` (the
+        # JobScheduler's per-job sessions) so the sanitizer and trace
+        # recorder can attribute bookings/leaks to the owning job.
+        # None for single-tenant sessions — every hook site treats
+        # None as "no tag" and stays bit-identical.
+        self.job: Optional[str] = None
         # invariant checker (repro.analysis.sanitizer), installed by
         # from_sim/derive(sanitize=True) or ScheduleSanitizer.attach
         self.sanitizer: Optional["ScheduleSanitizer"] = None
@@ -287,16 +300,21 @@ class CommsEnvironment:
     def derive(self, *, ledger: Any = _UNSET, handover: Any = _UNSET,
                link: Any = _UNSET, isl: Any = _UNSET,
                sanitize: bool = False,
-               trace: bool = False) -> "CommsEnvironment":
+               trace: bool = False,
+               job: Optional[str] = None) -> "CommsEnvironment":
         """Sibling session sharing this one's walker/predictor/budgets
         but with its OWN booking state: by default the new session gets
         a fresh, empty ledger of the parent's capacity (no ledger stays
         no ledger), so derived arms never see each other's bookings —
         how benchmarks price the same window table under different
-        contention regimes.  Pass ``ledger=...`` to override;
-        ``sanitize=True`` attaches a fresh ``ScheduleSanitizer``;
-        ``trace=True`` a fresh ``TraceRecorder`` (detach it before
-        reusing the shared predictor untraced)."""
+        contention regimes.  Pass ``ledger=...`` to override — the
+        multi-tenant JobScheduler passes the SHARED ledger so every
+        job's session competes for the same RB pools (booking ids keep
+        identical intervals distinguishable).  ``sanitize=True``
+        attaches a fresh ``ScheduleSanitizer``; ``trace=True`` a fresh
+        ``TraceRecorder`` (detach it before reusing the shared
+        predictor untraced); ``job`` labels the session for per-job
+        leak attribution and trace tagging."""
         if ledger is _UNSET:
             ledger = (
                 GSResourceLedger(self.ledger.num_stations,
@@ -311,6 +329,7 @@ class CommsEnvironment:
             ledger=ledger,
             handover=self.handover if handover is _UNSET else handover,
         )
+        env.job = job
         if sanitize:
             from repro.analysis.sanitizer import ScheduleSanitizer
 
@@ -504,6 +523,19 @@ class CommsEnvironment:
         )
 
     # -- reservation lifecycle -------------------------------------------------
+    def set_rid_base(self, base: int) -> None:
+        """Namespace this session's reservation ids from ``base``.
+        Concurrent sessions over one shared ledger each count rids from
+        0 by default; the multi-tenant scheduler gives every job
+        session a disjoint range so merged traces and cross-session
+        tooling never conflate two jobs' bookings.  Must be called
+        before the first commit."""
+        if self._next_rid != 0:
+            raise ValueError(
+                "rid base must be set before the session's first commit"
+            )
+        self._next_rid = int(base)
+
     def commit(self, decision: Any) -> Reservation:
         """Book one chosen decision on the session ledger — each
         handover leg on its own station for exactly the leg span, or
@@ -521,12 +553,15 @@ class CommsEnvironment:
             # decision with the ledger untouched
             self.sanitizer.observe_commit(reservation)
         if self.ledger is not None:
-            for gi, t0, t1 in legs:
-                self.ledger.reserve(gi, t0, t1)
+            reservation.bids = tuple(
+                self.ledger.reserve(gi, t0, t1) for gi, t0, t1 in legs
+            )
         if self.recorder is not None:
             # record AFTER booking: a sanitizer-rejected commit leaves
             # no trace event
             self.recorder.on_commit(reservation)
+        for cb in list(self._commit_listeners):
+            cb(reservation)
         return reservation
 
     def release(
@@ -545,19 +580,33 @@ class CommsEnvironment:
             return ()
         freed: List[Leg] = []
         kept: List[Leg] = []
-        for gi, t0, t1 in reservation.legs:
+        kept_bids: List[Optional[int]] = []
+        # legacy reservations built by hand (tests, external callers)
+        # carry no booking ids — fall back to the deprecated
+        # interval-matched release for those legs only
+        bids: Tuple[Optional[int], ...] = reservation.bids
+        if len(bids) != len(reservation.legs):
+            bids = (None,) * len(reservation.legs)
+        for (gi, t0, t1), bid in zip(reservation.legs, bids):
             if at is not None and t1 <= at:
                 kept.append((gi, t0, t1))       # already transmitted
+                kept_bids.append(bid)
                 continue
             f0 = t0 if at is None else max(t0, at)
+            head_bid: Optional[int] = None
             if self.ledger is not None:
-                self.ledger.release(gi, t0, t1)
+                if bid is not None:
+                    self.ledger.release_booking(gi, bid)
+                else:
+                    self.ledger.release(gi, t0, t1)
                 if f0 > t0:                     # keep the spent head
-                    self.ledger.reserve(gi, t0, f0)
+                    head_bid = self.ledger.reserve(gi, t0, f0)
             if f0 > t0:
                 kept.append((gi, t0, f0))
+                kept_bids.append(head_bid)
             freed.append((gi, f0, t1))
         reservation.legs = tuple(kept)
+        reservation.bids = tuple(kept_bids)
         reservation.released = True
         if self.sanitizer is not None:
             self.sanitizer.observe_release(reservation, tuple(freed))
@@ -587,11 +636,25 @@ class CommsEnvironment:
 
         return unsubscribe
 
+    def on_commit(self, callback: Callable) -> Callable[[], None]:
+        """Register ``callback(reservation)`` to run after every
+        committed booking; returns an unsubscribe function.  The
+        multi-tenant fair scheduler meters each job's consumed
+        RB-seconds through this hook."""
+        self._commit_listeners.append(callback)
+
+        def unsubscribe() -> None:
+            if callback in self._commit_listeners:
+                self._commit_listeners.remove(callback)
+
+        return unsubscribe
+
     # -- event-driven async re-admission --------------------------------------
     def readmit(
         self,
         pending: Sequence[PendingUpload],
         t_now: float,
+        policy: str = "monotone",
     ) -> Tuple[List[PendingUpload], int]:
         """Re-admit queued uploads after their reservations release.
 
@@ -618,9 +681,27 @@ class CommsEnvironment:
         (``t_start <= t_now``) are never touched; with no ledger this
         is a no-op and schedules stay bit-identical.
 
+        ``policy="repack"`` layers a regret-based, swap-accepting
+        global re-packer ON TOP of the monotone repair: per-entry
+        repair is a local optimum of the admission order, so after it
+        dries up the re-packer tries ORDER swaps — for an
+        admission-ordered pair, both bookings come out and the later
+        entry prices FIRST.  A swap is adopted only when neither new
+        completion regresses its post-monotone value (the floor) and
+        at least one strictly improves; otherwise both original
+        bookings are restored verbatim (their slots are provably still
+        free — only those two reservations were out).  Pairs are tried
+        in descending combined regret (committed completion minus the
+        entry's contention-free ideal — how much contention costs it),
+        and every adopted swap re-runs the monotone cascade, so the
+        monotone result remains a per-entry floor: no queued completion
+        may regress vs. the pure monotone pass.
+
         Returns ``(updated pending, number of re-priced uploads)``;
         the updated list preserves the input order.
         """
+        if policy not in ("monotone", "repack"):
+            raise ValueError(f"unknown readmit policy {policy!r}")
         pending = list(pending)
         if self.ledger is None:
             return pending, 0
@@ -630,33 +711,45 @@ class CommsEnvironment:
             range(len(pending)), key=lambda i: (pending[i].t_ready, i)
         )
         repriced = 0
-        improved = True
-        while improved:             # adoptions strictly shrink some
-            improved = False        # completion: passes terminate
-            for i in order:
-                p = pending[i]
-                if p.decision.t_start <= t_now or p.reservation.released:
-                    continue
-                self.release(p.reservation)
-                # re-plan from the later of model readiness and NOW — a
-                # queued upload must never be re-priced into a window
-                # that has already elapsed (release_before may have
-                # purged past bookings, leaving phantom-free history)
-                dec = self.plan_upload(
-                    p.sat, max(p.t_ready, t_now), p.payload_bits
-                )
-                if dec is not None and dec.t_done < p.decision.t_done - 1e-9:
-                    pending[i] = dataclasses.replace(
-                        p, decision=dec, reservation=self.commit(dec)
+        while True:
+            improved = True
+            while improved:         # adoptions strictly shrink some
+                improved = False    # completion: passes terminate
+                for i in order:
+                    p = pending[i]
+                    if p.decision.t_start <= t_now or p.reservation.released:
+                        continue
+                    self.release(p.reservation)
+                    # re-plan from the later of model readiness and NOW
+                    # — a queued upload must never be re-priced into a
+                    # window that has already elapsed (release_before
+                    # may have purged past bookings, leaving
+                    # phantom-free history)
+                    dec = self.plan_upload(
+                        p.sat, max(p.t_ready, t_now), p.payload_bits
                     )
-                    repriced += 1
-                    improved = True
-                else:
-                    # restore: the earliest completion with its own slot
-                    # free again can never be later than that same slot
-                    pending[i] = dataclasses.replace(
-                        p, reservation=self.commit(p.decision)
-                    )
+                    if (
+                        dec is not None
+                        and dec.t_done < p.decision.t_done - 1e-9
+                    ):
+                        pending[i] = dataclasses.replace(
+                            p, decision=dec, reservation=self.commit(dec)
+                        )
+                        repriced += 1
+                        improved = True
+                    else:
+                        # restore: the earliest completion with its own
+                        # slot free again can never be later than that
+                        # same slot
+                        pending[i] = dataclasses.replace(
+                            p, reservation=self.commit(p.decision)
+                        )
+            if policy != "repack":
+                break
+            swapped = self._repack_swap_pass(pending, order, t_now)
+            repriced += swapped
+            if swapped == 0:
+                break
         if self.sanitizer is not None:
             self.sanitizer.observe_readmit(
                 before, [(p.key, p.decision.t_done) for p in pending]
@@ -664,6 +757,101 @@ class CommsEnvironment:
         if self.recorder is not None:
             self.recorder.on_readmit(t_now, len(pending), repriced)
         return pending, repriced
+
+    def _uncontended_completion(
+        self, p: PendingUpload, t_now: float
+    ) -> Optional[float]:
+        """Contention-free single-window completion of one queued
+        upload — the regret baseline: how early it would finish if the
+        shared ledger did not exist."""
+        S = _sched()
+        assert self.link is not None, "session has no GS link budget"
+        tt = S.symmetric_transfer(downlink_time, self.link, p.payload_bits)
+        hit = self.plan_transfer(
+            sat=p.sat, t=max(p.t_ready, t_now), transfer_time=tt,
+            contended=False,
+        )
+        return None if hit is None else float(hit[1])
+
+    def _repack_swap_pass(
+        self,
+        pending: List[PendingUpload],
+        order: Sequence[int],
+        t_now: float,
+    ) -> int:
+        """One sweep of the regret-based swap search (``readmit``'s
+        repack policy).  Tries admission-ordered pairs in descending
+        combined regret; on the FIRST adopted swap, updates the two
+        entries in place and returns the number of re-priced uploads
+        (2) so the caller re-runs the monotone cascade.  Returns 0 when
+        no swap is admissible (the sweep is dry)."""
+        eligible = [
+            i for i in order
+            if pending[i].decision.t_start > t_now
+            and not pending[i].reservation.released
+        ]
+        if len(eligible) < 2:
+            return 0
+        regret = {}
+        for i in eligible:
+            ideal = self._uncontended_completion(pending[i], t_now)
+            regret[i] = (
+                max(0.0, pending[i].decision.t_done - ideal)
+                if ideal is not None else 0.0
+            )
+        pos = {i: k for k, i in enumerate(eligible)}
+        pairs = sorted(
+            (
+                (a, b)
+                for a in eligible for b in eligible
+                if pos[a] < pos[b]      # a admitted before b
+            ),
+            key=lambda ab: (-(regret[ab[0]] + regret[ab[1]]), ab),
+        )
+        for a, b in pairs:
+            if regret[a] <= 1e-9 and regret[b] <= 1e-9:
+                continue                # neither entry pays contention
+            pa, pb = pending[a], pending[b]
+            floor_a, floor_b = pa.decision.t_done, pb.decision.t_done
+            self.release(pa.reservation)
+            self.release(pb.reservation)
+            # swapped admission: the LATER entry prices first
+            dec_b = self.plan_upload(
+                pb.sat, max(pb.t_ready, t_now), pb.payload_bits
+            )
+            res_b = self.commit(dec_b) if dec_b is not None else None
+            dec_a = (
+                self.plan_upload(pa.sat, max(pa.t_ready, t_now),
+                                 pa.payload_bits)
+                if dec_b is not None else None
+            )
+            adopt = (
+                dec_a is not None and dec_b is not None
+                and dec_a.t_done <= floor_a + 1e-9      # monotone floor
+                and dec_b.t_done <= floor_b + 1e-9
+                and (dec_a.t_done < floor_a - 1e-9
+                     or dec_b.t_done < floor_b - 1e-9)
+            )
+            if adopt:
+                pending[b] = dataclasses.replace(
+                    pb, decision=dec_b, reservation=res_b
+                )
+                pending[a] = dataclasses.replace(
+                    pa, decision=dec_a, reservation=self.commit(dec_a)
+                )
+                return 2
+            # roll back: free any trial booking, restore the originals
+            # verbatim (only these two reservations were out, so their
+            # slots are still free)
+            if res_b is not None:
+                self.release(res_b)
+            pending[a] = dataclasses.replace(
+                pa, reservation=self.commit(pa.decision)
+            )
+            pending[b] = dataclasses.replace(
+                pb, reservation=self.commit(pb.decision)
+            )
+        return 0
 
     def finish_session(
         self,

@@ -65,6 +65,12 @@ class GSResourceLedger:
         self.capacity: Tuple[float, ...] = tuple(caps)
         self._starts: List[List[float]] = [[] for _ in range(self.num_stations)]
         self._ends: List[List[float]] = [[] for _ in range(self.num_stations)]
+        # parallel booking ids: the identity handle `reserve` returns,
+        # unique across the ledger's lifetime (never reused), so two
+        # sessions booking IDENTICAL [t0, t1) intervals on one station
+        # stay distinguishable at release time
+        self._bids: List[List[int]] = [[] for _ in range(self.num_stations)]
+        self._next_bid: int = 0
         # busy-run cache per station: the planner calls earliest_fit
         # once per candidate window, but the ledger only changes at
         # reserve()/release_before() — recompute the sweep lazily
@@ -73,14 +79,24 @@ class GSResourceLedger:
         )
 
     # -- bookkeeping -----------------------------------------------------------
-    def reserve(self, gs_index: int, t0: float, t1: float) -> None:
-        """Book one RB of station ``gs_index`` over ``[t0, t1)``."""
+    def reserve(self, gs_index: int, t0: float, t1: float) -> Optional[int]:
+        """Book one RB of station ``gs_index`` over ``[t0, t1)``.
+
+        Returns the booking id identifying THIS booking (hand it back to
+        ``release_booking``), or None for zero-length reservations,
+        which occupy nothing and need no release.
+        """
         if t1 < t0:
             raise ValueError(f"reservation ends before it starts: [{t0}, {t1})")
         if t1 > t0:            # zero-length reservations occupy nothing
+            bid = self._next_bid
+            self._next_bid += 1
             self._starts[gs_index].append(float(t0))
             self._ends[gs_index].append(float(t1))
+            self._bids[gs_index].append(bid)
             self._busy[gs_index] = None
+            return bid
+        return None
 
     def reservations(self, gs_index: int) -> Tuple[np.ndarray, np.ndarray]:
         """(starts, ends) of every booked interval, in booking order."""
@@ -92,17 +108,37 @@ class GSResourceLedger:
     def num_reserved(self) -> int:
         return sum(len(s) for s in self._starts)
 
-    def release(self, gs_index: int, t0: float, t1: float) -> None:
-        """Give ONE previously booked ``[t0, t1)`` interval of the
-        station back to the pool — the reservation-release half of the
-        lifecycle (``CommsEnvironment.release``): freed capacity is
-        visible to every later ``earliest_fit``/``free_runs`` query.
+    def release_booking(self, gs_index: int, booking_id: int) -> None:
+        """Give the booking identified by ``booking_id`` back to the
+        pool — the reservation-release half of the lifecycle
+        (``CommsEnvironment.release``): freed capacity is visible to
+        every later ``earliest_fit``/``free_runs`` query.
 
-        Exact-match on the booked bounds (callers hand back the legs
-        they reserved); the most recent matching booking is dropped.
-        Raises ValueError when no such booking exists (double release /
-        never booked).  Zero-length intervals were never stored and
-        release as a no-op.
+        Ids are unique across the ledger, so concurrent sessions that
+        booked identical intervals can only ever release their OWN
+        booking.  Raises ValueError when the id is not booked on the
+        station (double release / never booked).
+        """
+        bids = self._bids[gs_index]
+        try:
+            i = bids.index(booking_id)
+        except ValueError:
+            raise ValueError(
+                f"no booking id {booking_id} to release on station {gs_index}"
+            ) from None
+        del self._starts[gs_index][i]
+        del self._ends[gs_index][i]
+        del bids[i]
+        self._busy[gs_index] = None
+
+    def release(self, gs_index: int, t0: float, t1: float) -> None:
+        """DEPRECATED back-compat shim: release the most recent booking
+        exactly matching ``[t0, t1)``.  Interval identity is ambiguous
+        under multi-tenancy (two sessions can book identical intervals
+        on one station) and brittle to float drift in re-priced legs —
+        key releases on the id ``reserve`` returned via
+        ``release_booking`` instead.  Zero-length intervals were never
+        stored and release as a no-op.
         """
         t0, t1 = float(t0), float(t1)
         if t1 <= t0:
@@ -110,9 +146,7 @@ class GSResourceLedger:
         s, e = self._starts[gs_index], self._ends[gs_index]
         for i in range(len(s) - 1, -1, -1):
             if s[i] == t0 and e[i] == t1:
-                del s[i]
-                del e[i]
-                self._busy[gs_index] = None
+                self.release_booking(gs_index, self._bids[gs_index][i])
                 return
         raise ValueError(
             f"no booking [{t0}, {t1}) to release on station {gs_index}"
@@ -123,12 +157,15 @@ class GSResourceLedger:
         clock is monotone, so past bookings can never affect a fit)."""
         for i in range(self.num_stations):
             keep = [
-                (a, b)
-                for a, b in zip(self._starts[i], self._ends[i])
+                (a, b, bid)
+                for a, b, bid in zip(
+                    self._starts[i], self._ends[i], self._bids[i]
+                )
                 if b > t
             ]
-            self._starts[i] = [a for a, _ in keep]
-            self._ends[i] = [b for _, b in keep]
+            self._starts[i] = [a for a, _, _ in keep]
+            self._ends[i] = [b for _, b, _ in keep]
+            self._bids[i] = [bid for _, _, bid in keep]
             self._busy[i] = None
 
     # -- capacity queries ------------------------------------------------------

@@ -246,6 +246,29 @@ class RoutingTable:
         return relay_arrivals(self.latency, sink, t_ready, rows)
 
 
+# Node count at which the planners' auto mode switches to lazy
+# per-source routing rows: a 40x22 table (880 nodes, ~6 MB of float64
+# per matrix) is cheap to materialize, while starlink-gen1 (1584) and
+# beyond pay real memory and hop-split time for all-pairs matrices a
+# planning round never fully reads.
+LAZY_AUTO_NODE_THRESHOLD = 1024
+
+
+def resolve_lazy_routing(
+    constellation: "ConstellationConfig | MultiShellConfig",
+    lazy: Optional[bool] = None,
+) -> bool:
+    """The planners' lazy-routing choice: an explicit ``lazy`` wins;
+    None means auto — lazy at mega-scale (>= ``LAZY_AUTO_NODE_THRESHOLD``
+    satellites), eager below it.  Lazy and eager tables answer every
+    query identically (row-sliced vs. matrix-sliced of the same
+    Dijkstra), so the planners' schedules do not depend on the choice
+    (equivalence-tested)."""
+    if lazy is not None:
+        return bool(lazy)
+    return constellation.num_satellites >= LAZY_AUTO_NODE_THRESHOLD
+
+
 # cache hit/miss observers (repro.obs wires TraceRecorder counters in
 # here); a listener must never raise and must not call back into
 # get_routing_table

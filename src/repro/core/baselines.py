@@ -139,8 +139,9 @@ class FedHAP(FLStrategy, _StarMixin):
 
     name = "FedHAP"
 
-    def __init__(self, task: FederatedTask, sim: SimConfig):
-        super().__init__(task, sim)
+    def __init__(self, task: FederatedTask, sim: SimConfig,
+                 env: Optional[CommsEnvironment] = None):
+        super().__init__(task, sim, env)
         hap_a = dataclasses.replace(
             sim.ground_station, alt_m=20_000.0, min_elevation_deg=2.0,
             name="HAP-A",
@@ -351,7 +352,10 @@ class _AsyncQueueMixin:
         self._capacity_freed = False
         if not self.readmit or not self._pending:
             return
-        updated, _ = self.env.readmit(list(self._pending.values()), t_now)
+        updated, _ = self.env.readmit(
+            list(self._pending.values()), t_now,
+            policy=self.sim.readmit_policy,
+        )
         self._pending = {p.key: p for p in updated}
         self._queue = [
             (p.decision.t_done, p.key, self._versions[p.key])
@@ -369,8 +373,9 @@ class _AsyncStar(FLStrategy, _StarMixin, _AsyncQueueMixin):
     mix_rate = 0.6            # alpha: server mixing rate
     staleness_power = 0.5     # weight = alpha / (1 + staleness_h)^power
 
-    def __init__(self, task: FederatedTask, sim: SimConfig):
-        super().__init__(task, sim)
+    def __init__(self, task: FederatedTask, sim: SimConfig,
+                 env: Optional[CommsEnvironment] = None):
+        super().__init__(task, sim, env)
         self._init_async_queue()
         for cid, client in enumerate(task.clients):
             self._push_next(cid, 0.0)
@@ -476,8 +481,9 @@ class FedSpace(_AsyncStar):
     name = "FedSpace"
     buffer_fraction = 0.25
 
-    def __init__(self, task: FederatedTask, sim: SimConfig):
-        super().__init__(task, sim)
+    def __init__(self, task: FederatedTask, sim: SimConfig,
+                 env: Optional[CommsEnvironment] = None):
+        super().__init__(task, sim, env)
         self._buffer: List[Tuple[int, float]] = []
 
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
@@ -526,8 +532,9 @@ class AsyncFLEO(FLStrategy, _StarMixin, _AsyncQueueMixin):
     mix_rate = 0.6
     staleness_power = 0.5
 
-    def __init__(self, task: FederatedTask, sim: SimConfig):
-        super().__init__(task, sim)
+    def __init__(self, task: FederatedTask, sim: SimConfig,
+                 env: Optional[CommsEnvironment] = None):
+        super().__init__(task, sim, env)
         self._init_async_queue()
         for plane in range(sim.constellation.num_planes):
             self._schedule_plane(plane, 0.0)

@@ -102,6 +102,11 @@ class SimConfig:
     # to the book-at-schedule-time default.  False (default) does not
     # arm the hook at all; meaningful only under RB contention.
     async_readmit: bool = False
+    # Re-admission repair policy (CommsEnvironment.readmit): "monotone"
+    # is the per-entry repair (the default; bit-identical to PR 5),
+    # "repack" layers the regret-based swap-accepting global re-packer
+    # on top — no queued completion may regress vs. the monotone floor.
+    readmit_policy: str = "monotone"
     noniid_alpha: float = 0.5             # non-IID-aware weighting blend
     use_kernel: bool = False              # Pallas aggregation path (TPU)
     # Runtime schedule sanitizer (repro.analysis.sanitizer): every
@@ -172,13 +177,20 @@ class FLStrategy:
 
     name = "base"
 
-    def __init__(self, task: FederatedTask, sim: SimConfig):
+    def __init__(
+        self,
+        task: FederatedTask,
+        sim: SimConfig,
+        env: Optional[CommsEnvironment] = None,
+    ):
         self.task = task
         self.sim = sim
         # ONE scheduling session per strategy: the environment owns the
         # predictor, the shared RB ledger and the handover policy, and
-        # every planning/booking call routes through it.
-        self.env = CommsEnvironment.from_sim(sim)
+        # every planning/booking call routes through it.  The
+        # multi-tenant JobScheduler injects a per-job session derived
+        # over a SHARED ledger; standalone strategies build their own.
+        self.env = CommsEnvironment.from_sim(sim) if env is None else env
         self.walker = self.env.walker
         self.gs_list = list(self.env.ground_stations)
         self.gs = self.gs_list[0]
@@ -195,6 +207,18 @@ class FLStrategy:
         # per-round group decompositions, stashed by the round drivers
         # (_SyncRoundMixin) and drained into each HistoryPoint
         self._round_groups: List[GroupDecomposition] = []
+        # accumulated accuracy-vs-time history (one point per round);
+        # ``run`` drives it for standalone strategies, the multi-tenant
+        # JobScheduler through ``run_round`` directly
+        self.history: List[HistoryPoint] = []
+        self._completed = True
+        # multi-tenant release floor: with a SHARED ledger, dropping
+        # bookings up to this strategy's own clock could purge
+        # intervals a slower concurrent job still prices against — the
+        # JobScheduler installs min-over-active-job-clocks here.  None
+        # (standalone) releases up to the strategy's own clock, the
+        # bit-identical single-tenant behavior.
+        self.release_floor_fn: Optional[Any] = None
 
     @property
     def predictor(self) -> Any:
@@ -239,53 +263,75 @@ class FLStrategy:
     def step(self, t: float) -> Tuple[float, Dict[str, Any]]:
         raise NotImplementedError
 
+    def run_round(self, t: float, verbose: bool = False) -> Optional[float]:
+        """Advance the strategy by ONE FL round starting at simulated
+        time ``t``: expire spent bookings, run ``step``, evaluate the
+        global model and append the ``HistoryPoint``.  Returns the
+        round completion time (the next round's start), or None when no
+        feasible progress exists inside the horizon — the aborted step
+        may leave half-planned bookings, so the final leak report is
+        skipped.  ``run`` drives this for standalone strategies; the
+        multi-tenant ``JobScheduler`` calls it directly to interleave
+        rounds of concurrent jobs (a single job through the scheduler
+        executes the identical call sequence — bit-identical)."""
+        # simulated time is monotone: bookings that ended before this
+        # round can never affect another fit (under a shared ledger the
+        # floor callback holds back expiry for slower concurrent jobs)
+        floor = t if self.release_floor_fn is None else self.release_floor_fn(t)
+        self.env.release_before(floor)
+        t_next, events = self.step(t)
+        if t_next is None or t_next <= t:
+            self._completed = False
+            return None
+        self.round_index += 1
+        metrics = self.task.evaluate(self.global_params)
+        decomposition = RoundDecomposition(
+            round_index=self.round_index,
+            t_start=t,
+            t_end=t_next,
+            groups=self._take_round_groups(),
+        )
+        self.history.append(
+            HistoryPoint(
+                t_hours=t_next / 3600.0,
+                round_index=self.round_index,
+                metrics=metrics,
+                events=events,
+                decomposition=decomposition,
+            )
+        )
+        self.recorder.on_round(decomposition, metrics)
+        if verbose:
+            record = round_log_record(
+                self.name, self.round_index, t_next / 3600.0, metrics
+            )
+            self.recorder.on_round_log(record)
+            print(format_round_line(record))
+        return t_next
+
+    def finish(self, t: float) -> None:
+        """Close the session at simulated time ``t`` (sanitizer leak
+        report, unless a round aborted mid-plan)."""
+        self.env.finish_session(
+            t, open_rids=self.open_reservations(),
+            check_leaks=self._completed,
+        )
+
     def run(
         self,
         max_sim_hours: Optional[float] = None,
         max_rounds: Optional[int] = None,
         verbose: bool = False,
     ) -> RunResult:
-        max_s = (max_sim_hours or self.sim.horizon_hours) * 3600.0
-        history: List[HistoryPoint] = []
+        # `is None`, not `or`: max_sim_hours=0 means a zero-length run,
+        # not the full horizon
+        hours = self.sim.horizon_hours if max_sim_hours is None else max_sim_hours
+        max_s = hours * 3600.0
         t = 0.0
-        completed = True
         while t < max_s and (max_rounds is None or self.round_index < max_rounds):
-            # simulated time is monotone: bookings that ended before
-            # this round can never affect another fit
-            self.env.release_before(t)
-            t_next, events = self.step(t)
-            if t_next is None or t_next <= t:
-                # no feasible progress inside the horizon — the aborted
-                # step may leave half-planned bookings, so the leak
-                # report does not apply
-                completed = False
+            t_next = self.run_round(t, verbose=verbose)
+            if t_next is None:
                 break
-            self.round_index += 1
-            metrics = self.task.evaluate(self.global_params)
-            decomposition = RoundDecomposition(
-                round_index=self.round_index,
-                t_start=t,
-                t_end=t_next,
-                groups=self._take_round_groups(),
-            )
-            history.append(
-                HistoryPoint(
-                    t_hours=t_next / 3600.0,
-                    round_index=self.round_index,
-                    metrics=metrics,
-                    events=events,
-                    decomposition=decomposition,
-                )
-            )
-            self.recorder.on_round(decomposition, metrics)
-            if verbose:
-                record = round_log_record(
-                    self.name, self.round_index, t_next / 3600.0, metrics
-                )
-                self.recorder.on_round_log(record)
-                print(format_round_line(record))
             t = t_next
-        self.env.finish_session(
-            t, open_rids=self.open_reservations(), check_leaks=completed
-        )
-        return RunResult(name=self.name, history=history)
+        self.finish(t)
+        return RunResult(name=self.name, history=list(self.history))

@@ -45,7 +45,12 @@ from repro.comms.environment import CommsEnvironment
 from repro.comms.isl import ISLConfig, isl_hop_time
 from repro.comms.ledger import GSResourceLedger
 from repro.comms.link import LinkConfig
-from repro.comms.routing import ISLPlan, RoutingTable, get_routing_table
+from repro.comms.routing import (
+    ISLPlan,
+    RoutingTable,
+    get_routing_table,
+    resolve_lazy_routing,
+)
 from repro.core import aggregation
 from repro.core.engine import FLStrategy, SimConfig
 from repro.core.fltask import FederatedTask
@@ -538,14 +543,19 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
     def __init__(self, task: FederatedTask, sim: SimConfig, *,
                  cluster_planes: Optional[int] = None,
                  dynamic_clusters: bool = True,
-                 require_next_download: bool = False):
+                 require_next_download: bool = False,
+                 lazy_routing: Optional[bool] = None,
+                 env: Optional[CommsEnvironment] = None):
         """``dynamic_clusters`` (default): re-form the plane clusters
         every round from the predicted window supply over the next
         orbital period (``form_clusters``) — clusters are contiguous,
         never cross a cut polar seam, and each contains a well-served
         anchor plane for its sink.  ``False`` keeps the static
-        adjacent-plane grouping for every round."""
-        super().__init__(task, sim)
+        adjacent-plane grouping for every round.  ``lazy_routing=None``
+        (auto) defers the all-pairs routing matrices to per-source rows
+        at mega-scale (``resolve_lazy_routing``); schedules are
+        identical either way."""
+        super().__init__(task, sim, env)
         self.require_next_download = require_next_download
         self.topology = get_isl_topology(sim.constellation, sim.topology)
         self.routing = get_routing_table(
@@ -553,6 +563,7 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
             sim.topology,
             ISLPlan(intra=sim.isl, inter=sim.isl_inter),
             self.payload_bits,
+            lazy=resolve_lazy_routing(sim.constellation, lazy_routing),
         )
         L = sim.constellation.num_planes
         if cluster_planes is None:

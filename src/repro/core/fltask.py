@@ -90,8 +90,12 @@ class FederatedTask:
         self.sim_epochs = sim_epochs if sim_epochs is not None else hp.local_epochs
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.global_params = init_fn(rng)
-        self._payload_bits = payload_bits_override or nn.param_bits(
-            self.global_params, hp.bits_per_param
+        # `is None`, not `or`: an explicit 0-bit override must not fall
+        # back to the proxy model's true size
+        self._payload_bits = (
+            payload_bits_override
+            if payload_bits_override is not None
+            else nn.param_bits(self.global_params, hp.bits_per_param)
         )
 
         # stacked per-client data for vmapped local training

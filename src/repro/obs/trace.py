@@ -108,10 +108,19 @@ class TraceRecorder:
     (horizon extensions + query counters) and the routing-table cache
     (hit/miss counters)."""
 
-    def __init__(self, meta: Optional[Mapping[str, Any]] = None):
+    def __init__(
+        self,
+        meta: Optional[Mapping[str, Any]] = None,
+        job: Optional[str] = None,
+    ):
         self.events: List[TraceEvent] = []
         self.counters: Dict[str, int] = {}
         self.meta: Dict[str, Any] = dict(meta or {})
+        # multi-tenant job label (``CommsEnvironment.job``): when set,
+        # every emitted event carries a ``job`` attr so traces of
+        # concurrent sessions merge attributably.  None adds nothing —
+        # single-tenant traces stay byte-identical.
+        self.job = job
         self._seq = 0
         self._detachers: List[Callable[[], None]] = []
 
@@ -121,6 +130,8 @@ class TraceRecorder:
         t_start_s: float, t_end_s: float, **attrs: Any,
     ) -> None:
         self._seq += 1
+        if self.job is not None:
+            attrs = {**attrs, "job": self.job}
         self.events.append(TraceEvent(
             self._seq, kind, track, name, float(t_start_s),
             float(t_end_s), attrs,
@@ -276,7 +287,9 @@ class TraceRecorder:
                 (None if float(c) == float("inf") else int(c))
                 for c in env.ledger.capacity
             ]
-        recorder = cls(meta)
+        if env.job is not None:
+            meta["job"] = env.job
+        recorder = cls(meta, job=env.job)
         env.recorder = recorder
         env.predictor.recorder = recorder
         recorder._detachers.append(

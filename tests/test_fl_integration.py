@@ -35,6 +35,7 @@ def small_task_factory():
     return factory
 
 
+@pytest.mark.slow
 def test_fedleo_converges_and_timing(small_task_factory):
     sim = SimConfig(horizon_hours=72.0)
     strat = FedLEO(small_task_factory(), sim)
@@ -52,6 +53,7 @@ def test_fedleo_converges_and_timing(small_task_factory):
         assert plane_ev["t_upload_done"] >= plane_ev["t_models_at_sink"]
 
 
+@pytest.mark.slow
 def test_fedleo_faster_than_fedavg(small_task_factory):
     """The paper's headline claim: FedLEO round latency beats the star
     topology (eq. 12 vs eq. 10)."""

@@ -24,6 +24,7 @@ from repro.models.cnn import apply_cnn, apply_unet, init_cnn, init_unet
 from repro.optim import get_optimizer
 
 
+@pytest.mark.slow
 def test_fedleo_end_to_end_noniid():
     ds = make_classification_dataset("mnist-like", num_samples=1200, seed=0)
     test = make_classification_dataset("mnist-like", num_samples=300,

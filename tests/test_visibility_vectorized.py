@@ -451,6 +451,7 @@ def test_ideal_baselines_override_multi_gs_list():
         assert [g.name for g in strat.gs_list] == ["North-Pole"]
 
 
+@pytest.mark.slow
 def test_fedleo_round_on_starlink_preset_two_gs():
     """Acceptance: a FedLEO round completes end-to-end on the
     Starlink-scale preset with 2 ground stations."""
