@@ -61,6 +61,11 @@ MEGA_RATIO_CONSTELLATION = "starlink-gen1"
 # to float noise
 REPACK_REGRET_EPS = 1e-6
 
+# hetero-fleet floors (ISSUE 10): the Pallas aggregate_flat path must
+# match the reference weighted mean on real model pytrees to float
+# noise (both accumulate in f32)
+HETERO_PARITY_TOL = 1e-5
+
 # near-floor early warning: any ceiling-floored metric within this
 # relative margin of its floor is reported (exit 0) so the regression
 # is visible one PR before it fails CI
@@ -160,6 +165,64 @@ def load_latest_multi_tenant(path: str = BENCH_TRAJECTORY) -> Optional[Dict]:
         if isinstance(rec, dict) and rec.get("bench") == "multi_tenant":
             latest = rec
     return latest
+
+
+def load_latest_hetero(path: str = BENCH_TRAJECTORY) -> Optional[Dict]:
+    """Latest ``hetero_fleet`` record, or None (the hetero smoke is
+    optional per run — same append-only / skip-unparseable discipline
+    as the other loaders)."""
+    latest: Optional[Dict] = None
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        return None
+    for line in lines:
+        try:
+            rec = json.loads(line.strip())
+        except json.JSONDecodeError:
+            continue
+        if isinstance(rec, dict) and rec.get("bench") == "hetero_fleet":
+            latest = rec
+    return latest
+
+
+def check_hetero(rec: Optional[Dict]) -> List[str]:
+    """ISSUE 10 floors: degenerate-profile bit-identity, the
+    fast <= hetero <= slow round-time ordering (contention-free arms:
+    later train-ready times can only delay upload completion), and
+    Pallas-vs-reference aggregation parity."""
+    if rec is None:
+        return []
+    failures = []
+    if rec.get("uniform_equal") is False:
+        failures.append(
+            "hetero_fleet: uniform compute profile diverged from "
+            "SimConfig.compute=None (the degenerate case must be "
+            "bit-identical)"
+        )
+    fast = rec.get("fast_round_s")
+    het = rec.get("hetero_round_s")
+    slow = rec.get("slow_round_s")
+    if het is None:
+        failures.append("hetero_fleet: hetero round did not complete")
+    if fast is not None and het is not None and fast > het:
+        failures.append(
+            f"hetero_fleet: all-fast round {fast}s > hetero round "
+            f"{het}s (monotone pricing broken)"
+        )
+    if het is not None and slow is not None and het > slow:
+        failures.append(
+            f"hetero_fleet: hetero round {het}s > all-slow round "
+            f"{slow}s (monotone pricing broken)"
+        )
+    err = rec.get("aggregate_parity_max_err")
+    if err is not None and err > HETERO_PARITY_TOL:
+        failures.append(
+            f"hetero_fleet: Pallas aggregation parity error {err} > "
+            f"{HETERO_PARITY_TOL} vs the reference weighted mean"
+        )
+    return failures
 
 
 def check_multi_tenant(rec: Optional[Dict]) -> List[str]:
@@ -356,6 +419,8 @@ def main() -> None:
     failures += check_mega(mega)
     tenant = load_latest_multi_tenant(BENCH_TRAJECTORY)
     failures += check_multi_tenant(tenant)
+    hetero = load_latest_hetero(BENCH_TRAJECTORY)
+    failures += check_hetero(hetero)
     if pred is not None:
         print(
             f"# checked predictor_queries: {pred.get('us_per_query')} "
@@ -394,6 +459,15 @@ def main() -> None:
             f"{tenant.get('repack_max_regret_s')}s (eps "
             f"{REPACK_REGRET_EPS}); single-job equal: "
             f"{tenant.get('single_job_equal')}"
+        )
+    if hetero is not None:
+        print(
+            f"# checked hetero_fleet: fast {hetero.get('fast_round_s')}s"
+            f" <= hetero {hetero.get('hetero_round_s')}s <= slow "
+            f"{hetero.get('slow_round_s')}s; uniform equal: "
+            f"{hetero.get('uniform_equal')}; aggregate parity "
+            f"{hetero.get('aggregate_parity_max_err')} (tol "
+            f"{HETERO_PARITY_TOL})"
         )
     for msg in near_floor_warnings(records, pred, mega):
         print(f"FLOOR WARNING: {msg}", file=sys.stderr)

@@ -218,6 +218,7 @@ def price_ring_round(
     env, *,
     payload_bits: float = PAYLOAD_BITS,
     train_time_s: float = 600.0,
+    train_time_by_plane: Optional[List[float]] = None,
     t: float = 0.0,
     groups: Optional[List] = None,
 ):
@@ -230,19 +231,26 @@ def price_ring_round(
     upload split into station-handover segments.  None if any plane
     stalls.  Pass a list as ``groups`` to collect each plane's typed
     ``GroupDecomposition`` (repro.obs) — read-only on the plans, so
-    collection never changes the priced schedule."""
+    collection never changes the priced schedule.
+    ``train_time_by_plane`` prices a heterogeneous fleet (one training
+    duration per plane — ``FleetComputeModel.plane_summary`` order);
+    omitted, every plane trains for the uniform ``train_time_s``."""
     import numpy as np
 
     from repro.core.fedleo import plan_plane_round
     from repro.obs import decompose_group_plan
 
     K = env.walker.config.sats_per_plane
-    train = np.full(K, train_time_s)
     done = []
     for plane in range(env.walker.config.num_planes):
+        per_plane = (
+            train_time_s if train_time_by_plane is None
+            else train_time_by_plane[plane]
+        )
         plan = plan_plane_round(
             env=env, isl=env.isl, plane=plane, t=t,
-            payload_bits=payload_bits, train_times=train,
+            payload_bits=payload_bits,
+            train_times=np.full(K, per_plane),
         )
         if plan is None:
             return None            # a plane stalls the whole round

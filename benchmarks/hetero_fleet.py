@@ -1,0 +1,235 @@
+"""Heterogeneous fleet compute model: hetero-vs-uniform round pricing
+plus the degenerate-case and kernel-parity gates (ISSUE 10).
+
+Three checks ride in one benchmark:
+
+  1. Round-time pricing at starlink-40x22 via the pure plane planners,
+     with per-plane training durations from ``FleetComputeModel``'s
+     roofline (analytic mode, full-size configs): an all-``FAST_ARCH``
+     fleet, an all-``SLOW_ARCH`` fleet, and the alternating hetero
+     fleet.  Each arm gets its own contention-free session (no ledger),
+     so later train-ready times can only delay upload completion —
+     ``fast_round_s <= hetero_round_s <= slow_round_s`` is the floor
+     ``check_floors`` gates.
+  2. Degenerate-case equivalence: a real 2-round FedLEO training run
+     (reduced 5x8 scale) with ``SimConfig.compute`` unset vs. the
+     all-default uniform profile — round times AND metrics must be
+     bit-identical (``uniform_equal``).
+  3. Pallas aggregation parity: ``make_fedleo_aggregate(use_kernel=
+     True)`` vs. the reference weighted mean on a real CNN TrainState
+     with staleness-discounted weights (``aggregate_parity_max_err``).
+
+Full mode (no ``--quick``) adds the fig. 5-style accuracy-vs-time
+comparison — uniform vs. hetero fleet FedLEO runs at the reduced 5x8
+training scale (pricing stays at starlink-40x22; CPU cannot train 880
+clients).
+
+Usage: PYTHONPATH=src python -m benchmarks.hetero_fleet [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import (
+    append_bench,
+    make_comms_env,
+    make_task,
+    price_ring_round,
+)
+
+CONSTELLATION = "starlink-40x22"
+GS_NAMES = ("rolla", "punta-arenas")
+HORIZON_HOURS = 24.0
+
+# the hetero fleet: alternating planes of a big dense LM and a small
+# SSM on the same orbital-GPU tier — the roofline spread (~10x in
+# per-sample seconds) is the heterogeneity the scheduler must absorb
+SLOW_ARCH = "gemma-7b"
+FAST_ARCH = "mamba2-780m"
+DEVICE = "orbital-gpu"
+# eq. (11) knobs for pricing: 2 epochs x 2 batches x 16 samples per
+# satellite (the reduced-benchmark workload)
+LOCAL_EPOCHS = 2
+N_BATCHES = 2
+BATCH_SIZE = 16
+PARITY_TOL = 1e-5
+
+
+def _profile(plane_archs: List[Optional[str]]):
+    from repro.compute.profiles import SatelliteComputeProfile
+
+    # analytic mode prices the FULL-SIZE configs (no jax compile
+    # needed), where the gemma/mamba roofline spread is pronounced
+    return SatelliteComputeProfile.per_plane(
+        plane_archs, device=DEVICE, smoke=False,
+    )
+
+
+def _plane_train_times(sim, plane_archs: List[Optional[str]]) -> List[float]:
+    from repro.compute.fleet import FleetComputeModel
+
+    fleet = FleetComputeModel(
+        _profile(plane_archs), sim.constellation.num_planes
+    )
+    times = []
+    for plane in range(sim.constellation.num_planes):
+        t = fleet.train_time_s(
+            plane, local_epochs=LOCAL_EPOCHS, n_batches=N_BATCHES,
+            batch_size=BATCH_SIZE,
+        )
+        # degenerate planes price at the uniform 600 s benchmark rate
+        times.append(600.0 if t is None else t)
+    return times
+
+
+def price_arms() -> Dict[str, object]:
+    """Round-time pricing of the three fleets at starlink-40x22."""
+    from repro.configs.constellations import make_sim_config
+
+    sim = make_sim_config(
+        CONSTELLATION, ground_stations=GS_NAMES, topology="ring",
+        horizon_hours=HORIZON_HOURS,
+    )
+    L = sim.constellation.num_planes
+    hetero_archs: List[Optional[str]] = [
+        SLOW_ARCH if p % 2 == 0 else FAST_ARCH for p in range(L)
+    ]
+    arms = {
+        "fast": [FAST_ARCH] * L,
+        "hetero": hetero_archs,
+        "slow": [SLOW_ARCH] * L,
+    }
+    # one predictor, a fresh contention-free session per arm (each arm
+    # must not see another's bookings)
+    base_env = make_comms_env(sim)
+    out: Dict[str, object] = {}
+    for name, archs in arms.items():
+        times = _plane_train_times(sim, archs)
+        t0 = time.perf_counter()
+        round_s = price_ring_round(
+            base_env.derive(), train_time_by_plane=times,
+        )
+        out[f"{name}_round_s"] = (
+            None if round_s is None else round(round_s, 1)
+        )
+        out[f"{name}_plan_wall_s"] = round(time.perf_counter() - t0, 3)
+        out[f"{name}_train_s_minmax"] = [
+            round(min(times), 1), round(max(times), 1)
+        ]
+    return out
+
+
+def check_uniform_equivalence(quick: bool) -> Dict[str, object]:
+    """2-round FedLEO training runs: compute=None vs the all-default
+    uniform profile must be bit-identical in times and metrics."""
+    from repro.compute.profiles import SatelliteComputeProfile
+    from repro.core import FedLEO, SimConfig
+
+    rounds = 1 if quick else 2
+    sim0 = SimConfig(horizon_hours=72.0)
+    sim_u = SimConfig(
+        horizon_hours=72.0, compute=SatelliteComputeProfile.uniform()
+    )
+    r0 = FedLEO(make_task(), sim0).run(max_rounds=rounds)
+    ru = FedLEO(make_task(), sim_u).run(max_rounds=rounds)
+    equal = len(r0.history) == len(ru.history) and all(
+        a.t_hours == b.t_hours and a.metrics == b.metrics
+        for a, b in zip(r0.history, ru.history)
+    )
+    return {
+        "uniform_equal": bool(equal),
+        "uniform_rounds": len(r0.history),
+        "uniform_round_hours": [round(h.t_hours, 4) for h in r0.history],
+    }
+
+
+def check_aggregate_parity() -> float:
+    """Max |kernel - reference| over a real CNN TrainState aggregation
+    with staleness-discounted weights (zero-weight replica included)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.cnn import init_cnn
+    from repro.optim import get_optimizer
+    from repro.train.fedleo_step import make_fedleo_aggregate
+    from repro.train.steps import TrainState
+
+    r = 4
+    params = init_cnn(jax.random.PRNGKey(0), (28, 28, 1), 10,
+                      widths=(8, 16), hidden=32)
+    stacked = jax.tree_util.tree_map(
+        lambda p: jnp.stack(
+            [p * (i + 1) for i in range(r)]
+        ), params
+    )
+    opt = get_optimizer("sgd", 0.05)
+    state = TrainState(
+        params=stacked, opt_state=opt.init(stacked),
+        step=jnp.zeros((), jnp.int32),
+    )
+    w = jnp.array([1.0, 2.0, 0.0, 3.0])
+    stale = jnp.array([0.0, 3600.0, 0.0, 7200.0])
+    ref = make_fedleo_aggregate(use_kernel=False)(state, w, stale)
+    ker = make_fedleo_aggregate(use_kernel=True)(state, w, stale)
+    errs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)
+        ))) if a.ndim else 0.0,
+        ref, ker,
+    )
+    return max(jax.tree_util.tree_leaves(errs), default=0.0)
+
+
+def accuracy_vs_time(max_rounds: int = 3) -> Dict[str, object]:
+    """Fig. 5-style uniform-vs-hetero accuracy trajectories (reduced
+    5x8 training scale; full mode only)."""
+    from repro.core import FedLEO, SimConfig
+
+    sim_u = SimConfig(horizon_hours=72.0)
+    sim_h = SimConfig(
+        horizon_hours=72.0,
+        compute=_profile(
+            [SLOW_ARCH if p % 2 == 0 else FAST_ARCH for p in range(5)]
+        ),
+    )
+    ru = FedLEO(make_task(), sim_u).run(max_rounds=max_rounds)
+    rh = FedLEO(make_task(), sim_h).run(max_rounds=max_rounds)
+    return {
+        "fig5_uniform": [
+            [round(h.t_hours, 3), round(h.metrics["accuracy"], 4)]
+            for h in ru.history
+        ],
+        "fig5_hetero": [
+            [round(h.t_hours, 3), round(h.metrics["accuracy"], 4)]
+            for h in rh.history
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 1 equivalence round, no fig5 arm")
+    args = ap.parse_args()
+
+    row: Dict[str, object] = {
+        "bench": "hetero_fleet",
+        "constellation": CONSTELLATION,
+        "ground_stations": list(GS_NAMES),
+        "slow_arch": SLOW_ARCH,
+        "fast_arch": FAST_ARCH,
+        "device": DEVICE,
+    }
+    row.update(price_arms())
+    row.update(check_uniform_equivalence(args.quick))
+    row["aggregate_parity_max_err"] = check_aggregate_parity()
+    row["parity_tol"] = PARITY_TOL
+    if not args.quick:
+        row.update(accuracy_vs_time())
+    append_bench(row)
+
+
+if __name__ == "__main__":
+    main()

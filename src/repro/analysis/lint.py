@@ -126,6 +126,7 @@ _NUMERIC_ANNOTATIONS = {
 # --- rule 4: wall-clock ban ---------------------------------------------------
 _SIM_PACKAGES = (
     "repro/core/", "repro/comms/", "repro/orbits/", "repro/obs/",
+    "repro/compute/", "repro/multitenant/",
 )
 # the ONE sanctioned wall-clock shim: repro.obs._walltime stamps
 # exported trace FILES with their recording time (file provenance, not
@@ -141,7 +142,7 @@ _WALL_CLOCK_CALLS = {
 # --- rule 5: annotation completeness ------------------------------------------
 _ANNOTATION_PACKAGES = (
     "repro/comms/", "repro/configs/", "repro/core/", "repro/obs/",
-    "repro/orbits/",
+    "repro/orbits/", "repro/compute/", "repro/multitenant/",
 )
 
 

@@ -100,12 +100,13 @@ class FedAvgStar(FLStrategy, _StarMixin):
         done_times = []
         for cid, client in enumerate(task.clients):
             sat = Satellite(client.plane, client.slot)
-            t_dl = self._first_tx(sat, t, self.payload_bits, downlink=False)
+            bits = self.sat_payload_bits(client.plane, client.slot)
+            t_dl = self._first_tx(sat, t, bits, downlink=False)
             if t_dl is None:
                 return None, {"failed_client": cid}
-            t_tr = t_dl + task.train_time_s(cid)
+            t_tr = t_dl + self.train_time_s(cid)
             t_ul = self._first_tx(
-                sat, t_tr, self.payload_bits, downlink=True,
+                sat, t_tr, bits, downlink=True,
                 same_window=self.same_window_upload,
             )
             if t_ul is None:
@@ -183,11 +184,12 @@ class FedHAP(FLStrategy, _StarMixin):
         done_times = []
         for cid, client in enumerate(task.clients):
             sat = Satellite(client.plane, client.slot)
-            t_dl = self._best_tx(sat, t, self.payload_bits, downlink=False)
+            bits = self.sat_payload_bits(client.plane, client.slot)
+            t_dl = self._best_tx(sat, t, bits, downlink=False)
             if t_dl is None:
                 return None, {"failed_client": cid}
-            t_tr = t_dl + task.train_time_s(cid)
-            t_ul = self._best_tx(sat, t_tr, self.payload_bits, downlink=True)
+            t_tr = t_dl + self.train_time_s(cid)
+            t_ul = self._best_tx(sat, t_tr, bits, downlink=True)
             if t_ul is None:
                 return None, {"failed_client": cid}
             done_times.append(t_ul)
@@ -230,22 +232,21 @@ class FedISL(FLStrategy, _StarMixin):
     def step(self, t: float) -> Tuple[Optional[float], Dict[str, Any]]:
         task, sim = self.task, self.sim
         L, K = sim.constellation.num_planes, sim.constellation.sats_per_plane
-        t_hop = isl_hop_time(sim.isl, self.payload_bits)
         completions, partials, counts = [], [], []
 
         for plane in range(L):
             clients = self.plane_clients(plane)
-            dl = self.env.first_visible_download(
-                plane, t, self.payload_bits
-            )
+            bits = self.group_payload_bits((plane,))
+            t_hop = isl_hop_time(sim.isl, bits)
+            dl = self.env.first_visible_download(plane, t, bits)
             if dl is None:
                 return None, {"failed_plane": plane}
             src_slot, t_recv = dl
             events = broadcast_schedule(
-                K, [src_slot], [t_recv], self.payload_bits, sim.isl
+                K, [src_slot], [t_recv], bits, sim.isl
             )
             t_done = [
-                events[s].t_receive + task.train_time_s(clients[s])
+                events[s].t_receive + self.train_time_s(clients[s])
                 for s in range(K)
             ]
             # naive sink: earliest next visitor after completion (one
@@ -258,7 +259,7 @@ class FedISL(FLStrategy, _StarMixin):
                 np.asarray(t_done) + ring_hops_matrix(K)[sink] * t_hop
             ))
             t_ul = self._upload_with_retries(
-                Satellite(plane, sink), t_ready, self.payload_bits
+                Satellite(plane, sink), t_ready, bits
             )
             if t_ul is None:
                 return None, {"failed_plane": plane}
@@ -383,11 +384,12 @@ class _AsyncStar(FLStrategy, _StarMixin, _AsyncQueueMixin):
     def _push_next(self, cid: int, t: float) -> None:
         client = self.task.clients[cid]
         sat = Satellite(client.plane, client.slot)
-        t_dl = self._first_tx(sat, t, self.payload_bits, downlink=False)
+        bits = self.sat_payload_bits(client.plane, client.slot)
+        t_dl = self._first_tx(sat, t, bits, downlink=False)
         if t_dl is None:
             return
-        t_tr = t_dl + self.task.train_time_s(cid)
-        t_ul = self._admit_upload(cid, sat, t_tr, self.payload_bits, t_dl)
+        t_tr = t_dl + self.train_time_s(cid)
+        t_ul = self._admit_upload(cid, sat, t_tr, bits, t_dl)
         if t_ul is None:
             return
         heapq.heappush(self._queue, (t_ul, cid, t_dl))
@@ -543,18 +545,19 @@ class AsyncFLEO(FLStrategy, _StarMixin, _AsyncQueueMixin):
         sim, task = self.sim, self.task
         K = sim.constellation.sats_per_plane
         clients = self.plane_clients(plane)
-        dl = self.env.first_visible_download(plane, t, self.payload_bits)
+        bits = self.group_payload_bits((plane,))
+        dl = self.env.first_visible_download(plane, t, bits)
         if dl is None:
             return
         src_slot, t_recv = dl
         events = broadcast_schedule(
-            K, [src_slot], [t_recv], self.payload_bits, sim.isl
+            K, [src_slot], [t_recv], bits, sim.isl
         )
         t_done = [
-            events[s].t_receive + task.train_time_s(clients[s])
+            events[s].t_receive + self.train_time_s(clients[s])
             for s in range(K)
         ]
-        t_hop = isl_hop_time(sim.isl, self.payload_bits)
+        t_hop = isl_hop_time(sim.isl, bits)
         t_ready0 = max(t_done)
         sink = self.env.naive_sink_slot(plane, t_ready0)
         if sink is None:
@@ -566,7 +569,7 @@ class AsyncFLEO(FLStrategy, _StarMixin, _AsyncQueueMixin):
         # scheduled ahead like FedLEO); the booked RB makes later plane
         # schedules compete for residual station capacity
         t_ul = self._admit_upload(
-            plane, Satellite(plane, sink), t_ready, self.payload_bits,
+            plane, Satellite(plane, sink), t_ready, bits,
             t_recv,
         )
         if t_ul is None:

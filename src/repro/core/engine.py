@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, FrozenSet, List, Optional, Tuple
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -25,6 +25,8 @@ import numpy as np
 from repro.comms.environment import CommsEnvironment
 from repro.comms.isl import ISLConfig
 from repro.comms.link import LinkConfig
+from repro.compute.fleet import FleetComputeModel
+from repro.compute.profiles import SatelliteComputeProfile
 from repro.core.fltask import FederatedTask
 from repro.obs import (
     NULL_RECORDER,
@@ -125,6 +127,14 @@ class SimConfig:
     # a traced run is bit-identical to an untraced one (schedules,
     # sink decisions, metrics) — equivalence-tested.  Off by default.
     trace: bool = False
+    # Heterogeneous fleet compute model (repro.compute): assigns each
+    # plane/satellite a device tier + model arch whose roofline step
+    # time replaces eq. (11)'s uniform c_k/f_k, and (opt-in) whose real
+    # param count replaces the task's uniform payload.  None (default)
+    # keeps the paper's uniform fleet — bit-identical schedules, sink
+    # decisions and metrics (equivalence-tested); so does a profile
+    # whose every assignment is the degenerate ``arch=None`` tier.
+    compute: Optional[SatelliteComputeProfile] = None
     seed: int = 0
 
     @property
@@ -212,6 +222,17 @@ class FLStrategy:
         # JobScheduler through ``run_round`` directly
         self.history: List[HistoryPoint] = []
         self._completed = True
+        # heterogeneous fleet compute model: resolved strategy-side
+        # from SimConfig.compute (falling back to any model already on
+        # the task) WITHOUT mutating the shared task, so one task can
+        # serve arms with different fleets.  None = uniform paper fleet.
+        if sim.compute is not None:
+            num_planes = getattr(sim.constellation, "num_planes", 0)
+            self.compute: Optional[FleetComputeModel] = FleetComputeModel(
+                sim.compute, num_planes
+            )
+        else:
+            self.compute = task.compute
         # multi-tenant release floor: with a SHARED ledger, dropping
         # bookings up to this strategy's own clock could purge
         # intervals a slower concurrent job still prices against — the
@@ -238,6 +259,44 @@ class FLStrategy:
     @property
     def payload_bits(self) -> float:
         return float(self.task.payload_bits)
+
+    def train_time_s(self, client_id: int) -> float:
+        """Eq. (11) training time of one client, heterogeneous-fleet
+        aware: with a compute model resolved, the client satellite's
+        roofline per-sample cost prices the batches the task actually
+        executes; otherwise (or for degenerate-tier satellites) this is
+        exactly ``task.train_time_s``."""
+        if self.compute is not None:
+            c = self.task.clients[client_id]
+            hp = self.task.hp
+            n_batches, bsz = self.task.executed_batches(client_id)
+            t = self.compute.train_time_s(
+                c.plane, c.slot, local_epochs=hp.local_epochs,
+                n_batches=n_batches, batch_size=bsz,
+            )
+            if t is not None:
+                return t
+        return self.task.train_time_s(client_id)
+
+    def sat_payload_bits(self, plane: int, slot: int = 0) -> float:
+        """Comm payload z|N| of satellite (plane, slot): the task's
+        uniform payload unless the compute profile opts into
+        arch-derived sizes (``payload_from_arch``)."""
+        if self.compute is not None and self.compute.payload_aware:
+            bits = self.compute.payload_bits(plane, slot)
+            if bits is not None:
+                return float(bits)
+        return float(self.task.payload_bits)
+
+    def group_payload_bits(self, planes: Sequence[int]) -> float:
+        """Conservative payload for a multi-plane group transfer: the
+        max over member planes' slot-0 payloads (intra-plane
+        propagation ships one aggregated model per plane, so the widest
+        member bounds every hop).  Equals ``payload_bits`` for
+        payload-unaware fleets."""
+        if self.compute is None or not self.compute.payload_aware:
+            return self.payload_bits
+        return max(self.sat_payload_bits(p) for p in planes)
 
     def plane_clients(self, plane: int) -> List[int]:
         return self.task.clients_on_plane(plane)

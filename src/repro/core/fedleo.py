@@ -490,9 +490,10 @@ class FedLEO(_SyncRoundMixin, FLStrategy):
             (plane,) = group
             return plan_plane_round(
                 env=self.env, isl=sim.isl,
-                plane=plane, t=t, payload_bits=self.payload_bits,
+                plane=plane, t=t,
+                payload_bits=self.group_payload_bits(group),
                 train_times=np.array(
-                    [task.train_time_s(c) for c in clients]
+                    [self.train_time_s(c) for c in clients]
                 ),
                 sink_policy=self.sink_policy,
                 require_next_download=self.require_next_download,
@@ -558,6 +559,10 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
         super().__init__(task, sim, env)
         self.require_next_download = require_next_download
         self.topology = get_isl_topology(sim.constellation, sim.topology)
+        # routing latencies are prebuilt at the task's uniform payload:
+        # per-group pricing (group_payload_bits) covers the sink upload,
+        # while relay hop costs stay fleet-wide — rebuilding the table
+        # per payload would defeat the routing cache
         self.routing = get_routing_table(
             sim.constellation,
             sim.topology,
@@ -600,9 +605,9 @@ class FedLEOGrid(_SyncRoundMixin, FLStrategy):
             return plan_cluster_round(
                 env=self.env,
                 routing=self.routing, planes=group, t=t,
-                payload_bits=self.payload_bits,
+                payload_bits=self.group_payload_bits(group),
                 train_times=np.array(
-                    [task.train_time_s(c) for c in clients]
+                    [self.train_time_s(c) for c in clients]
                 ),
                 require_next_download=self.require_next_download,
             )

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compute.fleet import FleetComputeModel
 from repro.data.partition import ClientData, stack_client_arrays
 from repro.data.synthetic import Dataset
 from repro.models import nn
@@ -70,6 +71,7 @@ class FederatedTask:
         rng: Optional[jax.Array] = None,
         sim_epochs: Optional[int] = None,
         payload_bits_override: Optional[int] = None,
+        compute: Optional[FleetComputeModel] = None,
     ):
         """Args:
           sim_epochs: epochs actually executed on this host (defaults to
@@ -80,6 +82,12 @@ class FederatedTask:
             size z|N| instead of the proxy model's true size — used to
             simulate the paper's full-size CNN/U-Net (or a 100M+ LM)
             while training a reduced proxy on CPU.
+          compute: heterogeneous fleet compute model (repro.compute) —
+            ``train_time_s`` consults it per client before falling back
+            to the uniform eq. (11) c_k/f_k constant.  None (default)
+            keeps the paper's uniform fleet; ``FLStrategy`` also
+            resolves one from ``SimConfig.compute`` without mutating
+            the task, so one task can be shared across arms.
         """
         self.apply_fn = apply_fn
         self.clients = list(clients)
@@ -87,6 +95,7 @@ class FederatedTask:
         self.optimizer = optimizer
         self.hp = hp
         self.loss_fn = loss_fn
+        self.compute = compute
         self.sim_epochs = sim_epochs if sim_epochs is not None else hp.local_epochs
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.global_params = init_fn(rng)
@@ -118,12 +127,34 @@ class FederatedTask:
     def num_samples(self, client_id: int) -> int:      # m_k
         return int(self._counts[client_id])
 
+    def executed_batches(self, client_id: int) -> Tuple[int, int]:
+        """(n_batches, batch_size) as ``_local_train_one`` executes
+        them: tiny clients (m < b_k) fall back to full-batch steps, so
+        the simulated clock must charge the samples actually processed
+        — not b_k.  For m >= b_k this is exactly eq. (11)'s
+        (m // b_k, b_k)."""
+        m = self.num_samples(client_id)
+        bsz = min(self.hp.batch_size, max(1, m))
+        return max(1, m // bsz), bsz
+
     def train_time_s(self, client_id: int) -> float:
-        """Eq. (11): t_train(k) = I * n_k * b_k * c_k / f_k."""
+        """Eq. (11): t_train(k) = I * n_k * b_k * c_k / f_k, charged
+        for the batches actually executed.  With a fleet compute model
+        attached, c_k / f_k is replaced by the client satellite's
+        roofline per-sample cost (degenerate tiers fall through to the
+        uniform constant)."""
         hp = self.hp
-        n_batches = max(1, self.num_samples(client_id) // hp.batch_size)
+        n_batches, bsz = self.executed_batches(client_id)
+        if self.compute is not None:
+            c = self.clients[client_id]
+            t = self.compute.train_time_s(
+                c.plane, c.slot, local_epochs=hp.local_epochs,
+                n_batches=n_batches, batch_size=bsz,
+            )
+            if t is not None:
+                return t
         return (
-            hp.local_epochs * n_batches * hp.batch_size * hp.cycles_per_sample
+            hp.local_epochs * n_batches * bsz * hp.cycles_per_sample
         ) / hp.cpu_freq_hz
 
     # --- local training ---------------------------------------------------------

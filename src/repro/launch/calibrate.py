@@ -1,0 +1,69 @@
+"""Measured calibration for the fleet compute model.
+
+The one place the compute stack touches the wall clock: time a real
+jitted train step of an arch's SMOKE config on this host.  Lives in
+``launch/`` (not ``compute/``) because the repo lint bans wall-clock
+reads inside the simulation packages — ``compute.roofline`` calls in
+here lazily for its "measured" mode and caches the result.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import build_model, get_smoke_config
+from repro.optim import get_optimizer
+from repro.train.steps import TrainState, make_train_step
+
+
+def _smoke_batch(cfg, seq_len: int, global_batch: int) -> Dict:
+    """A synthetic batch matching ``train/steps`` layouts."""
+    tokens = jnp.zeros((global_batch, seq_len), dtype=jnp.int32)
+    batch: Dict = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["extra"] = jnp.zeros(
+            (global_batch, cfg.vision.num_patches, cfg.d_model),
+            dtype=jnp.bfloat16,
+        )
+    if cfg.family == "audio":
+        batch["source"] = jnp.zeros(
+            (global_batch, cfg.encoder.max_source_len, cfg.d_model),
+            dtype=jnp.bfloat16,
+        )
+    return batch
+
+
+def measure_smoke_step_s(
+    arch_id: str,
+    *,
+    seq_len: int = 128,
+    global_batch: int = 4,
+    iters: int = 3,
+) -> float:
+    """Wall seconds of one jitted smoke-config train step on this host.
+
+    Compiles once (excluded), then takes the minimum over ``iters``
+    fully-blocked executions — the minimum is the standard noise-robust
+    estimator for a deterministic step."""
+    cfg = get_smoke_config(arch_id)
+    model = build_model(cfg, dtype=jnp.float32)
+    opt = get_optimizer(cfg.optimizer, cfg.learning_rate)
+    step = jax.jit(make_train_step(model, opt))
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(
+        params=params, opt_state=opt.init(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+    batch = _smoke_batch(cfg, seq_len, global_batch)
+    state, metrics = step(state, batch)             # compile + warm up
+    jax.block_until_ready(metrics)
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        state, metrics = step(state, batch)
+        jax.block_until_ready(metrics)
+        best = min(best, time.perf_counter() - t0)
+    return best

@@ -202,6 +202,9 @@ class JobScheduler:
         carry the job label).
       admission_margin: admit only when projected demand fits within
         this fraction of the residual RB-seconds (1.0 = exact fit).
+      fairness: within-tier round ordering — "maxmin" (weighted max-min
+        over served RB-seconds, the default) or "edf" (earliest
+        absolute deadline first; deadline-less jobs last in the tier).
     """
 
     def __init__(
@@ -212,7 +215,12 @@ class JobScheduler:
         sanitize: bool = False,
         trace: bool = False,
         admission_margin: float = 1.0,
+        fairness: str = "maxmin",
     ) -> None:
+        if fairness not in ("maxmin", "edf"):
+            raise ValueError(
+                f"unknown fairness {fairness!r}; have ('maxmin', 'edf')"
+            )
         self.sim = sim
         self.base_env = (
             CommsEnvironment.from_sim(sim) if base_env is None else base_env
@@ -221,6 +229,7 @@ class JobScheduler:
         self.sanitize = bool(sanitize)
         self.trace = bool(trace)
         self.admission_margin = float(admission_margin)
+        self.fairness = fairness
         self._jobs: List[_Job] = []
         self._horizon_s = sim.horizon_hours * 3600.0
 
@@ -323,12 +332,19 @@ class JobScheduler:
         return r is None or job.record.rounds_done < r
 
     def _fairness_key(self, job: _Job) -> Tuple[int, float, float, int]:
-        return (
-            job.spec.tier,
-            job.record.served_rb_s / job.spec.weight,
-            job.t,
-            job.index,
-        )
+        """Within-tier round-ordering key (min wins).  "maxmin":
+        weighted max-min over served RB-seconds (the default).  "edf":
+        earliest absolute deadline first — deadline-less jobs sort last
+        within their tier (inf), falling back to the job clock.  Both
+        keep the strict tier precedence and the (job clock, submission
+        order) tie-break, so single-job runs are unaffected by the
+        choice."""
+        if self.fairness == "edf":
+            d = job.spec.deadline_s
+            urgency = float("inf") if d is None else float(d)
+        else:
+            urgency = job.record.served_rb_s / job.spec.weight
+        return (job.spec.tier, urgency, job.t, job.index)
 
     def _recheck_queued(self, queued: List[_Job], running: List[_Job],
                         t_now: float) -> None:

@@ -66,7 +66,23 @@ def make_fedleo_local_step(
     return jax.vmap(one_replica)
 
 
-def make_fedleo_aggregate() -> Callable:
+def staleness_weights(
+    weights: jnp.ndarray,
+    staleness_s: jnp.ndarray,
+    *,
+    power: float = 0.5,
+    time_scale_s: float = 3600.0,
+) -> jnp.ndarray:
+    """Discount replica weights by model staleness (async eq. 12 form):
+    w_r / (1 + staleness/scale)^power.  A replica that trained on the
+    freshest global model keeps its full sample weight; one acting on an
+    hour-old model is discounted by ~2^-power.  Zero staleness returns
+    ``weights`` unchanged."""
+    age = jnp.maximum(staleness_s, 0.0) / time_scale_s
+    return weights / (1.0 + age) ** power
+
+
+def make_fedleo_aggregate(use_kernel: bool = False) -> Callable:
     """Sink + GS aggregation: weighted mean over the orbit-replica axis.
 
     weights: (R,) = m_{K_l} / m (eq. 4 over orbit partials; each replica
@@ -74,21 +90,57 @@ def make_fedleo_aggregate() -> Callable:
     parallelism averaged over the in-pod data axis).
     Optimizer state is aggregated the same way (standard local-SGD /
     DiLoCo practice) so replicas restart from a common point.
+
+    ``use_kernel`` routes the reduction through the Pallas
+    ``aggregate_flat`` kernel (one fused (R, N) launch over the whole
+    pytree; interpret mode off-TPU) — parity-tested against this
+    reference path.  An optional ``staleness_s`` (R,) argument discounts
+    each replica's weight by its model age (``staleness_weights``)
+    before normalizing; None keeps plain eq. (4) weighting.
     """
 
-    def aggregate(state: TrainState, weights: jnp.ndarray) -> TrainState:
+    def aggregate(
+        state: TrainState,
+        weights: jnp.ndarray,
+        staleness_s: Optional[jnp.ndarray] = None,
+    ) -> TrainState:
+        if staleness_s is not None:
+            weights = staleness_weights(weights, staleness_s)
         w = weights / jnp.sum(weights)
         r = w.shape[0]
 
+        def is_replicated(x) -> bool:
+            return x.ndim != 0 and x.shape[0] == r
+
         def mean_leaf(x):
-            if x.ndim == 0 or x.shape[0] != r:
+            if not is_replicated(x):
                 return x
             wx = w.reshape((r,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
             m = jnp.sum(wx * x.astype(jnp.float32), axis=0)
             return jnp.broadcast_to(m, x.shape).astype(x.dtype)
 
-        agg_params = jax.tree_util.tree_map(mean_leaf, state.params)
-        agg_opt = jax.tree_util.tree_map(mean_leaf, state.opt_state)
+        def mean_tree_kernel(tree: PyTree) -> PyTree:
+            """One fused kernel launch over every replicated leaf; the
+            rest (step counters, scalars) pass through untouched."""
+            from repro.kernels.aggregate_ops import aggregate_pytree
+
+            leaves, treedef = jax.tree_util.tree_flatten(tree)
+            elig = [i for i, x in enumerate(leaves) if is_replicated(x)]
+            if elig:
+                agg = aggregate_pytree([leaves[i] for i in elig], w)
+                for i, m in zip(elig, agg):
+                    x = leaves[i]
+                    leaves[i] = jnp.broadcast_to(
+                        m, x.shape
+                    ).astype(x.dtype)
+            return jax.tree_util.tree_unflatten(treedef, leaves)
+
+        if use_kernel:
+            agg_params = mean_tree_kernel(state.params)
+            agg_opt = mean_tree_kernel(state.opt_state)
+        else:
+            agg_params = jax.tree_util.tree_map(mean_leaf, state.params)
+            agg_opt = jax.tree_util.tree_map(mean_leaf, state.opt_state)
         return TrainState(params=agg_params, opt_state=agg_opt,
                           step=state.step)
 

@@ -279,3 +279,66 @@ def test_main_fails_on_mega_violation(tmp_path, monkeypatch, capsys):
     with pytest.raises(SystemExit):
         check_floors.main()
     assert "FLOOR VIOLATION" in capsys.readouterr().err
+
+
+# --- hetero-fleet floors --------------------------------------------------------
+def _hetero(**over):
+    """A hetero_fleet record that satisfies every floor."""
+    base = {
+        "bench": "hetero_fleet",
+        "constellation": "starlink-40x22",
+        "fast_round_s": 19000.0,
+        "hetero_round_s": 21000.0,
+        "slow_round_s": 21500.0,
+        "uniform_equal": True,
+        "aggregate_parity_max_err": 0.0,
+    }
+    base.update(over)
+    return base
+
+
+def test_load_latest_hetero(tmp_path):
+    path = str(tmp_path / "BENCH.json")
+    _write_lines(path, [
+        json.dumps(_hetero(hetero_round_s=999.0)),    # superseded
+        json.dumps(_rec()),                           # other bench: ignored
+        json.dumps(_hetero()),
+    ])
+    rec = check_floors.load_latest_hetero(path)
+    assert rec["hetero_round_s"] == 21000.0
+    assert check_floors.load_latest_hetero("/nonexistent/BENCH.json") is None
+
+
+def test_floor_hetero_ordering_and_parity():
+    from benchmarks.check_floors import HETERO_PARITY_TOL, check_hetero
+
+    assert check_hetero(None) == []                   # smoke optional
+    assert check_hetero(_hetero()) == []
+    fails = check_hetero(_hetero(fast_round_s=22000.0))
+    assert any("all-fast" in f for f in fails)
+    fails = check_hetero(_hetero(slow_round_s=20000.0))
+    assert any("all-slow" in f for f in fails)
+    fails = check_hetero(_hetero(uniform_equal=False))
+    assert any("bit-identical" in f for f in fails)
+    fails = check_hetero(_hetero(
+        aggregate_parity_max_err=HETERO_PARITY_TOL * 10
+    ))
+    assert any("parity" in f for f in fails)
+    # equal fast/hetero/slow rounds pass (degenerate uniform fleets)
+    assert check_hetero(_hetero(
+        fast_round_s=21000.0, slow_round_s=21000.0
+    )) == []
+    assert any("did not complete" in f
+               for f in check_hetero(_hetero(hetero_round_s=None)))
+
+
+def test_main_fails_on_hetero_violation(tmp_path, monkeypatch, capsys):
+    path = str(tmp_path / "BENCH.json")
+    _write_lines(path, [
+        json.dumps(_rec()),
+        json.dumps(_hetero(uniform_equal=False)),
+    ])
+    monkeypatch.setattr(check_floors, "BENCH_TRAJECTORY", path)
+    with pytest.raises(SystemExit):
+        check_floors.main()
+    assert "FLOOR VIOLATION" in capsys.readouterr().err

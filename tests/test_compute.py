@@ -1,0 +1,272 @@
+"""repro.compute: device tiers, roofline estimation, fleet model, the
+eq. (11) executed-work fix, and the strategy-side wiring (ISSUE 10).
+
+The load-bearing invariant: ``SimConfig.compute=None`` and the
+all-default uniform profile are bit-identical end-to-end — schedules,
+sink decisions and metrics (the degenerate-case discipline every
+SimConfig extension in this repo follows).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compute import (
+    DEVICE_TIERS,
+    DeviceProfile,
+    FleetComputeModel,
+    SatAssignment,
+    SatelliteComputeProfile,
+    arch_payload_bits,
+    seconds_per_sample,
+    step_time_s,
+)
+from repro.compute.roofline import analytic_step_cost
+from repro.core import FedLEO, FederatedTask, SimConfig, TrainHyperparams
+from repro.data import make_classification_dataset, partition_noniid_by_orbit
+from repro.models.cnn import apply_cnn, init_cnn
+from repro.optim import get_optimizer
+
+SLOW, FAST = "gemma-7b", "mamba2-780m"
+
+
+# --- profiles ---------------------------------------------------------------------
+class TestProfiles:
+    def test_device_tier_validation(self):
+        with pytest.raises(ValueError):
+            DeviceProfile("bad", peak_flops=0.0, hbm_bytes_per_s=1e9)
+        with pytest.raises(ValueError):
+            DeviceProfile("bad", peak_flops=1e12, hbm_bytes_per_s=1e9,
+                          mfu_fraction=1.5)
+
+    def test_assignment_validation(self):
+        with pytest.raises(ValueError):
+            SatAssignment(arch="no-such-arch")
+        with pytest.raises(ValueError):
+            SatAssignment(arch=FAST, device="no-such-device")
+        SatAssignment()                         # degenerate: always valid
+
+    def test_profile_validation(self):
+        with pytest.raises(ValueError):
+            SatelliteComputeProfile(shape="no-such-shape")
+        with pytest.raises(ValueError):
+            SatelliteComputeProfile(mode="no-such-mode")
+        # compiled/measured require the smoke configs (full-size does
+        # not compile on this host)
+        with pytest.raises(ValueError):
+            SatelliteComputeProfile(mode="compiled", smoke=False)
+
+    def test_assignment_resolution_order(self):
+        override = SatAssignment(arch=SLOW, device="cubesat-cpu")
+        prof = SatelliteComputeProfile(
+            planes=(SatAssignment(arch=FAST),),
+            sat_overrides=((0, 3, override),),
+        )
+        assert prof.assignment(0, 3) == override       # sat override
+        assert prof.assignment(0, 0).arch == FAST      # plane entry
+        assert prof.assignment(7, 0).arch is None      # default
+
+    def test_per_plane_constructor(self):
+        prof = SatelliteComputeProfile.per_plane([SLOW, None, FAST])
+        assert prof.assignment(0).arch == SLOW
+        assert prof.assignment(1).arch is None
+        assert prof.assignment(2).arch == FAST
+
+
+# --- roofline ---------------------------------------------------------------------
+class TestRoofline:
+    def test_analytic_cost_positive_and_cached(self):
+        c = analytic_step_cost(FAST, "train_4k", True)
+        assert c.flops > 0 and c.hbm_bytes > 0 and c.tokens > 0
+        # lru cache: identical key returns the identical object
+        assert analytic_step_cost(FAST, "train_4k", True) is c
+
+    def test_bigger_arch_costs_more(self):
+        dev = DEVICE_TIERS["orbital-gpu"]
+        slow = seconds_per_sample(SLOW, "train_4k", dev, smoke=False)
+        fast = seconds_per_sample(FAST, "train_4k", dev, smoke=False)
+        assert slow > fast > 0
+
+    def test_faster_device_is_faster(self):
+        t_cube = step_time_s(FAST, "train_4k", DEVICE_TIERS["cubesat-cpu"],
+                             smoke=False)
+        t_tpu = step_time_s(FAST, "train_4k",
+                            DEVICE_TIERS["orbital-tpu-v5e"], smoke=False)
+        assert t_cube > t_tpu > 0
+
+    def test_roofline_is_max_of_both_axes(self):
+        c = analytic_step_cost(FAST, "train_4k", True)
+        dev = DEVICE_TIERS["orbital-gpu"]
+        t = step_time_s(FAST, "train_4k", dev)
+        assert t == pytest.approx(max(
+            c.flops / (dev.peak_flops * dev.mfu_fraction),
+            c.hbm_bytes / dev.hbm_bytes_per_s,
+        ))
+
+    def test_payload_bits_from_param_count(self):
+        from repro.configs import get_smoke_config
+
+        bits = arch_payload_bits(FAST, bits_per_param=32)
+        assert bits == float(
+            get_smoke_config(FAST).param_count_estimate()
+        ) * 32
+        assert arch_payload_bits(FAST, bits_per_param=8) * 4 == bits
+
+
+# --- fleet model ------------------------------------------------------------------
+class TestFleetModel:
+    def test_degenerate_tier_answers_none(self):
+        fleet = FleetComputeModel(SatelliteComputeProfile.uniform(), 5)
+        for plane in range(5):
+            assert fleet.seconds_per_sample(plane) is None
+            assert fleet.payload_bits(plane) is None
+            assert fleet.train_time_s(
+                plane, local_epochs=1, n_batches=1, batch_size=1
+            ) is None
+
+    def test_train_time_composes_eq11(self):
+        fleet = FleetComputeModel(
+            SatelliteComputeProfile.per_plane([FAST]), 1
+        )
+        sps = fleet.seconds_per_sample(0)
+        assert fleet.train_time_s(
+            0, local_epochs=3, n_batches=2, batch_size=16
+        ) == pytest.approx(3 * 2 * 16 * sps)
+
+    def test_payload_gated_on_opt_in(self):
+        archs = [FAST]
+        off = FleetComputeModel(
+            SatelliteComputeProfile.per_plane(archs), 1
+        )
+        on = FleetComputeModel(
+            SatelliteComputeProfile.per_plane(
+                archs, payload_from_arch=True
+            ), 1,
+        )
+        assert off.payload_bits(0) is None
+        assert on.payload_bits(0) == arch_payload_bits(FAST)
+
+    def test_plane_summary(self):
+        fleet = FleetComputeModel(
+            SatelliteComputeProfile.per_plane([SLOW, None]), 2
+        )
+        rows = fleet.plane_summary()
+        assert [r["arch"] for r in rows] == [SLOW, None]
+        assert rows[0]["seconds_per_sample"] > 0
+        assert rows[1]["seconds_per_sample"] is None
+
+
+# --- task + strategy wiring -------------------------------------------------------
+def _small_task(num_samples=400, sim_epochs=2, compute=None):
+    ds = make_classification_dataset("mnist-like", num_samples=num_samples,
+                                     seed=0)
+    test = make_classification_dataset("mnist-like", num_samples=100,
+                                       seed=99)
+    clients = partition_noniid_by_orbit(ds, 5, 8)
+    hp = TrainHyperparams(local_epochs=100, learning_rate=0.05,
+                          batch_size=16)
+    return FederatedTask(
+        init_fn=lambda r: init_cnn(r, (28, 28, 1), 10, widths=(8,),
+                                   hidden=32),
+        apply_fn=apply_cnn,
+        clients=clients,
+        test_set=test,
+        optimizer=get_optimizer("sgd", 0.05),
+        hp=hp,
+        sim_epochs=sim_epochs,
+        compute=compute,
+    )
+
+
+class TestExecutedWorkFix:
+    """Satellite (a): eq. (11) must charge the samples actually
+    processed — ``_local_train_one`` runs full-batch steps for tiny
+    clients (m < b_k), so the clock charges m, not b_k."""
+
+    def test_tiny_client_charges_executed_samples(self):
+        task = _small_task(num_samples=400)       # ~10 samples/client
+        hp = task.hp
+        cid = 0
+        m = task.num_samples(cid)
+        assert m < hp.batch_size                  # the tiny-client case
+        n_batches, bsz = task.executed_batches(cid)
+        assert (n_batches, bsz) == (1, m)
+        expected = (hp.local_epochs * 1 * m * hp.cycles_per_sample
+                    ) / hp.cpu_freq_hz
+        assert task.train_time_s(cid) == pytest.approx(expected)
+
+    def test_large_client_unchanged(self):
+        task = _small_task(num_samples=3200)      # ~80 samples/client
+        hp = task.hp
+        cid = 0
+        m = task.num_samples(cid)
+        assert m >= hp.batch_size
+        n_batches, bsz = task.executed_batches(cid)
+        assert bsz == hp.batch_size
+        assert n_batches == m // hp.batch_size    # the pre-fix formula
+        expected = (hp.local_epochs * n_batches * hp.batch_size
+                    * hp.cycles_per_sample) / hp.cpu_freq_hz
+        assert task.train_time_s(cid) == pytest.approx(expected)
+
+
+class TestStrategyWiring:
+    def test_strategy_resolves_compute_without_mutating_task(self):
+        task = _small_task()
+        sim = SimConfig(compute=SatelliteComputeProfile.per_plane(
+            [SLOW, FAST, None, FAST, SLOW]
+        ))
+        strat = FedLEO(task, sim)
+        assert strat.compute is not None
+        assert task.compute is None               # task untouched
+
+    def test_hetero_train_times_ordered(self):
+        task = _small_task()
+        sim = SimConfig(compute=SatelliteComputeProfile.per_plane(
+            [SLOW, FAST, None, FAST, SLOW], smoke=False,
+        ))
+        strat = FedLEO(task, sim)
+        slow_c = task.clients_on_plane(0)[0]
+        fast_c = task.clients_on_plane(1)[0]
+        deg_c = task.clients_on_plane(2)[0]
+        assert strat.train_time_s(slow_c) > strat.train_time_s(fast_c)
+        # degenerate plane: exactly the paper's uniform formula
+        assert strat.train_time_s(deg_c) == task.train_time_s(deg_c)
+
+    def test_sat_and_group_payload_bits(self):
+        task = _small_task()
+        sim = SimConfig(compute=SatelliteComputeProfile.per_plane(
+            [SLOW, FAST, None], payload_from_arch=True,
+        ))
+        strat = FedLEO(task, sim)
+        assert strat.sat_payload_bits(0) == arch_payload_bits(SLOW)
+        assert strat.sat_payload_bits(2) == float(task.payload_bits)
+        # group payload: max over member planes
+        assert strat.group_payload_bits((0, 1)) == arch_payload_bits(SLOW)
+        assert strat.group_payload_bits((2,)) == float(task.payload_bits)
+        # payload-unaware profile: always the task's uniform payload
+        plain = FedLEO(_small_task(), SimConfig(
+            compute=SatelliteComputeProfile.per_plane([SLOW])
+        ))
+        assert plain.group_payload_bits((0,)) == plain.payload_bits
+
+    def test_uniform_profile_bit_identical_end_to_end(self):
+        """THE degenerate-case gate: compute=None vs the all-default
+        profile — identical round times, metrics and decompositions."""
+        r0 = FedLEO(_small_task(), SimConfig()).run(max_rounds=1)
+        ru = FedLEO(_small_task(), SimConfig(
+            compute=SatelliteComputeProfile.uniform()
+        )).run(max_rounds=1)
+        assert len(r0.history) == len(ru.history) == 1
+        a, b = r0.history[0], ru.history[0]
+        assert a.t_hours == b.t_hours
+        assert a.metrics == b.metrics
+        assert a.events == b.events
+
+    def test_hetero_profile_changes_round_time(self):
+        r0 = FedLEO(_small_task(), SimConfig()).run(max_rounds=1)
+        rh = FedLEO(_small_task(), SimConfig(
+            compute=SatelliteComputeProfile.per_plane(
+                [SLOW, FAST, None, FAST, SLOW], smoke=False,
+            )
+        )).run(max_rounds=1)
+        assert rh.history[0].t_hours > r0.history[0].t_hours

@@ -207,6 +207,70 @@ class TestJobScheduler:
         assert recs[0].served_rb_s == pytest.approx(200.0)
         assert recs[1].served_rb_s == pytest.approx(600.0)
 
+    def test_edf_orders_by_deadline_within_tier(self):
+        # under EDF the tighter-deadline job runs ALL its rounds first,
+        # regardless of served RB-seconds; deadline-less jobs go last
+        log = []
+        sched = JobScheduler(_sim(), base_env=_bare_env(capacity=10),
+                             fairness="edf")
+        sched.submit(
+            JobSpec(name="loose", rounds=2, deadline_s=9000.0),
+            lambda env: FakeRunner(env, "loose", [10.0] * 2,
+                                   rb_s_per_round=(0, 1.0), log=log),
+        )
+        sched.submit(
+            JobSpec(name="none", rounds=2),
+            lambda env: FakeRunner(env, "none", [10.0] * 2,
+                                   rb_s_per_round=(0, 1.0), log=log),
+        )
+        sched.submit(
+            JobSpec(name="tight", rounds=2, deadline_s=3000.0),
+            lambda env: FakeRunner(env, "tight", [10.0] * 2,
+                                   rb_s_per_round=(0, 1.0), log=log),
+        )
+        sched.run()
+        assert log == ["tight", "tight", "loose", "loose",
+                       "none", "none"]
+
+    def test_edf_respects_tiers(self):
+        # strict tier precedence survives the EDF key: a tier-1 job
+        # with the earliest deadline still waits for tier 0
+        log = []
+        sched = JobScheduler(_sim(), base_env=_bare_env(),
+                             fairness="edf")
+        sched.submit(
+            JobSpec(name="bg", rounds=2, tier=1, deadline_s=100.0),
+            lambda env: FakeRunner(env, "bg", [10.0] * 2, log=log),
+        )
+        sched.submit(
+            JobSpec(name="fg", rounds=2, tier=0, deadline_s=9000.0),
+            lambda env: FakeRunner(env, "fg", [10.0] * 2, log=log),
+        )
+        sched.run()
+        assert log == ["fg", "fg", "bg", "bg"]
+
+    def test_unknown_fairness_rejected(self):
+        with pytest.raises(ValueError):
+            JobScheduler(_sim(), base_env=_bare_env(), fairness="fifo")
+
+    def test_single_job_identical_under_both_fairness_keys(self):
+        # with one job the within-tier key is irrelevant: identical
+        # round trace either way
+        results = {}
+        for fairness in ("maxmin", "edf"):
+            sched = JobScheduler(_sim(), base_env=_bare_env(capacity=10),
+                                 fairness=fairness)
+            sched.submit(
+                JobSpec(name="a", rounds=3, deadline_s=5000.0),
+                lambda env: FakeRunner(env, "a", [10.0] * 3,
+                                       rb_s_per_round=(0, 2.0)),
+            )
+            recs = sched.run()
+            results[fairness] = (recs[0].rounds_done,
+                                 tuple(recs[0].round_completions_s),
+                                 recs[0].served_rb_s)
+        assert results["maxmin"] == results["edf"]
+
     def test_rid_namespaces_disjoint_across_jobs(self):
         rids = {"a": [], "b": []}
         sched = JobScheduler(_sim(), base_env=_bare_env(capacity=10))
